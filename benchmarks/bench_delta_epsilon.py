@@ -1,0 +1,54 @@
+"""Paper Figure 8: accuracy and efficiency vs delta and epsilon —
+reproduces C2 (epsilon buys orders of magnitude, accuracy plateaus) and
+C3 (the delta stop with histogram r_delta is largely ineffective)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import search as S
+from repro.core.indexes import dstree, isax
+from repro.core.metrics import workload_metrics
+
+from .common import csv_line, dataset, emit, timeit
+
+
+def run(scale: str = "default", out_dir=None) -> List[dict]:
+    data, q, bf, p = dataset(scale)
+    qj = jnp.asarray(q)
+    k = p["k"]
+    rows: List[dict] = []
+    built = {
+        "dstree": dstree.build(data, leaf_cap=256),
+        "isax2+": isax.build(data, leaf_cap=256),
+    }
+    # (a-c) epsilon sweep at delta=1
+    for name, idx in built.items():
+        for eps in (0.0, 0.5, 1.0, 2.0, 3.0, 5.0, 10.0):
+            fn = lambda idx=idx, e=eps: S.search(idx, qj, k, epsilon=e)
+            res = fn()
+            sec = timeit(fn, repeats=3)
+            m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+            rows.append({"bench": "delta_epsilon", "method": name,
+                         "sweep": "epsilon", "value": eps,
+                         "throughput_qps": len(q) / sec, **m})
+            print(csv_line(f"fig8/{name}/eps{eps}",
+                           sec / len(q) * 1e6,
+                           f"map={m['map']:.3f};mre={m['mre']:.4f}"))
+    # (d-e) delta sweep at epsilon=0
+    for name, idx in built.items():
+        for delta in (0.5, 0.8, 0.9, 0.99, 1.0):
+            fn = lambda idx=idx, d=delta: S.search(idx, qj, k, delta=d)
+            res = fn()
+            sec = timeit(fn, repeats=3)
+            m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+            rows.append({"bench": "delta_epsilon", "method": name,
+                         "sweep": "delta", "value": delta,
+                         "throughput_qps": len(q) / sec, **m})
+            print(csv_line(f"fig8/{name}/delta{delta}",
+                           sec / len(q) * 1e6,
+                           f"map={m['map']:.3f}"))
+    emit(rows, out_dir, "bench_delta_epsilon")
+    return rows

@@ -1,0 +1,37 @@
+"""Paper Figure 7: cost vs k — finding the first neighbor dominates;
+additional neighbors are cheap."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import search as S
+from repro.core.indexes import dstree, isax
+
+from .common import csv_line, dataset, emit, timeit
+
+
+def run(scale: str = "default", out_dir=None) -> List[dict]:
+    data, q, bf, p = dataset(scale)
+    qj = jnp.asarray(q)
+    rows: List[dict] = []
+    built = {
+        "dstree": dstree.build(data, leaf_cap=256),
+        "isax2+": isax.build(data, leaf_cap=256),
+    }
+    for name, idx in built.items():
+        for k in (1, 10, 25, 50, 100):
+            fn = lambda idx=idx, kk=k: S.search(idx, qj, kk, epsilon=1.0)
+            res = fn()
+            sec = timeit(fn, repeats=3)
+            rows.append({
+                "bench": "effect_k", "method": name, "k": k,
+                "seconds_per_workload": sec,
+                "leaves": float(res.leaves_visited.mean()),
+            })
+            print(csv_line(f"effk/{name}/k{k}", sec / len(q) * 1e6,
+                           f"leaves={float(res.leaves_visited.mean()):.0f}"))
+    emit(rows, out_dir, "bench_effect_k")
+    return rows

@@ -1,0 +1,57 @@
+"""Paper Figure 2: indexing scalability (build time) + footprint."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core.indexes import dstree, graph, imi, isax, srs, vafile
+from repro.data import randomwalk
+
+from .common import csv_line, emit
+
+
+def _footprint_bytes(idx) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(idx):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+    return total
+
+
+BUILDERS = {
+    "isax2+": lambda d: isax.build(d, leaf_cap=256),
+    "dstree": lambda d: dstree.build(d, leaf_cap=256),
+    "va+file": lambda d: vafile.build(d),
+    "imi": lambda d: imi.build(d, kc=16, m=16, kmeans_iters=10),
+    "srs": lambda d: srs.build(d, m=16),
+    "hnsw": lambda d: graph.build(d, m_links=8),
+}
+
+
+def run(scale: str = "default", out_dir=None) -> List[dict]:
+    sizes = {"small": (1024, 2048), "default": (2048, 4096, 8192),
+             "large": (8192, 16384, 32768)}[scale]
+    rows = []
+    for n in sizes:
+        data = randomwalk.generate(11, n, 128)
+        raw_bytes = data.nbytes
+        for name, build in BUILDERS.items():
+            t0 = time.perf_counter()
+            idx = build(data)
+            dt = time.perf_counter() - t0
+            fp = _footprint_bytes(idx)
+            rows.append({
+                "bench": "indexing", "method": name, "n": n,
+                "build_seconds": dt,
+                "footprint_bytes": fp,
+                "footprint_over_raw": fp / raw_bytes,
+            })
+            print(csv_line(
+                f"indexing/{name}/n{n}", dt * 1e6,
+                f"footprint_ratio={fp / raw_bytes:.2f}"))
+    emit(rows, out_dir, "bench_indexing")
+    return rows

@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: µs/call for each hot-spot op.
+
+On this CPU container the timed path is the jnp oracle (the production
+XLA:CPU path); Pallas timings are meaningful only on TPU — interpret
+mode is correctness-only. Both facts are recorded in the CSV note."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import csv_line, emit, timeit
+
+
+def run(scale: str = "default", out_dir=None) -> List[dict]:
+    rng = np.random.default_rng(0)
+    sizes = {"small": (64, 2048), "default": (128, 8192),
+             "large": (256, 32768)}[scale]
+    b, m = sizes
+    n = 256
+    q = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    lo = jnp.asarray(rng.normal(size=(m, 32)) - 1, jnp.float32)
+    hi = lo + 0.5
+    qs = jnp.asarray(rng.normal(size=(b, 32)), jnp.float32)
+    w = jnp.ones((32,), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 256, (m, 16)), jnp.int32)
+    lut = jnp.asarray(rng.uniform(size=(16, 256)), jnp.float32)
+
+    cases = {
+        "paa": lambda: ops.paa(x, 16),
+        "box_mindist": lambda: ops.box_mindist(qs, lo, hi, w),
+        "l2": lambda: ops.l2(q, x),
+        "l2_topk": lambda: ops.l2_topk(q, x, 10),
+        "pq_adc": lambda: ops.pq_adc(codes, lut),
+    }
+    rows: List[dict] = []
+    for name, fn in cases.items():
+        jitted = jax.jit(fn)
+        sec = timeit(jitted, repeats=5)
+        rows.append({"bench": "kernels", "kernel": name,
+                     "us_per_call": sec * 1e6,
+                     "note": "XLA:CPU oracle path; Pallas validated in "
+                             "interpret mode (tests/test_kernels.py)"})
+        print(csv_line(f"kernel/{name}", sec * 1e6,
+                       f"b={b};m={m};n={n}"))
+    emit(rows, out_dir, "bench_kernels")
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Figure 3: in-memory query efficiency vs accuracy frontiers,
+ng-approximate and delta-epsilon, all methods."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core import search as S
+from repro.core.indexes import dstree, graph, imi, isax, srs, vafile
+from repro.core.metrics import workload_metrics
+
+from .common import csv_line, dataset, emit, timeit
+
+
+def run(scale: str = "default", out_dir=None) -> List[dict]:
+    data, q, bf, p = dataset(scale)
+    qj = jnp.asarray(q)
+    k = p["k"]
+    rows: List[dict] = []
+
+    def record(method, mode, knob, fn):
+        res = fn()
+        sec = timeit(fn, repeats=3)
+        m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+        thr = len(q) / sec
+        rows.append({"bench": "query_memory", "method": method,
+                     "mode": mode, "knob": knob,
+                     "throughput_qps": thr, **m})
+        print(csv_line(f"qmem/{method}/{mode}/{knob}",
+                       sec / len(q) * 1e6,
+                       f"map={m['map']:.3f};qps={thr:.1f}"))
+
+    # --- data series indexes: ng (nprobe) and delta-epsilon (eps) ---
+    built = {
+        "isax2+": (isax.build(data, leaf_cap=256), 1),
+        "dstree": (dstree.build(data, leaf_cap=256), 1),
+        "va+file": (vafile.build(data), 64),
+    }
+    for name, (idx, vb) in built.items():
+        for nprobe in (1, 4, 16, 64):
+            record(name, "ng", f"nprobe{nprobe}",
+                   lambda idx=idx, np_=nprobe, vb=vb: S.search(
+                       idx, qj, k, nprobe=np_, visit_batch=vb))
+        for eps in (5.0, 2.0, 1.0, 0.5, 0.0):
+            record(name, "deltaeps", f"eps{eps}",
+                   lambda idx=idx, e=eps, vb=vb: S.search(
+                       idx, qj, k, delta=0.99, epsilon=e,
+                       visit_batch=vb))
+
+    # --- multidimensional competitors ---
+    gi = graph.build(data, m_links=8)
+    for efs in (8, 32, 128):
+        record("hnsw", "ng", f"efs{efs}",
+               lambda e=efs: graph.query(gi, qj, k, efs=e))
+    ii = imi.build(data, kc=16, m=16, kmeans_iters=10)
+    for nprobe in (1, 8, 32):
+        record("imi", "ng", f"nprobe{nprobe}",
+               lambda n=nprobe: imi.query(ii, qj, k, nprobe=n))
+    si = srs.build(data, m=16)
+    for delta in (0.5, 0.9, 0.99):
+        record("srs", "deltaeps", f"delta{delta}",
+               lambda d=delta: srs.query(si, qj, k, delta=d,
+                                         epsilon=0.0))
+    emit(rows, out_dir, "bench_query_memory")
+    return rows

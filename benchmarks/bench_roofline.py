@@ -1,0 +1,48 @@
+"""Roofline table assembly (§Roofline): reads the dry-run artifacts
+written by repro.launch.dryrun and prints/aggregates the three terms."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from .common import csv_line, emit
+
+
+def run(scale: str = "default", out_dir=None,
+        dryrun_dir: str = "experiments/dryrun") -> List[dict]:
+    rows: List[dict] = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*", "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        mesh = os.path.basename(os.path.dirname(path))
+        if rep.get("status") != "ok":
+            rows.append({"bench": "roofline", "mesh": mesh,
+                         "cell": os.path.basename(path)[:-5],
+                         "status": rep.get("status"),
+                         "reason": rep.get("reason",
+                                           rep.get("error", ""))[:200]})
+            continue
+        t = rep["terms_seconds"]
+        dominant = rep["bottleneck"]
+        rows.append({
+            "bench": "roofline", "mesh": mesh,
+            "cell": f"{rep['arch']}__{rep['shape']}",
+            "status": "ok",
+            "compute_s": t["compute"], "memory_s": t["memory"],
+            "collective_s": t["collective"], "bottleneck": dominant,
+            "useful_flops_ratio": rep["useful_flops_ratio"],
+            "hbm_frac": rep.get("memory_analysis", {}).get("hbm_frac"),
+        })
+        print(csv_line(
+            f"roofline/{mesh}/{rep['arch']}/{rep['shape']}",
+            t[dominant] * 1e6,
+            f"bottleneck={dominant};useful="
+            f"{rep['useful_flops_ratio']:.2f}"))
+    if not rows:
+        print(csv_line("roofline/none", 0.0,
+                       "run repro.launch.dryrun first"))
+    emit(rows, out_dir, "bench_roofline")
+    return rows

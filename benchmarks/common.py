@@ -1,0 +1,67 @@
+"""Shared benchmark harness: datasets, timing, CSV emission.
+
+Scales are deliberately reduced vs the paper's 25-250 GB (this container
+is a single CPU core); the *relative* comparisons and all
+implementation-independent counters (the paper's own §4.1 measures:
+%data accessed, random I/O = leaf gathers) are scale-meaningful. Every
+module exposes run(scale) -> list[row dicts]; benchmarks.run prints the
+consolidated `name,us_per_call,derived` CSV required by the harness.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as S
+from repro.data import queries as queries_mod
+from repro.data import randomwalk
+
+SCALES = {
+    "small": dict(n=4096, series_len=128, n_queries=16, k=10),
+    "default": dict(n=16384, series_len=256, n_queries=32, k=10),
+    "large": dict(n=65536, series_len=256, n_queries=64, k=10),
+}
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(scale: str):
+    p = SCALES[scale]
+    data = randomwalk.generate(11, p["n"], p["series_len"])
+    q = queries_mod.noisy_queries(data, p["n_queries"])
+    bf = S.brute_force(jnp.asarray(q), jnp.asarray(data), p["k"])
+    jax.block_until_ready(bf.dists)
+    return data, q, bf, p
+
+
+def timeit(fn: Callable[[], Any], repeats: int = 3,
+           warmup: int = 1) -> float:
+    """Median seconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows: List[Dict[str, Any]], out_dir: Optional[str],
+         name: str) -> None:
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=2, default=str)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,60 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale small|default|large]
+                                            [--only fig3,fig8,...]
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and
+writes JSON rows under experiments/bench/."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = {
+    "fig2_indexing": "benchmarks.bench_indexing",
+    "fig3_query_memory": "benchmarks.bench_query_memory",
+    "fig4_query_disk": "benchmarks.bench_query_disk",
+    "fig5_accuracy_measures": "benchmarks.bench_accuracy_measures",
+    "fig6_best_methods": "benchmarks.bench_best_methods",
+    "fig7_effect_k": "benchmarks.bench_effect_k",
+    "fig8_delta_epsilon": "benchmarks.bench_delta_epsilon",
+    "kernels": "benchmarks.bench_kernels",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "default", "large"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite keys (substring match)")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    import importlib
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for key, modname in SUITES.items():
+        if args.only and not any(tok in key
+                                 for tok in args.only.split(",")):
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(modname)
+            mod.run(args.scale, out_dir=args.out)
+            print(f"# {key} done in {time.perf_counter() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {key} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

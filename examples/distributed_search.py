@@ -1,0 +1,49 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+"""Distributed search engine demo on an 8-device (4x2) mesh.
+
+The collection is range-sharded over the 'data' axis; each shard runs
+the batched Algorithm 2 locally under shard_map and per-shard top-k
+rows merge with an all-gather — exact answers match brute force, and
+guarantees transfer (DESIGN.md §5.3).
+
+    python examples/distributed_search.py        # sets XLA_FLAGS itself
+"""
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import search as S  # noqa: E402
+from repro.core.engine import DistributedEngine  # noqa: E402
+from repro.core.guarantees import Guarantee  # noqa: E402
+from repro.core.metrics import workload_metrics  # noqa: E402
+from repro.data import queries, randomwalk  # noqa: E402
+
+print("devices:", len(jax.devices()))
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+N, LEN, K = 16384, 128, 10
+data = randomwalk.generate(5, N, LEN)
+q = jnp.asarray(queries.noisy_queries(data, 8))
+truth = S.brute_force(q, jnp.asarray(data), K)
+
+eng = DistributedEngine(mesh, axes=("data",), method="dstree")
+print(f"building dstree over {eng.n_shards} shards ...")
+eng.build(data, leaf_cap=128)
+
+for name, g in [("exact", Guarantee()),
+                ("eps=1", Guarantee(epsilon=1.0)),
+                ("ng(4)", Guarantee(nprobe=4))]:
+    res = eng.query(q, K, g)
+    m = workload_metrics(res.ids, res.dists, truth.ids, truth.dists)
+    print(f"{name:8s} MAP={m['map']:.3f} recall={m['avg_recall']:.3f} "
+          f"mre={m['mre']:.4f} "
+          f"leaves(sum-shards)={int(res.leaves_visited[0])}")
+
+res = eng.query(q, K, Guarantee())
+m = workload_metrics(res.ids, res.dists, truth.ids, truth.dists)
+assert m["map"] == 1.0, m
+print("ok — sharded exact search matches the single-node brute force")

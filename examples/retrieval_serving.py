@@ -1,0 +1,98 @@
+"""End-to-end serving driver: batched LM decoding + the paper's search
+engine as a first-class retrieval feature.
+
+Pipeline: a (reduced) gemma2-family model embeds data series by mean
+final hidden state -> the embedding collection is indexed with DSTree
+-> requests arrive with deadlines -> the scheduler buckets them, the
+model decodes, and each request's retrieval runs under the guarantee
+its deadline affords (epsilon-guaranteed when relaxed, ng(nprobe) when
+tight — the paper's taxonomy as graceful degradation).
+
+    PYTHONPATH=src python examples/retrieval_serving.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import search as S
+from repro.core.indexes import dstree
+from repro.core.metrics import workload_metrics
+from repro.data import randomwalk
+from repro.models import model as M
+from repro.models.params import initialize
+from repro.serve.batching import (Request, Scheduler,
+                                  guarantee_for_deadline)
+from repro.serve.serve_step import generate
+
+KEY = jax.random.PRNGKey(0)
+
+# --- 1. a small LM and a series collection it embeds ---
+cfg = get_smoke_config("gemma2-2b")
+params = initialize(M.model_specs(cfg), KEY)
+N, LEN = 4096, 128
+series = randomwalk.generate(7, N, LEN)
+
+
+def embed(series_batch: np.ndarray) -> np.ndarray:
+    """Mean final hidden state over tokenized (discretized) series."""
+    toks = jnp.clip(
+        ((jnp.asarray(series_batch) + 3) / 6 * (cfg.vocab_size - 1)),
+        0, cfg.vocab_size - 1).astype(jnp.int32)
+    from repro.models.model import _backbone
+
+    x, _, _ = _backbone(params, toks, cfg)
+    return np.asarray(x.mean(axis=1), np.float32)
+
+
+print("embedding collection ...")
+emb = np.concatenate([embed(series[i:i + 512])
+                      for i in range(0, N, 512)])
+emb = (emb - emb.mean(0)) / (emb.std(0) + 1e-9)
+
+print("building DSTree over embeddings ...")
+idx = dstree.build(emb, n_segments=8, leaf_cap=128)
+
+# --- 2. batched decode serving with deadline-aware retrieval ---
+sched = Scheduler(max_batch=4)
+rng = np.random.default_rng(0)
+deadlines = [None, 40.0, 5.0, None, 2.0, 20.0, None, 1.0]
+for uid, dl in enumerate(deadlines):
+    prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(5, 12))
+    sched.submit(Request(uid=uid, prompt=prompt.astype(np.int32),
+                         max_new_tokens=8, deadline_ms=dl))
+
+qi = rng.choice(N, len(deadlines), replace=False)
+queries = jnp.asarray(emb[qi] + 0.05 * rng.normal(size=emb[qi].shape)
+                      .astype(np.float32))
+truth = S.brute_force(queries, jnp.asarray(emb), 5)
+
+print(f"\n{'uid':>3s} {'deadline':>9s} {'guarantee':>14s} "
+      f"{'recall@5':>9s} {'gen tokens':>24s}")
+done = 0
+while True:
+    nb = sched.next_batch()
+    if nb is None:
+        break
+    bucket, reqs = nb
+    prompts = jnp.asarray(sched.pad_prompts(bucket, reqs))
+    toks, _ = generate(params, cfg, prompts,
+                       max(r.max_new_tokens for r in reqs))
+    for i, r in enumerate(reqs):
+        g = guarantee_for_deadline(r.deadline_ms)
+        res = S.search_with_guarantee(idx, queries[r.uid:r.uid + 1], 5, g)
+        m = workload_metrics(res.ids, res.dists,
+                             truth.ids[r.uid:r.uid + 1],
+                             truth.dists[r.uid:r.uid + 1])
+        tok_str = ",".join(str(int(t))
+                           for t in toks[i, :6])
+        dl = "-" if r.deadline_ms is None else f"{r.deadline_ms:.0f}ms"
+        print(f"{r.uid:3d} {dl:>9s} {g.kind:>14s} "
+              f"{m['avg_recall']:9.2f} {tok_str:>24s}")
+        done += 1
+print(f"\nserved {done} requests — tight deadlines degraded to "
+      f"ng(nprobe) retrieval instead of dropping (paper Fig. 8: the "
+      f"first bsf is already near-exact).")

@@ -1,0 +1,62 @@
+"""End-to-end training driver: a Minitron-family LM trained for a few
+hundred steps with full production plumbing (sharded-capable train
+step, AdamW, checkpoint/restart, fault injection, stateless data).
+
+Default is a CPU-sized model (~11M params, 300 steps in minutes);
+``--full`` selects a ~100M-parameter config (same code path — run it on
+real accelerators).
+
+    PYTHONPATH=src python examples/train_embedder.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_smoke_config
+from repro.launch.train import fit
+from repro.train.fault import FaultInjector
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config (accelerator recommended)")
+    ap.add_argument("--inject-fault", action="store_true",
+                    help="kill the step function mid-run to demo "
+                         "checkpoint/restart")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir (default: fresh tmp dir; pass "
+                         "a path to demonstrate resume)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("minitron-8b")
+    if args.full:
+        cfg = dataclasses.replace(
+            cfg, num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32768)
+    print(f"training {cfg.name} variant: {cfg.param_count():,} params")
+
+    injector = FaultInjector(fail_at=[args.steps // 2]) \
+        if args.inject_fault else None
+    ckpt_dir = args.ckpt
+    if ckpt_dir is None:
+        import tempfile
+
+        ckpt_dir = tempfile.mkdtemp(prefix="hydra_embedder_")
+    out = fit(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+              ckpt_dir=ckpt_dir, ckpt_every=max(10, args.steps // 6),
+              injector=injector)
+    losses = out["losses"]
+    print(f"step   0: loss {losses[0]:.4f}")
+    print(f"step {len(losses) - 1:3d}: loss {losses[-1]:.4f}")
+    print(f"restarts: {out['restarts']}  stragglers: "
+          f"{out['stragglers']}")
+    assert losses[-1] < losses[0], "loss should decrease"
+    print("ok — loss decreased; checkpoints in", ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Hydra-JAX core: the paper's similarity-search contribution.
+
+Public API:
+    guarantees   — the taxonomy (exact / ng / epsilon / delta-epsilon)
+    index        — FrozenIndex artifact
+    search       — batched Algorithm 1/2 (+ brute_force yardstick)
+    indexes      — isax / dstree / vafile / imi / graph / srs builders
+    histogram    — F(.) estimation and r_delta
+    metrics      — Avg_Recall / MAP / MRE
+    engine       — DistributedSearchEngine (shard_map over the mesh)
+"""
+
+from . import guarantees, histogram, index, metrics, search
+from .guarantees import EXACT, Guarantee, delta_epsilon, epsilon, exact, ng
+from .index import FrozenIndex
+from .search import SearchResult, brute_force, search_with_guarantee
+
+__all__ = [
+    "guarantees", "histogram", "index", "metrics", "search",
+    "EXACT", "Guarantee", "delta_epsilon", "epsilon", "exact", "ng",
+    "FrozenIndex", "SearchResult", "brute_force", "search_with_guarantee",
+]

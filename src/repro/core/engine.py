@@ -1,0 +1,206 @@
+"""DistributedSearchEngine — the paper's methods at pod scale.
+
+The collection is range-sharded over the mesh's data-parallel axes; each
+shard owns a FrozenIndex over its rows (ids stay global) plus the GLOBAL
+distance histogram and global N, so per-shard r_delta matches the
+single-node semantics. A query batch is replicated to all shards, each
+runs the batched Algorithm 2 locally (shard_map), and per-shard top-k
+rows are merged with an all-gather + static sort.
+
+Guarantee preservation under sharding (DESIGN.md §5.3): every global true
+r-th NN lives in some shard where it ranks <= r locally; the local
+guarantee bounds that shard's reported r-th by (1+eps) x local true r-th
+<= (1+eps) x global true r-th, and the merged r-th best across shards
+only improves — so exact/epsilon/delta-epsilon transfer. For delta<1 the
+per-shard stopping radius uses the global N, making each shard's early
+stop conservative w.r.t. the global distribution.
+
+Fault tolerance: the frozen artifact checkpoints via train/checkpoint.py
+like any pytree; straggler mitigation degrades the guarantee to
+ng(nprobe) under a deadline — the taxonomy is the mitigation (paper
+Fig. 8 shows the first bsf is already near-exact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .guarantees import Guarantee
+from .histogram import DistanceHistogram, build_histogram
+from .index import FrozenIndex
+from .indexes import dstree, isax, vafile
+from .search import SearchResult, search
+
+_BUILDERS = {
+    "isax2+": isax.build,
+    "dstree": dstree.build,
+    "va+file": vafile.build,
+}
+
+
+def _pad_to(arr: np.ndarray, target: int, fill) -> np.ndarray:
+    if arr.shape[0] == target:
+        return arr
+    pad = np.full((target - arr.shape[0],) + arr.shape[1:], fill,
+                  arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+@dataclasses.dataclass
+class DistributedEngine:
+    mesh: Mesh
+    axes: Tuple[str, ...] = ("data",)
+    method: str = "dstree"
+    stacked: Optional[FrozenIndex] = None  # leading shard axis on arrays
+
+    @property
+    def n_shards(self) -> int:
+        shape = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = 1
+        for a in self.axes:
+            out *= shape[a]
+        return out
+
+    # ------------------------------------------------------------------
+    def build(self, data: np.ndarray, key=None, **params):
+        """Shard rows, build per-shard indexes (embarrassingly parallel
+        on hosts), stack and device_put with the shard axis mapped onto
+        the mesh axes."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n = data.shape[0]
+        s = self.n_shards
+        bounds = np.linspace(0, n, s + 1).astype(np.int64)
+        sample = data[np.random.default_rng(0).choice(
+            n, min(n, 100_000), replace=False)]
+        hist = build_histogram(sample, key)  # GLOBAL histogram
+        builder = _BUILDERS[self.method]
+
+        shards = []
+        for si in range(s):
+            lo, hi = bounds[si], bounds[si + 1]
+            idx = builder(data[lo:hi], hist=hist, key=key, **params)
+            # re-map ids to global, keep global n_total for r_delta
+            ids = np.asarray(idx.ids)
+            ids = np.where(ids >= 0, ids + lo, -1)
+            idx = dataclasses.replace(
+                idx, ids=jnp.asarray(ids, jnp.int32), n_total=n)
+            shards.append(idx)
+
+        # uniform static metadata + padded array shapes across shards
+        max_leafL = max(sh.num_leaves for sh in shards)
+        max_rows = max(sh.data.shape[0] for sh in shards)
+        max_leaf = max(sh.max_leaf for sh in shards)
+        arrs = {"box_lo": [], "box_hi": [], "offsets": [], "data": [],
+                "ids": []}
+        for sh in shards:
+            L = sh.num_leaves
+            off = np.asarray(sh.offsets)
+            # pad leaves with empty extents pointing at the end
+            offp = np.concatenate(
+                [off, np.full(max_leafL - L, off[-1], off.dtype)])
+            arrs["box_lo"].append(_pad_to(
+                np.asarray(sh.box_lo), max_leafL, np.float32(1e30)))
+            arrs["box_hi"].append(_pad_to(
+                np.asarray(sh.box_hi), max_leafL, np.float32(1e30)))
+            arrs["offsets"].append(offp)
+            arrs["data"].append(_pad_to(
+                np.asarray(sh.data), max_rows, np.float32(0)))
+            arrs["ids"].append(_pad_to(
+                np.asarray(sh.ids), max_rows, np.int64(-1)))
+
+        spec0 = P(self.axes if len(self.axes) > 1 else self.axes[0])
+
+        def put(x):
+            return jax.device_put(
+                x, NamedSharding(self.mesh, spec0))
+
+        base = shards[0]
+        self.stacked = FrozenIndex(
+            box_lo=put(jnp.asarray(np.stack(arrs["box_lo"]))),
+            box_hi=put(jnp.asarray(np.stack(arrs["box_hi"]))),
+            offsets=put(jnp.asarray(np.stack(arrs["offsets"]),
+                                    jnp.int32)),
+            data=put(jnp.asarray(np.stack(arrs["data"]))),
+            ids=put(jnp.asarray(np.stack(arrs["ids"]), jnp.int32)),
+            weights=jax.device_put(
+                base.weights, NamedSharding(self.mesh, P())),
+            hist=DistanceHistogram(
+                edges=jax.device_put(
+                    hist.edges, NamedSharding(self.mesh, P())),
+                cdf=jax.device_put(
+                    hist.cdf, NamedSharding(self.mesh, P())),
+            ),
+            kind=base.kind, summary=base.summary,
+            n_summary=base.n_summary, max_leaf=max_leaf,
+            n_total=n, series_len=base.series_len,
+        )
+        return self
+
+    # ------------------------------------------------------------------
+    def query(
+        self, queries, k: int, g: Guarantee = Guarantee(),
+        visit_batch: int = 1, sync_bsf: bool = False,
+    ) -> SearchResult:
+        """Batched distributed k-NN with the requested guarantee."""
+        assert self.stacked is not None, "build() first"
+        idx = self.stacked
+        b = queries.shape[0]
+        axes = self.axes
+        spec_shard = P(axes if len(axes) > 1 else axes[0])
+        in_specs = (
+            FrozenIndex(
+                box_lo=spec_shard, box_hi=spec_shard, offsets=spec_shard,
+                data=spec_shard, ids=spec_shard, weights=P(),
+                hist=DistanceHistogram(edges=P(), cdf=P()),
+                kind=idx.kind, summary=idx.summary,
+                n_summary=idx.n_summary, max_leaf=idx.max_leaf,
+                n_total=idx.n_total, series_len=idx.series_len,
+            ),
+            P(),  # queries replicated
+        )
+
+        delta, epsilon, nprobe = g.delta, g.epsilon, g.nprobe
+
+        def local(idx_local: FrozenIndex, q) -> SearchResult:
+            # strip the leading shard axis (size 1 per shard)
+            sq = jax.tree_util.tree_map(
+                lambda a: a[0], (idx_local.box_lo, idx_local.box_hi,
+                                 idx_local.offsets, idx_local.data,
+                                 idx_local.ids))
+            lidx = dataclasses.replace(
+                idx_local, box_lo=sq[0], box_hi=sq[1], offsets=sq[2],
+                data=sq[3], ids=sq[4])
+            res = search(lidx, q, k, delta=delta, epsilon=epsilon,
+                         nprobe=nprobe, visit_batch=visit_batch,
+                         sync_axes=tuple(axes) if sync_bsf else ())
+            # gather per-shard top-k along a new leading axis and merge
+            all_d = jax.lax.all_gather(res.dists, axes[-1], tiled=False)
+            all_i = jax.lax.all_gather(res.ids, axes[-1], tiled=False)
+            if len(axes) > 1:
+                for ax in axes[:-1]:
+                    all_d = jax.lax.all_gather(all_d, ax, tiled=False)
+                    all_i = jax.lax.all_gather(all_i, ax, tiled=False)
+                all_d = all_d.reshape(-1, b, k)
+                all_i = all_i.reshape(-1, b, k)
+            md = all_d.transpose(1, 0, 2).reshape(b, -1)
+            mi = all_i.transpose(1, 0, 2).reshape(b, -1)
+            sd, si = jax.lax.sort((md, mi), num_keys=1)
+            leaves = jax.lax.psum(res.leaves_visited, axes)
+            rows = jax.lax.psum(res.rows_scanned, axes)
+            lbs = jax.lax.psum(res.lb_computed, axes)
+            return SearchResult(sd[:, :k], si[:, :k], leaves, rows, lbs)
+
+        out_specs = SearchResult(P(), P(), P(), P(), P())
+        fn = jax.shard_map(
+            local, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=False,
+        )
+        return fn(idx, queries)

@@ -1,0 +1,66 @@
+"""Distance-distribution estimation and the r_delta stopping radius.
+
+Following Ciaccia & Patella [43, 45] as the paper does (§3.2.3): estimate
+the overall pairwise distance distribution F(.) from a sample (the paper
+uses density histograms on a 100K-series sample), then
+
+    r_delta = sup { r : P[no point within r of Q] >= delta }
+            = F^{-1}( 1 - delta^(1/N) )
+
+under the independence approximation P[B(Q, r) empty] = (1 - F(r))^N.
+The histogram is a pytree (edges + cdf) so it shards/replicates cleanly
+and ships inside the FrozenIndex.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DistanceHistogram(NamedTuple):
+    edges: jax.Array  # [n_bins+1] ascending distance values
+    cdf: jax.Array    # [n_bins+1] F(edges), cdf[0]=0, cdf[-1]=1
+
+
+def build_histogram(
+    data: np.ndarray, key, n_pairs: int = 100_000, n_bins: int = 512
+) -> DistanceHistogram:
+    """Empirical F from random pairs of the sample (paper: 100K sample)."""
+    n = data.shape[0]
+    rng = np.random.default_rng(
+        int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    i = rng.integers(0, n, n_pairs)
+    j = rng.integers(0, n, n_pairs)
+    keep = i != j
+    d = np.linalg.norm(data[i[keep]] - data[j[keep]], axis=1)
+    qs = np.linspace(0.0, 1.0, n_bins + 1)
+    edges = np.quantile(d, qs)
+    edges[0] = 0.0
+    return DistanceHistogram(
+        edges=jnp.asarray(edges, jnp.float32),
+        cdf=jnp.asarray(qs, jnp.float32),
+    )
+
+
+def f_of(hist: DistanceHistogram, r: jax.Array) -> jax.Array:
+    """F(r) by linear interpolation."""
+    return jnp.interp(r, hist.edges, hist.cdf, left=0.0, right=1.0)
+
+
+def f_inverse(hist: DistanceHistogram, p: jax.Array) -> jax.Array:
+    """F^{-1}(p) by inverse interpolation."""
+    return jnp.interp(p, hist.cdf, hist.edges)
+
+
+def r_delta(hist: DistanceHistogram, delta: float, n_total: int
+            ) -> jax.Array:
+    """The paper's delta radius (scalar, f32). delta=1 -> 0 (no early
+    stop, Algorithm 2 degenerates to epsilon-approximate)."""
+    delta = jnp.asarray(delta, jnp.float32)
+    p = 1.0 - jnp.power(jnp.maximum(delta, 1e-30), 1.0 / float(n_total))
+    r = f_inverse(hist, p)
+    return jnp.where(delta >= 1.0, 0.0, r)

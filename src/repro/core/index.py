@@ -1,0 +1,121 @@
+"""FrozenIndex: the searchable artifact shared by iSAX2+/DSTree/VA+file.
+
+Every data-series index in the paper reduces, once built, to the same
+searchable structure (DESIGN.md §5.1): per-leaf summary-space *boxes* with
+per-dim weights (the lower bound is a weighted box distance), leaf extents
+over a leaf-contiguous permutation of the raw data, and the distance
+histogram for r_delta. Trees differ only in how boxes/extents are chosen
+at build time; search (core/search.py) is index-invariant, exactly like
+the paper's Algorithm 1/2.
+
+The dataclass is registered as a pytree (arrays = children, layout
+metadata = aux) so it jits, shards (DistributedEngine stacks one per mesh
+shard), and checkpoints like any other model state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .histogram import DistanceHistogram
+from .summaries import dft as dft_mod
+from .summaries import eapca as eapca_mod
+from .summaries import paa as paa_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenIndex:
+    # --- array children ---
+    box_lo: jax.Array    # [L, D] summary-space box lower corners
+    box_hi: jax.Array    # [L, D]
+    weights: jax.Array   # [D] per-dim lb weights
+    offsets: jax.Array   # [L+1] int32 leaf extents into the data rows
+    data: jax.Array      # [Npad, n] raw series, leaf-contiguous
+    ids: jax.Array       # [Npad] int32 original ids (-1 = padding)
+    hist: DistanceHistogram
+    # --- static metadata ---
+    kind: str = dataclasses.field(metadata={"static": True})
+    summary: str = dataclasses.field(metadata={"static": True})
+    n_summary: int = dataclasses.field(metadata={"static": True})
+    max_leaf: int = dataclasses.field(metadata={"static": True})
+    n_total: int = dataclasses.field(metadata={"static": True})
+    series_len: int = dataclasses.field(metadata={"static": True})
+
+    @property
+    def num_leaves(self) -> int:
+        return self.box_lo.shape[0]
+
+    def summarize_queries(self, q: jax.Array) -> jax.Array:
+        """Apply this index's summarization to a query batch [B, n]."""
+        if self.summary == "paa":
+            return paa_mod.transform(q, self.n_summary)
+        if self.summary == "eapca":
+            return eapca_mod.transform(q, self.n_summary)
+        if self.summary == "dft":
+            return dft_mod.transform(q, self.n_summary)
+        raise ValueError(self.summary)
+
+
+jax.tree_util.register_dataclass(
+    FrozenIndex,
+    data_fields=["box_lo", "box_hi", "weights", "offsets", "data", "ids",
+                 "hist"],
+    meta_fields=["kind", "summary", "n_summary", "max_leaf", "n_total",
+                 "series_len"],
+)
+
+
+def freeze_from_leaves(
+    data: np.ndarray,            # [N, n] original order
+    leaf_members: list,          # list of int arrays (original row ids)
+    box_lo: np.ndarray,          # [L, D]
+    box_hi: np.ndarray,
+    weights: np.ndarray,         # [D]
+    hist: DistanceHistogram,
+    *,
+    kind: str,
+    summary: str,
+    n_summary: int,
+    pad_multiple: int = 8,
+    data_dtype=np.float32,
+) -> FrozenIndex:
+    """Assemble the device-side artifact from host-side build output.
+
+    ``data_dtype=bfloat16`` halves the raw-data HBM footprint and read
+    traffic of the refinement step (§Perf beyond-paper optimization);
+    distances still accumulate in f32 — the ranking perturbation is
+    measured in benchmarks/bench_best_methods.py."""
+    n, series_len = data.shape
+    sizes = np.array([len(m) for m in leaf_members], np.int64)
+    offsets = np.zeros(len(leaf_members) + 1, np.int64)
+    offsets[1:] = np.cumsum(sizes)
+    perm = np.concatenate(leaf_members) if leaf_members else \
+        np.zeros(0, np.int64)
+    assert perm.shape[0] == n, (perm.shape, n)
+    npad = int(np.ceil(max(n, 1) / pad_multiple) * pad_multiple)
+    pdata = np.zeros((npad, series_len), np.float32)
+    pdata[:n] = data[perm]
+    if jnp.dtype(data_dtype) != jnp.float32:
+        pdata = np.asarray(jnp.asarray(pdata, data_dtype))
+    pids = np.full(npad, -1, np.int64)
+    pids[:n] = perm
+    return FrozenIndex(
+        box_lo=jnp.asarray(box_lo, jnp.float32),
+        box_hi=jnp.asarray(box_hi, jnp.float32),
+        weights=jnp.asarray(weights, jnp.float32),
+        offsets=jnp.asarray(offsets, jnp.int32),
+        data=jnp.asarray(pdata, data_dtype),
+        ids=jnp.asarray(pids, jnp.int32),
+        hist=hist,
+        kind=kind,
+        summary=summary,
+        n_summary=n_summary,
+        max_leaf=int(sizes.max()) if len(sizes) else 1,
+        n_total=n,
+        series_len=series_len,
+    )

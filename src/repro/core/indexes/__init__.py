@@ -1,0 +1,3 @@
+from . import dstree, graph, imi, isax, qalsh, srs, vafile
+
+__all__ = ["dstree", "graph", "imi", "isax", "qalsh", "srs", "vafile"]

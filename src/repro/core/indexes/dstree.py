@@ -1,0 +1,78 @@
+"""DSTree (Wang et al. [152]) — EAPCA tree, host build / device search.
+
+Every node summarizes its population per segment by (mean, std) ranges;
+the lower bound is the weighted box distance over the 2l dims (validity
+proof in summaries/eapca.py). Splitting follows the DSTree's spirit with
+a simplification recorded in DESIGN.md §7: instead of dynamic vertical
+re-segmentation we keep a fixed l-segmentation and split on the
+(segment, statistic) pair with the largest weighted spread — the QoS
+heuristic's dominant term — at the population median (balanced children,
+which is also what the paper's bulk-loaded trees approximate). Leaf boxes
+are tight member min/max ranges, as in the original DSTree.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..histogram import DistanceHistogram, build_histogram
+from ..index import FrozenIndex, freeze_from_leaves
+from ..summaries import eapca as eapca_mod
+
+
+def build(
+    data: np.ndarray,
+    *,
+    n_segments: int = 8,
+    leaf_cap: int = 512,
+    hist: Optional[DistanceHistogram] = None,
+    key=None,
+    data_dtype=np.float32,
+) -> FrozenIndex:
+    n, series_len = data.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    summ = np.asarray(eapca_mod.transform(jnp.asarray(data), n_segments))
+    d2 = 2 * n_segments
+
+    leaves: List[np.ndarray] = []
+
+    stack = [np.arange(n)]
+    while stack:
+        members = stack.pop()
+        if len(members) <= leaf_cap:
+            leaves.append(members)
+            continue
+        s = summ[members]
+        spread = s.max(axis=0) - s.min(axis=0)
+        dim = int(np.argmax(spread))
+        med = np.median(s[:, dim])
+        left = s[:, dim] <= med
+        # degenerate split (all equal): fall back to halving
+        if left.all() or (~left).all():
+            half = len(members) // 2
+            stack.append(members[:half])
+            stack.append(members[half:])
+            continue
+        stack.append(members[left])
+        stack.append(members[~left])
+
+    L = len(leaves)
+    box_lo = np.zeros((L, d2), np.float32)
+    box_hi = np.zeros((L, d2), np.float32)
+    for li, mem in enumerate(leaves):
+        s = summ[mem]
+        box_lo[li] = s.min(axis=0)
+        box_hi[li] = s.max(axis=0)
+    if hist is None:
+        sample = data[np.random.default_rng(0).choice(
+            n, min(n, 100_000), replace=False)]
+        hist = build_histogram(sample, key)
+    w = np.asarray(eapca_mod.weights(series_len, n_segments))
+    return freeze_from_leaves(
+        data, leaves, box_lo, box_hi, w, hist,
+        data_dtype=data_dtype, kind="dstree", summary="eapca", n_summary=n_segments,
+    )

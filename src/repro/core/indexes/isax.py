@@ -1,0 +1,121 @@
+"""iSAX2+ index (Camerra et al. [33]) — build on host, search on device.
+
+Build computes SAX words at base cardinality 2^bits on device (PAA kernel
++ breakpoint digitization), then grows the iSAX tree on host: a node whose
+population exceeds leaf_cap deepens the cardinality of ONE segment by one
+bit (iSAX 2.0's binary split), choosing the segment whose split is most
+balanced — the bulk-loading-era splitting policy. Leaves freeze into
+summary-space boxes: segment i at prefix length p covers the PAA interval
+between breakpoints lo/hi of the prefix, exactly the MINDIST region; box
+distance * sqrt(n/l) == MINDIST of the original paper.
+
+`tighten=True` is a beyond-paper optimization (EXPERIMENTS.md §Perf):
+boxes shrink to the min/max PAA of actual members — still a valid lower
+bound (members' summaries lie inside), strictly tighter than the symbolic
+region, so pruning improves with zero query-time cost.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from ..histogram import DistanceHistogram, build_histogram
+from ..index import FrozenIndex, freeze_from_leaves
+from ..summaries import paa as paa_mod
+from ..summaries import sax as sax_mod
+
+
+def build(
+    data: np.ndarray,
+    *,
+    n_segments: int = 16,
+    bits: int = 8,
+    leaf_cap: int = 512,
+    tighten: bool = False,
+    hist: Optional[DistanceHistogram] = None,
+    key=None,
+    data_dtype=np.float32,
+) -> FrozenIndex:
+    n, series_len = data.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    paa_np = np.asarray(paa_mod.transform(jnp.asarray(data), n_segments))
+    breaks = sax_mod.breakpoints(1 << bits)
+    codes = np.searchsorted(breaks, paa_np).astype(np.int32)  # [N, l]
+
+    leaves: List[np.ndarray] = []
+    leaf_prefix: List[np.ndarray] = []
+    leaf_codes: List[np.ndarray] = []
+
+    def split(members: np.ndarray, prefix_bits: np.ndarray,
+              word: np.ndarray):
+        if len(members) <= leaf_cap or prefix_bits.min() >= bits:
+            leaves.append(members)
+            leaf_prefix.append(prefix_bits.copy())
+            leaf_codes.append(word.copy())
+            return
+        # candidate segments: those not yet at max cardinality
+        best_seg, best_imb = -1, None
+        mcodes = codes[members]
+        for seg in range(n_segments):
+            p = prefix_bits[seg]
+            if p >= bits:
+                continue
+            bit = (mcodes[:, seg] >> (bits - p - 1)) & 1
+            left = int((bit == 0).sum())
+            imb = abs(2 * left - len(members))
+            if best_imb is None or imb < best_imb:
+                best_seg, best_imb = seg, imb
+        seg = best_seg
+        p = prefix_bits[seg]
+        bit = (mcodes[:, seg] >> (bits - p - 1)) & 1
+        for side in (0, 1):
+            sub = members[bit == side]
+            if len(sub) == 0:
+                continue
+            nb = prefix_bits.copy()
+            nb[seg] = p + 1
+            nw = word.copy()
+            nw[seg] = (word[seg] << 1) | side
+            split(sub, nb, nw)
+
+    import sys
+
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, 10000))
+    try:
+        split(np.arange(n), np.zeros(n_segments, np.int64),
+              np.zeros(n_segments, np.int64))
+    finally:
+        sys.setrecursionlimit(old_limit)
+
+    L = len(leaves)
+    box_lo = np.zeros((L, n_segments), np.float32)
+    box_hi = np.zeros((L, n_segments), np.float32)
+    pb = sax_mod.padded_breakpoints(1 << bits)
+    for li in range(L):
+        pbits = leaf_prefix[li]
+        word = leaf_codes[li]
+        shift = bits - pbits
+        lo_sym = word << shift
+        hi_sym = lo_sym + (1 << shift)
+        box_lo[li] = pb[lo_sym]
+        box_hi[li] = pb[hi_sym]
+        if tighten:
+            mem = paa_np[leaves[li]]
+            box_lo[li] = np.maximum(box_lo[li], mem.min(axis=0))
+            box_hi[li] = np.minimum(box_hi[li], mem.max(axis=0))
+    if hist is None:
+        sample = data[np.random.default_rng(0).choice(
+            n, min(n, 100_000), replace=False)]
+        hist = build_histogram(sample, key)
+    w = np.full(n_segments, series_len / n_segments, np.float32)
+    return freeze_from_leaves(
+        data, leaves, box_lo, box_hi, w, hist,
+        data_dtype=data_dtype, kind="isax2+", summary="paa", n_summary=n_segments,
+    )

@@ -1,0 +1,111 @@
+"""SRS (Sun et al. [142]) — tiny-index LSH via m Gaussian projections.
+
+Points are examined in increasing *projected* distance (the paper's
+incremental R-tree NN walk becomes a device argsort — the TPU adaptation;
+same visit order, DESIGN.md §3). After each chunk of true-distance
+refinements the early-termination test fires: since
+proj_dist^2 / true_dist^2 ~ chi^2_m (2-stable projections),
+
+    psi_m( p_cur^2 * (1+eps)^2 / bsf^2 ) >= delta
+
+implies any point with true distance <= bsf/(1+eps) would already have
+been seen with probability >= delta, so bsf is a delta-epsilon answer
+(SRS early-termination condition, chi^2 CDF via gammainc). A max-scan
+budget T' bounds the worst case exactly as in SRS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from ..search import SearchResult
+from ..summaries import randproj
+
+
+@dataclasses.dataclass(frozen=True)
+class SRSIndex:
+    proj: jax.Array   # [n, m]
+    feats: jax.Array  # [N, m] projected points
+    data: jax.Array   # [N, n]
+    m: int = dataclasses.field(metadata={"static": True})
+    n_total: int = dataclasses.field(metadata={"static": True})
+
+
+jax.tree_util.register_dataclass(
+    SRSIndex, data_fields=["proj", "feats", "data"],
+    meta_fields=["m", "n_total"],
+)
+
+
+def build(data: np.ndarray, *, m: int = 16, key=None) -> SRSIndex:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    w = randproj.make_projection(key, data.shape[1], m)
+    xd = jnp.asarray(data, jnp.float32)
+    return SRSIndex(proj=w, feats=xd @ w, data=xd, m=m,
+                    n_total=data.shape[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "chunk", "max_scan"))
+def query(
+    idx: SRSIndex, queries: jax.Array, k: int, *,
+    delta: float = 0.95, epsilon: float = 0.0,
+    chunk: int = 256, max_scan: Optional[int] = None,
+) -> SearchResult:
+    b, n = queries.shape
+    nn = idx.n_total
+    max_scan = min(max_scan or nn, nn)
+    qf = queries.astype(jnp.float32)
+    qp = qf @ idx.proj
+    p_sq = ops.l2(qp, idx.feats)  # [B, N] projected squared dists
+    order = jnp.argsort(p_sq, axis=1)
+    p_sorted = jnp.take_along_axis(p_sq, order, axis=1)
+    eps_mult = jnp.float32((1.0 + epsilon) ** 2)
+    lanes = jnp.arange(b)
+
+    def cond(s):
+        return jnp.any(s[4])
+
+    def body(s):
+        ptr, top_d, top_i, scanned, active = s
+        pos = ptr[:, None] + jnp.arange(chunk)[None, :]
+        in_range = (pos < max_scan) & active[:, None]
+        pos_c = jnp.minimum(pos, nn - 1)
+        ids = jnp.take_along_axis(order, pos_c, axis=1)  # [B, C]
+        rows = idx.data[ids]  # [B, C, n]
+        diff = rows - qf[:, None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+        d = jnp.where(in_range, d, jnp.inf)
+        top_d, top_i = ops.topk_merge(
+            d, jnp.where(in_range, ids, -1), top_d, top_i)
+        scanned = scanned + in_range.sum(axis=1).astype(jnp.int32)
+        ptr_next = jnp.minimum(ptr + chunk, max_scan)
+        exhausted = ptr_next >= max_scan
+        bsf = top_d[:, k - 1]
+        p_cur = p_sorted[lanes, jnp.minimum(ptr_next, nn - 1)]
+        arg = p_cur * eps_mult / jnp.maximum(bsf, 1e-30)
+        early = randproj.psi(idx.m, arg) >= delta
+        active = active & ~(exhausted | early)
+        return ptr_next, top_d, top_i, scanned, active
+
+    init = (jnp.zeros((b,), jnp.int32),
+            jnp.full((b, k), jnp.inf),
+            jnp.full((b, k), -1, jnp.int32),
+            jnp.zeros((b,), jnp.int32),
+            jnp.ones((b,), bool))
+    _, top_d, top_i, scanned, _ = jax.lax.while_loop(cond, body, init)
+    return SearchResult(
+        dists=jnp.sqrt(jnp.maximum(top_d, 0.0)),
+        ids=top_i,
+        leaves_visited=scanned,
+        rows_scanned=scanned,
+        lb_computed=jnp.int32(nn),
+    )

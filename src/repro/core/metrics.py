@@ -1,0 +1,66 @@
+"""Accuracy measures from the paper §4.1: Avg_Recall, MAP, MRE.
+
+Definitions follow the paper exactly:
+  Recall(Q)  = |returned ∩ true_kNN| / k
+  AP(Q)      = (1/k) * sum_r P(Q, r) * rel(r), where P(Q, r) is precision
+               at rank r and rel(r)=1 iff the r-th returned item is one of
+               the k true neighbors.
+  RE(Q)      = (1/k) * sum_r (d(Q, C_r) - d(Q, C*_r)) / d(Q, C*_r), the
+               rank-paired relative error vs the exact r-th neighbor
+               distance (zero-distance queries are excluded, as in the
+               paper's footnote 5).
+Workload aggregates are plain means over queries.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _membership(returned_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
+    """rel [B, k]: 1 where returned id is one of the true k (id >= 0)."""
+    eq = returned_ids[:, :, None] == true_ids[:, None, :]
+    return (eq.any(axis=-1) & (returned_ids >= 0)).astype(jnp.float32)
+
+
+def recall(returned_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
+    """Per-query recall [B]."""
+    k = true_ids.shape[1]
+    return _membership(returned_ids, true_ids).sum(axis=1) / k
+
+
+def average_precision(returned_ids: jax.Array,
+                      true_ids: jax.Array) -> jax.Array:
+    """Per-query AP [B] (paper's definition)."""
+    k = true_ids.shape[1]
+    rel = _membership(returned_ids, true_ids)  # [B, k]
+    cum = jnp.cumsum(rel, axis=1)
+    ranks = jnp.arange(1, k + 1, dtype=jnp.float32)[None, :]
+    precision_at_r = cum / ranks
+    return (precision_at_r * rel).sum(axis=1) / k
+
+
+def relative_error(returned_d: jax.Array, true_d: jax.Array) -> jax.Array:
+    """Per-query MRE [B], rank-paired; guards zero exact distances and
+    unfilled (inf) answer slots — an ng answer with fewer than k
+    candidates contributes only its filled ranks, as in the paper's
+    incomplete-result-set discussion (§5)."""
+    denom = jnp.maximum(true_d, 1e-12)
+    re = (returned_d - true_d) / denom
+    valid = (true_d > 1e-12) & jnp.isfinite(returned_d)
+    k_eff = jnp.maximum(valid.sum(axis=1), 1)
+    return jnp.where(valid, re, 0.0).sum(axis=1) / k_eff
+
+
+def workload_metrics(
+    returned_ids: jax.Array, returned_d: jax.Array,
+    true_ids: jax.Array, true_d: jax.Array,
+) -> Dict[str, float]:
+    return {
+        "avg_recall": float(recall(returned_ids, true_ids).mean()),
+        "map": float(average_precision(returned_ids, true_ids).mean()),
+        "mre": float(relative_error(returned_d, true_d).mean()),
+    }

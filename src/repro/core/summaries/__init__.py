@@ -1,0 +1,3 @@
+from . import dft, eapca, paa, pq, randproj, sax
+
+__all__ = ["dft", "eapca", "paa", "pq", "randproj", "sax"]

@@ -1,0 +1,37 @@
+"""DFT summarization for the VA+file (Ferhatosmanoglu et al. [57]).
+
+The paper replaced the original KLT with DFT for efficiency; we follow.
+With the orthonormal rFFT of a real series (n even):
+
+  ||x||^2 = c_0^2 + sum_{1<=j<n/2} 2(re_j^2 + im_j^2) + c_{n/2}^2
+
+so the feature layout [c0, sqrt2*re_1, sqrt2*im_1, sqrt2*re_2, ...]
+is an isometry prefix: truncating to the first l features lower-bounds
+the true distance (Parseval). Property-tested.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def transform(x: jax.Array, n_coeffs: int) -> jax.Array:
+    """[N, n] -> [N, l] energy-preserving DFT features (f32)."""
+    n = x.shape[-1]
+    c = jnp.fft.rfft(x.astype(jnp.float32), axis=-1, norm="ortho")
+    parts = [c[..., 0].real[..., None]]
+    nyq = n // 2
+    re = c[..., 1:nyq].real * jnp.sqrt(2.0)
+    im = c[..., 1:nyq].imag * jnp.sqrt(2.0)
+    inter = jnp.stack([re, im], axis=-1).reshape(x.shape[:-1] + (-1,))
+    parts.append(inter)
+    if n % 2 == 0:
+        parts.append(c[..., nyq].real[..., None])
+    feats = jnp.concatenate(parts, axis=-1)
+    return feats[..., :n_coeffs]
+
+
+def weights(n_coeffs: int) -> jax.Array:
+    """DFT features are already isometric — unit weights."""
+    return jnp.ones((n_coeffs,), jnp.float32)

@@ -1,0 +1,34 @@
+"""Extended APCA summaries for the DSTree (Wang et al. [152]).
+
+Each segment of width w is summarized by (mean, std). The node lower
+bound used by the DSTree is the weighted box distance over the 2l dims
+[mean_1..mean_l, std_1..std_l] with weight w per dim, valid because
+
+  sum_j (q_j - s_j)^2  =  w (mu_q - mu_s)^2 + || q~ - s~ ||^2
+                       >= w (mu_q - mu_s)^2 + (||q~|| - ||s~||)^2
+                       =  w (mu_q - mu_s)^2 + w (sigma_q - sigma_s)^2
+
+(reverse triangle inequality on the centered segments; sigma is the
+population std). Property-tested in tests/test_summaries.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def transform(x: jax.Array, n_segments: int) -> jax.Array:
+    """[N, n] -> [N, 2l]: concat(segment means, segment stds), f32."""
+    n = x.shape[-1]
+    assert n % n_segments == 0
+    w = n // n_segments
+    seg = x.reshape(x.shape[:-1] + (n_segments, w)).astype(jnp.float32)
+    mean = seg.mean(axis=-1)
+    std = seg.std(axis=-1)  # population (ddof=0) — required for the bound
+    return jnp.concatenate([mean, std], axis=-1)
+
+
+def weights(series_len: int, n_segments: int) -> jax.Array:
+    w = series_len / n_segments
+    return jnp.full((2 * n_segments,), w, jnp.float32)

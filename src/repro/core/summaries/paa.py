@@ -1,0 +1,25 @@
+"""Piecewise Aggregate Approximation (Keogh et al. [82]).
+
+The lower-bounding contract (property-tested):
+    (n/l) * || paa(Q) - paa(S) ||^2  <=  || Q - S ||^2
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def transform(x: jax.Array, n_segments: int, **kw) -> jax.Array:
+    """[.., n] -> [.., l] segment means (f32)."""
+    if x.ndim == 1:
+        return ops.paa(x[None], n_segments, **kw)[0]
+    return ops.paa(x, n_segments, **kw)
+
+
+def weights(series_len: int, n_segments: int) -> jax.Array:
+    """Per-dim weight in the box lower bound: segment width n/l."""
+    w = series_len / n_segments
+    return jnp.full((n_segments,), w, jnp.float32)

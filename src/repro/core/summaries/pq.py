@@ -1,0 +1,117 @@
+"""Product quantization + OPQ (Jegou et al. [74], Ge et al. [62]).
+
+k-means, PQ training/encoding, ADC lookup tables, and OPQ's alternating
+rotation optimization (orthogonal Procrustes via SVD). All device-side
+JAX; IMI (core/indexes/imi.py) composes these into the inverted
+multi-index.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key, x: jax.Array, k: int, iters: int = 25) -> jax.Array:
+    """Lloyd's k-means. x [N, d] -> centroids [k, d] (f32).
+
+    Empty clusters are re-seeded on random points each iteration.
+    """
+    n = x.shape[0]
+    xf = x.astype(jnp.float32)
+    init = jax.random.choice(key, n, (k,), replace=False)
+    cent = xf[init]
+
+    def step(carry, key_i):
+        cent = carry
+        d = ops.l2(xf, cent)  # [N, k]
+        assign = jnp.argmin(d, axis=1)
+        one = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # [N, k]
+        counts = one.sum(axis=0)  # [k]
+        sums = one.T @ xf  # [k, d]
+        newc = sums / jnp.maximum(counts[:, None], 1.0)
+        # reseed empties
+        rnd = jax.random.choice(key_i, n, (k,))
+        newc = jnp.where(counts[:, None] > 0, newc, xf[rnd])
+        return newc, None
+
+    keys = jax.random.split(key, iters)
+    cent, _ = jax.lax.scan(step, cent, keys)
+    return cent
+
+
+class PQCodebook(NamedTuple):
+    centroids: jax.Array  # [m, K, d_sub]
+    rotation: jax.Array   # [d, d] (identity for plain PQ)
+
+
+def pq_train(
+    key, x: jax.Array, m: int, k: int = 256, iters: int = 20,
+    opq_iters: int = 0,
+) -> PQCodebook:
+    """Train PQ (opq_iters=0) or OPQ (alternating rotation/codebooks)."""
+    n, d = x.shape
+    assert d % m == 0
+    dsub = d // m
+    rot = jnp.eye(d, dtype=jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def train_codebooks(xr, key):
+        keys = jax.random.split(key, m)
+        cents = []
+        for j in range(m):
+            sub = xr[:, j * dsub:(j + 1) * dsub]
+            cents.append(kmeans(keys[j], sub, k, iters))
+        return jnp.stack(cents)  # [m, K, dsub]
+
+    cents = train_codebooks(xf @ rot, key)
+    for it in range(opq_iters):
+        codes = pq_encode(PQCodebook(cents, rot), x)
+        recon = pq_reconstruct(PQCodebook(cents, jnp.eye(d)), codes)
+        # Procrustes: R = argmin ||X R - recon||_F  =>  R = U V^T
+        u, _, vt = jnp.linalg.svd(xf.T @ recon, full_matrices=False)
+        rot = u @ vt
+        key, sub = jax.random.split(key)
+        cents = train_codebooks(xf @ rot, sub)
+    return PQCodebook(cents, rot)
+
+
+def pq_encode(cb: PQCodebook, x: jax.Array) -> jax.Array:
+    """[N, d] -> [N, m] int32 codes."""
+    xf = x.astype(jnp.float32) @ cb.rotation
+    m, k, dsub = cb.centroids.shape
+    codes = []
+    for j in range(m):
+        sub = xf[:, j * dsub:(j + 1) * dsub]
+        d = ops.l2(sub, cb.centroids[j])
+        codes.append(jnp.argmin(d, axis=1).astype(jnp.int32))
+    return jnp.stack(codes, axis=1)
+
+
+def pq_reconstruct(cb: PQCodebook, codes: jax.Array) -> jax.Array:
+    m = codes.shape[1]
+    parts = [jnp.take(cb.centroids[j], codes[:, j], axis=0)
+             for j in range(m)]
+    recon = jnp.concatenate(parts, axis=1)
+    return recon @ cb.rotation.T
+
+
+def adc_lut(cb: PQCodebook, q: jax.Array) -> jax.Array:
+    """Per-subspace squared-distance tables for one query: [m, K]."""
+    qf = q.astype(jnp.float32) @ cb.rotation
+    m, k, dsub = cb.centroids.shape
+    qs = qf.reshape(m, dsub)
+    diff = cb.centroids - qs[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def adc_scan(cb: PQCodebook, codes: jax.Array, q: jax.Array,
+             **kw) -> jax.Array:
+    """Asymmetric distances of all codes to one query: [N]."""
+    return ops.pq_adc(codes, adc_lut(cb, q), **kw)

@@ -1,0 +1,27 @@
+"""Gaussian random projections (SRS, Sun et al. [142]).
+
+2-stable projections: for w_i ~ N(0, I_n), <u, w_i> ~ N(0, ||u||^2), so
+||proj(u)||^2 / ||u||^2 ~ chi^2_m. SRS's early-termination test uses the
+chi^2 CDF psi_m, implemented with the regularized lower incomplete gamma
+(jax.scipy.special.gammainc) — no scipy dependency.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammainc
+
+
+def make_projection(key, series_len: int, m: int) -> jax.Array:
+    """[n, m] Gaussian matrix (unscaled, 2-stable)."""
+    return jax.random.normal(key, (series_len, m), jnp.float32)
+
+
+def transform(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32) @ w
+
+
+def psi(m: int, x: jax.Array) -> jax.Array:
+    """chi^2_m CDF."""
+    return gammainc(m / 2.0, jnp.maximum(x, 0.0) / 2.0)

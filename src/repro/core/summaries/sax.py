@@ -1,0 +1,56 @@
+"""SAX / iSAX symbolization (Lin et al. [94], Shieh & Keogh [137]).
+
+PAA values are quantized against N(0,1) breakpoints (data series are
+z-normalized, so standard-normal quantiles are the canonical choice; the
+breakpoints can also be fit from data). iSAX compares words of different
+cardinalities by bit-prefix: a node at prefix length p over segment i
+covers the PAA interval [breaks[sym<<(b-p)], breaks[(sym+1)<<(b-p)]] —
+those intervals are exactly the boxes handed to the unified box-mindist
+lower bound (kernels/box_mindist.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import ndtri
+
+from . import paa as paa_mod
+
+
+def breakpoints(cardinality: int) -> np.ndarray:
+    """Interior breakpoints of N(0,1): length cardinality-1, ascending."""
+    qs = np.arange(1, cardinality) / cardinality
+    return np.asarray(ndtri(jnp.asarray(qs)), np.float64)
+
+
+def padded_breakpoints(cardinality: int, span: float = 1e9) -> np.ndarray:
+    """[-inf, b_1..b_{a-1}, +inf] with finite sentinels (length a+1)."""
+    b = breakpoints(cardinality)
+    return np.concatenate([[-span], b, [span]])
+
+
+def encode(
+    x: jax.Array, n_segments: int, cardinality: int
+) -> jax.Array:
+    """SAX words at full cardinality. [N, n] -> [N, l] int32 symbols."""
+    p = paa_mod.transform(x, n_segments)
+    b = jnp.asarray(breakpoints(cardinality), jnp.float32)
+    return jnp.searchsorted(b, p.astype(jnp.float32)).astype(jnp.int32)
+
+
+def prefix_box(
+    symbols: np.ndarray,  # [l] full-cardinality symbols
+    prefix_bits: np.ndarray,  # [l] per-segment prefix length in bits
+    total_bits: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """PAA-space interval covered by an iSAX word prefix (per segment)."""
+    card = 1 << total_bits
+    pb = padded_breakpoints(card)
+    shift = total_bits - prefix_bits
+    lo_sym = (symbols >> shift) << shift
+    hi_sym = lo_sym + (1 << shift)
+    return pb[lo_sym], pb[hi_sym]

@@ -1,0 +1,3 @@
+from . import pipeline, queries, randomwalk, tokens
+
+__all__ = ["pipeline", "queries", "randomwalk", "tokens"]

@@ -1,0 +1,75 @@
+"""Host-side data pipeline: prefetch, shard, skip-ahead, stragglers.
+
+A thin production shell over the stateless generators: a background
+thread keeps `prefetch` batches ahead of the training loop (overlapping
+host generation with device compute), batches are device_put with the
+step's input sharding, and the cursor is just the step number — restart
+= seek. A slow generation (straggler) is detected against an EMA budget
+and logged; because batches are stateless the pipeline can also *drop*
+a late batch and synthesize the next one without global resync.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+
+
+class Prefetcher:
+    def __init__(
+        self,
+        make_batch: Callable[[int], Dict[str, jax.Array]],
+        start_step: int = 0,
+        prefetch: int = 2,
+        straggler_factor: float = 3.0,
+    ):
+        self.make_batch = make_batch
+        self.step = start_step
+        self.prefetch = prefetch
+        self.straggler_factor = straggler_factor
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._ema: Optional[float] = None
+        self.stragglers = 0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                batch = self.make_batch(step)
+            except Exception as e:  # pragma: no cover - defensive
+                self._q.put(e)
+                return
+            dt = time.perf_counter() - t0
+            if self._ema is None:
+                self._ema = dt
+            else:
+                if dt > self.straggler_factor * self._ema:
+                    self.stragglers += 1
+                self._ema = 0.9 * self._ema + 0.1 * dt
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

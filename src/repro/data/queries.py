@@ -1,0 +1,31 @@
+"""Query workload generation (paper §4.1 Queries).
+
+Following Zoumpatianos et al. [164] as the paper does: queries are data
+series drawn from the collection with progressively larger additive
+Gaussian noise, producing controlled difficulty levels. Synthetic
+workloads use the same random-walk generator with a different seed.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def noisy_queries(
+    data: np.ndarray,
+    n_queries: int,
+    noise_levels: Sequence[float] = (0.0, 0.01, 0.05, 0.1, 0.25),
+    seed: int = 7,
+) -> np.ndarray:
+    """[n_queries, n] — difficulty cycles through noise_levels."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(data.shape[0], n_queries, replace=False)
+    q = data[idx].copy()
+    scale = data.std()
+    for i in range(n_queries):
+        lvl = noise_levels[i % len(noise_levels)]
+        q[i] += rng.normal(0, lvl * scale, data.shape[1]).astype(
+            np.float32)
+    return q.astype(np.float32)

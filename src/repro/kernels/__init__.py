@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   paa.py         — PAA summarization (index build)
+#   box_mindist.py — unified summary lower bound (filter step)
+#   l2_dist.py     — fused raw-distance refinement ("calcRealDist")
+#   pq_adc.py      — IMI PQ asymmetric-distance scan
+# ops.py = jit'd wrappers with CPU fallback; ref.py = pure-jnp oracles.
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: weighted box lower-bound distance (filtering step).
+
+The unified summary-space lower bound of iSAX (MINDIST to a SAX region),
+DSTree (EAPCA [mean,std] region bound) and VA+file (cell bound): for query
+summary q and box [lo, hi] with per-dim weights w,
+
+    lb^2(q, box) = sum_d w_d * max(lo_d - q_d, q_d - hi_d, 0)^2 .
+
+Grid is (query tiles, box tiles); each step broadcasts a [TB, D] query
+tile against a [TL, D] box tile entirely in VMEM — for the paper's
+settings (D = 16..32 summary dims) the [TB, TL, D] intermediate fits
+comfortably (128*128*32*4B = 2 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _box_kernel(q_ref, lo_ref, hi_ref, w_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)     # [TB, D]
+    lo = lo_ref[...].astype(jnp.float32)   # [TL, D]
+    hi = hi_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)     # [1, D]
+    d = jnp.maximum(
+        jnp.maximum(lo[None, :, :] - q[:, None, :],
+                    q[:, None, :] - hi[None, :, :]),
+        0.0,
+    )
+    out_ref[...] = jnp.sum(d * d * w[None, :, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_l",
+                                             "interpret"))
+def box_mindist_pallas(
+    q: jax.Array,        # [B, D]
+    lo: jax.Array,       # [L, D]
+    hi: jax.Array,       # [L, D]
+    weights: jax.Array,  # [D]
+    *,
+    tile_b: int = 128,
+    tile_l: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, d = q.shape
+    l = lo.shape[0]
+    assert b % tile_b == 0 and l % tile_l == 0, (b, l, tile_b, tile_l)
+    w2 = weights.reshape(1, d)
+    grid = (b // tile_b, l // tile_l)
+    return pl.pallas_call(
+        _box_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_l, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_l, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_l), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        interpret=interpret,
+    )(q, lo, hi, w2)

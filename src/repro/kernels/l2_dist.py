@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused squared-Euclidean distance (refinement step).
+
+The query-time hot loop of every method in the paper ("calcRealDist"):
+candidate raw series stream through VMEM once; the kernel fuses the
+-2*q@x^T MXU matmul with both norm terms so no separate norm passes touch
+HBM. f32 accumulation regardless of input dtype; K is tiled so long
+series (n = 256 .. 16384, the paper's settings) never exceed VMEM.
+
+Grid: (B tiles, M tiles, K tiles); K is the innermost (sequential)
+dimension and accumulates into the output block, which Pallas keeps
+resident across K steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _l2_kernel(q_ref, x_ref, out_ref, *, n_k: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # [TB, TK]
+    x = x_ref[...].astype(jnp.float32)  # [TM, TK]
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [TB, TM]
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [TB, 1]
+    xn = jnp.sum(x * x, axis=-1)  # [TM]
+    out_ref[...] += qn - 2.0 * cross + xn[None, :]
+
+    @pl.when(kstep == n_k - 1)
+    def _clamp():
+        out_ref[...] = jnp.maximum(out_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_m", "tile_k",
+                                             "interpret"))
+def l2_pallas(
+    q: jax.Array,  # [B, n]
+    x: jax.Array,  # [M, n]
+    *,
+    tile_b: int = 128,
+    tile_m: int = 256,
+    tile_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n = q.shape
+    m = x.shape[0]
+    tile_k = min(tile_k, n)
+    assert b % tile_b == 0 and m % tile_m == 0 and n % tile_k == 0
+    n_k = n // tile_k
+    grid = (b // tile_b, m // tile_m, n_k)
+    return pl.pallas_call(
+        functools.partial(_l2_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_m), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=interpret,
+    )(q, x)

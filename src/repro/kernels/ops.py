@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op pads inputs to tile boundaries, dispatches to the Pallas kernel on
+TPU (or when forced via ``force_pallas=True``, which uses interpret mode on
+CPU) and to the jnp oracle otherwise, then strips padding. The search core
+calls these ops exclusively, so the TPU/CPU split lives in one place.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .box_mindist import box_mindist_pallas
+from .l2_dist import l2_pallas
+from .paa import paa_pallas
+from .pq_adc import pq_adc_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                   constant_values=value)
+
+
+def paa(x: jax.Array, n_segments: int, *, force_pallas: bool = False,
+        tile: int = 256) -> jax.Array:
+    """Segment means [N, n] -> [N, l] f32."""
+    if force_pallas or on_tpu():
+        n = x.shape[0]
+        xp = _pad_rows(x, tile)
+        out = paa_pallas(xp, n_segments, tile=tile,
+                         interpret=not on_tpu())
+        return out[:n]
+    return ref.ref_paa(x, n_segments)
+
+
+def box_mindist(
+    q: jax.Array, lo: jax.Array, hi: jax.Array, weights: jax.Array,
+    *, force_pallas: bool = False, tile_b: int = 128, tile_l: int = 512,
+) -> jax.Array:
+    """Squared weighted box distances [B, L]."""
+    if force_pallas or on_tpu():
+        b, l = q.shape[0], lo.shape[0]
+        qp = _pad_rows(q, tile_b)
+        lop = _pad_rows(lo, tile_l)
+        hip = _pad_rows(hi, tile_l)
+        out = box_mindist_pallas(
+            qp, lop, hip, weights, tile_b=tile_b, tile_l=tile_l,
+            interpret=not on_tpu(),
+        )
+        return out[:b, :l]
+    return ref.ref_box_mindist(q, lo, hi, weights)
+
+
+def l2(
+    q: jax.Array, x: jax.Array, *, force_pallas: bool = False,
+    tile_b: int = 128, tile_m: int = 256, tile_k: int = 512,
+) -> jax.Array:
+    """Squared Euclidean distances [B, M] f32."""
+    if force_pallas or on_tpu():
+        b, m = q.shape[0], x.shape[0]
+        n = q.shape[1]
+        tile_k = min(tile_k, n)
+        if n % tile_k:
+            padk = (-n) % tile_k
+            q = jnp.pad(q, ((0, 0), (0, padk)))
+            x = jnp.pad(x, ((0, 0), (0, padk)))
+        qp = _pad_rows(q, tile_b)
+        xp = _pad_rows(x, tile_m)
+        out = l2_pallas(qp, xp, tile_b=tile_b, tile_m=tile_m,
+                        tile_k=tile_k, interpret=not on_tpu())
+        return out[:b, :m]
+    return ref.ref_l2(q, x)
+
+
+def pq_adc(
+    codes: jax.Array, lut: jax.Array, *, force_pallas: bool = False,
+    tile_m: int = 512,
+) -> jax.Array:
+    """ADC scan distances [M]."""
+    if force_pallas or on_tpu():
+        m = codes.shape[0]
+        cp = _pad_rows(codes, tile_m)
+        out = pq_adc_pallas(cp, lut, tile_m=tile_m,
+                            interpret=not on_tpu())
+        return out[:m]
+    return ref.ref_pq_adc(codes, lut)
+
+
+def l2_topk(
+    q: jax.Array, x: jax.Array, k: int, **kw
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused distance + top-k: returns (dists [B,k] asc, ids [B,k])."""
+    d = l2(q, x, **kw)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+def topk_merge(dists, ids, top_d, top_i):
+    """Merge a candidate batch into running sorted top-k rows."""
+    return ref.ref_topk_merge(dists, ids, top_d, top_i)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: PAA summarization (segment means).
+
+The build-time hot loop of iSAX/DSTree indexing: every series in the
+collection is reduced to l segment means. One grid step processes a tile
+of TN series resident in VMEM; the reduction reshapes the lane dimension
+into (l, w) and means over w, which lowers to VPU reductions with the
+sublane-major layout intact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paa_kernel(x_ref, out_ref, *, n_segments: int):
+    x = x_ref[...].astype(jnp.float32)  # [TN, n]
+    tn, n = x.shape
+    w = n // n_segments
+    seg = x.reshape(tn, n_segments, w)
+    out_ref[...] = jnp.mean(seg, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "tile",
+                                             "interpret"))
+def paa_pallas(
+    x: jax.Array, n_segments: int, *, tile: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x [N, n] -> [N, l] f32 segment means. N must divide by `tile`
+    (ops.py pads)."""
+    n_rows, n = x.shape
+    assert n % n_segments == 0
+    assert n_rows % tile == 0, (n_rows, tile)
+    grid = (n_rows // tile,)
+    return pl.pallas_call(
+        functools.partial(_paa_kernel, n_segments=n_segments),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, n_segments), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n_segments), jnp.float32),
+        interpret=interpret,
+    )(x)

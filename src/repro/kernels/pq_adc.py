@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: PQ asymmetric-distance (ADC) scan — IMI's hot loop.
+
+For one query, per-subspace distance LUT lut [m, K] and PQ codes
+codes [M, m], the scan computes dist[i] = sum_j lut[j, codes[i, j]].
+
+TPU adaptation (DESIGN.md §5.6): random per-lane gathers are the natural
+CUDA formulation but map poorly onto the VPU; instead the code tile is
+expanded to a one-hot matrix and contracted against the flattened LUT on
+the MXU: onehot[TM, m*K] @ lut.flat[m*K] — a matmul-shaped scan that
+streams codes through VMEM once. K=256, m<=32 keeps the one-hot tile
+within VMEM (128 * 8192 * 4B = 4 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(codes_ref, lut_ref, out_ref, *, n_k: int):
+    codes = codes_ref[...]  # [TM, m] int32
+    lut = lut_ref[...].astype(jnp.float32)  # [m, K]
+    tm, m = codes.shape
+    k = lut.shape[1]
+    sym = jax.lax.broadcasted_iota(jnp.int32, (tm, m, k), 2)
+    onehot = (codes[:, :, None] == sym).astype(jnp.float32)
+    flat = onehot.reshape(tm, m * k)
+    out_ref[...] = jax.lax.dot_general(
+        flat, lut.reshape(m * k, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def pq_adc_pallas(
+    codes: jax.Array,  # [M, m] int32
+    lut: jax.Array,    # [m, K] f32
+    *,
+    tile_m: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    mm, m = codes.shape
+    k = lut.shape[1]
+    assert mm % tile_m == 0, (mm, tile_m)
+    grid = (mm // tile_m,)
+    out = pl.pallas_call(
+        functools.partial(_adc_kernel, n_k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mm, 1), jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), lut)
+    return out[:, 0]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``ref_*`` function is the semantic definition; kernels must match it
+to float tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+These are also the CPU execution path (ops.py dispatches here when not on
+TPU), so they are written to be reasonably efficient jnp, not golden-file
+stubs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_paa(x: jax.Array, n_segments: int) -> jax.Array:
+    """Piecewise Aggregate Approximation. x [N, n] -> [N, l] segment means.
+
+    Requires n % l == 0 (paper setting: n=256, l=16).
+    """
+    n = x.shape[-1]
+    assert n % n_segments == 0, (n, n_segments)
+    w = n // n_segments
+    return x.reshape(x.shape[:-1] + (n_segments, w)).mean(
+        axis=-1, dtype=jnp.float32
+    )
+
+
+def ref_box_mindist(
+    q: jax.Array,      # [B, D] query summary coordinates
+    lo: jax.Array,     # [L, D] box lower bounds
+    hi: jax.Array,     # [L, D] box upper bounds
+    weights: jax.Array,  # [D] per-dim weight (segment lengths etc.)
+) -> jax.Array:
+    """Weighted squared box distance: the unified lower bound of iSAX
+    (MINDIST), DSTree (EAPCA region bound) and VA+file (cell bound).
+
+    Returns SQUARED lb distances [B, L]; callers sqrt at the end.
+    """
+    qf = q.astype(jnp.float32)[:, None, :]
+    lof = lo.astype(jnp.float32)[None]
+    hif = hi.astype(jnp.float32)[None]
+    d = jnp.maximum(jnp.maximum(lof - qf, qf - hif), 0.0)
+    return jnp.sum(d * d * weights.astype(jnp.float32)[None, None, :],
+                   axis=-1)
+
+
+def ref_l2(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared Euclidean distances. q [B, n], x [M, n] -> [B, M] f32.
+
+    Matmul-form (MXU-friendly): |q|^2 - 2 q.x + |x|^2, f32 accumulation.
+    """
+    qf = q.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1, keepdims=True)  # [B,1]
+    xn = jnp.sum(xf * xf, axis=-1)  # [M]
+    cross = qf @ xf.T
+    return jnp.maximum(qn - 2.0 * cross + xn[None, :], 0.0)
+
+
+def ref_pq_adc(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """PQ asymmetric distance scan.
+
+    codes [M, m] int32 in [0, K); lut [m, K] f32 per-subspace distance
+    table for one query. Returns [M] summed distances.
+    """
+    m = codes.shape[1]
+    # per-subspace gather: lut[j, codes[:, j]] summed over j
+    idx = codes.astype(jnp.int32)
+    out = jnp.zeros(codes.shape[0], jnp.float32)
+    for j in range(m):
+        out = out + jnp.take(lut[j], idx[:, j])
+    return out
+
+
+def ref_topk_merge(
+    dists: jax.Array,  # [B, M] candidate distances
+    ids: jax.Array,    # [B, M] candidate ids
+    top_d: jax.Array,  # [B, k] current best distances (sorted asc)
+    top_i: jax.Array,  # [B, k] current best ids
+) -> tuple:
+    """Merge candidates into running sorted top-k rows."""
+    k = top_d.shape[1]
+    all_d = jnp.concatenate([top_d, dists], axis=1)
+    all_i = jnp.concatenate([top_i, ids], axis=1)
+    new_d, new_i = jax.lax.sort((all_d, all_i), num_keys=1)
+    return new_d[:, :k], new_i[:, :k]

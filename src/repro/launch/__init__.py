@@ -1,0 +1,3 @@
+# Launch layer: production meshes, sharding rules, dry-run + drivers.
+# NOTE: dryrun.py sets XLA_FLAGS at import — import it only as an entry
+# point (python -m repro.launch.dryrun), never from library code.

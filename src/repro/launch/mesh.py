@@ -1,0 +1,34 @@
+"""Production mesh construction (DESIGN.md §5.4).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods x
+256 = 512 chips (pod, data, model) — the 'pod' axis rides DCI-class
+links, which is why gradient compression (train/compress.py) targets it
+and why the roofline separates its bytes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (4, 2),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

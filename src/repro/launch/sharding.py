@@ -1,0 +1,89 @@
+"""Logical-axis -> mesh sharding for every lowered entry point.
+
+One rule set (models/params.DEFAULT_RULES) serves all 10 architectures;
+the resolver degrades gracefully (divisibility, axis reuse, missing mesh
+axes), which is what makes e.g. GQA kv_heads=8 on a 16-way model axis
+shard head_dim instead (DESIGN.md §5.4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import model as model_mod
+from repro.models import params as params_mod
+from repro.models.params import DEFAULT_RULES
+from repro.train import optimizer as opt_mod
+
+
+def mesh_rules(mesh: Mesh, overrides: Optional[Dict[str, Any]] = None):
+    """DEFAULT_RULES filtered to this mesh's axes (+ overrides)."""
+    names = set(mesh.axis_names)
+    rules = {}
+    src = dict(DEFAULT_RULES)
+    if overrides:
+        src.update(overrides)
+    for k, v in src.items():
+        if v is None:
+            rules[k] = None
+        elif isinstance(v, str):
+            rules[k] = v if v in names else None
+        else:
+            kept = tuple(a for a in v if a in names)
+            rules[k] = kept if kept else None
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules=None):
+    rules = rules or mesh_rules(mesh)
+    specs = model_mod.model_specs(cfg)
+    return params_mod.shardings(specs, rules, mesh)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, rules=None):
+    rules = rules or mesh_rules(mesh)
+    specs = model_mod.model_specs(cfg)
+    return params_mod.partition_specs(specs, rules, mesh)
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    rules=None):
+    rules = rules or mesh_rules(mesh)
+    specs = model_mod.input_specs(cfg, shape)
+    return params_mod.shardings(specs, rules, mesh)
+
+
+def abstract_params(cfg: ModelConfig):
+    return params_mod.abstract(model_mod.model_specs(cfg))
+
+
+def abstract_inputs(cfg: ModelConfig, shape: ShapeSpec):
+    return params_mod.abstract(model_mod.input_specs(cfg, shape))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: opt_mod.OptConfig):
+    """ShapeDtypeStruct pytree of optimizer state (no allocation)."""
+    import jax.numpy as jnp
+
+    p = abstract_params(cfg)
+    mom = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype), p)
+    mom2 = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype), p)
+    return opt_mod.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=mom, nu=mom2)
+
+
+def opt_shardings(cfg: ModelConfig, opt_cfg, mesh: Mesh, rules=None):
+    rules = rules or mesh_rules(mesh)
+    psh = param_shardings(cfg, mesh, rules)
+    return opt_mod.OptState(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree_util.tree_map(lambda s: s, psh),
+        nu=jax.tree_util.tree_map(lambda s: s, psh),
+    )

@@ -1,0 +1,96 @@
+"""Training driver: end-to-end fit() on whatever mesh is available.
+
+Used by examples/train_embedder.py (CPU, reduced config) and, unchanged,
+by a real TPU launch — the mesh/sharding/checkpoint plumbing is the
+production path. The loop composes: stateless token pipeline ->
+train_step (jit, sharded) -> Supervisor (checkpoint/restart/stragglers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data import tokens as tokens_mod
+from repro.launch import sharding as shard_lib
+from repro.models import model as model_mod
+from repro.models.params import initialize
+from repro.train import optimizer as opt_mod
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import FaultInjector, Supervisor
+from repro.train.train_step import build_train_step
+
+
+def fit(
+    cfg: ModelConfig,
+    *,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 128,
+    seed: int = 0,
+    opt_cfg: Optional[opt_mod.OptConfig] = None,
+    mesh=None,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    grad_accum: int = 1,
+    resume: bool = True,
+    injector: Optional[FaultInjector] = None,
+    log_every: int = 10,
+) -> Dict[str, Any]:
+    opt_cfg = opt_cfg or opt_mod.OptConfig(
+        lr=1e-3, warmup_steps=min(20, steps // 5 + 1), total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+    specs = model_mod.model_specs(cfg)
+    params = initialize(specs, key)
+    opt_state = opt_mod.init(opt_cfg, params)
+
+    step_fn = build_train_step(cfg, opt_cfg, grad_accum=grad_accum)
+    if mesh is not None:
+        rules = shard_lib.mesh_rules(mesh)
+        from repro.models import params as params_mod
+
+        p_sh = params_mod.shardings(specs, rules, mesh)
+        o_sh = shard_lib.opt_shardings(cfg, opt_cfg, mesh, rules)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        step_fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def make_batch(step: int):
+        b = tokens_mod.batch_at_step(seed, step, batch, seq,
+                                     cfg.vocab_size)
+        if cfg.is_encdec:
+            k = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
+            b["frames"] = jax.random.normal(
+                k, (batch, cfg.encoder_frames, cfg.d_model),
+                cfg.compute_dtype)
+        return b
+
+    start_step = 0
+    ckpt = None
+    if ckpt_dir:
+        ckpt = Checkpointer(ckpt_dir)
+        latest = ckpt.latest_step() if resume else None
+        if latest is not None:
+            _, state, _ = ckpt.restore(
+                {"params": params, "opt_state": opt_state}, latest)
+            params, opt_state = state["params"], state["opt_state"]
+            start_step = latest
+    if ckpt is None:
+        ckpt = Checkpointer(ckpt_dir or
+                            os.path.join("/tmp", f"hydra_ckpt_{seed}"))
+
+    sup = Supervisor(
+        train_step=step_fn, make_batch=make_batch, ckpt=ckpt,
+        ckpt_every=ckpt_every, injector=injector)
+    out = sup.run(params, opt_state, start_step, steps - start_step,
+                  log_every=log_every)
+    return out

@@ -1,0 +1,11 @@
+"""Model substrate package.
+
+Submodules are intentionally NOT imported eagerly: configs.base imports
+repro.models.moe/ssm for their config NamedTuples, while model modules
+import repro.configs.base — lazy access keeps the import graph acyclic.
+"""
+
+__all__ = [
+    "attention", "encdec", "layers", "model", "moe", "params", "ssm",
+    "transformer",
+]

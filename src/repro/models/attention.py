@@ -1,0 +1,309 @@
+"""Grouped-query attention with local/global variants, softcap, KV cache.
+
+Three execution paths, all numerically equivalent where they overlap:
+
+* ``_attend_dense``     — single-block masked attention (short sequences,
+                          encoder / cross attention, smoke tests).
+* ``_attend_blockwise`` — query-chunked online-softmax attention
+                          (flash-style, pure JAX): O(S·chunk) live memory
+                          for global-causal, O(S·(window+chunk)) *compute*
+                          for sliding-window layers via dynamic KV slices.
+* ``decode_attend``     — single-token query against a KV cache.
+
+GQA never materializes repeated KV heads: scores are computed with the
+grouped einsum ``[B,Sq,Kv,G,D] x [B,Sk,Kv,D] -> [B,Kv,G,Sq,Sk]``.
+
+Tensor-parallel note: Q heads shard over 'model'; when kv_heads does not
+divide the model axis (e.g. 8 kv heads on a 16-way axis) the param resolver
+shards K/V over head_dim instead — the score einsum then contracts over a
+sharded dim and GSPMD inserts the psum (the standard MQA/GQA decode TP
+strategy).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softcap
+from .params import ParamSpec
+from .sharding_utils import constrain, unshard_fsdp
+
+NEG_INF = -2.3819763e38  # large negative, safe in bf16 after cast
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    logit_cap: Optional[float] = None
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    chunk_q: int = 512  # blockwise query chunk
+    dense_threshold: int = 2048  # below this seq len use the dense path
+
+
+def attn_specs(cfg: AttnConfig, dtype) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs: Dict[str, ParamSpec] = {
+        "wq": ParamSpec((d, h, hd), ("fsdp", "heads", "head_dim"),
+                        dtype=dtype, init="scaled", fan_in_axes=(0,)),
+        "wk": ParamSpec((d, kv, hd), ("fsdp", "kv_heads", "head_dim"),
+                        dtype=dtype, init="scaled", fan_in_axes=(0,)),
+        "wv": ParamSpec((d, kv, hd), ("fsdp", "kv_heads", "head_dim"),
+                        dtype=dtype, init="scaled", fan_in_axes=(0,)),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "fsdp"),
+                        dtype=dtype, init="scaled", fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), dtype=dtype,
+                                init="zeros")
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                dtype=dtype, init="zeros")
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                dtype=dtype, init="zeros")
+    return specs
+
+
+def _project_qkv(params, x, cfg: AttnConfig, positions):
+    from .sharding_utils import unshard_fsdp
+
+    dtype = x.dtype
+    wq = unshard_fsdp(params["wq"], "fsdp", "heads", "head_dim")
+    wk = unshard_fsdp(params["wk"], "fsdp", "kv_heads", "head_dim")
+    wv = unshard_fsdp(params["wv"], "fsdp", "kv_heads", "head_dim")
+    q = jnp.einsum("bsd,dhk->bshk", x, wq.astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, wk.astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, wv.astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    if cfg.use_rope:
+        from .layers import rope
+
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale or (cfg.head_dim ** -0.5)
+    q = q * scale
+    # head-parallel attention: Q over 'model'; K/V shard kv_heads when
+    # divisible, else replicate over 'model' (cheap — KV activations are
+    # group_size-times smaller). The *decode cache* instead falls back to
+    # head_dim sharding for memory (DESIGN.md §5.4).
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _group_q(q: jax.Array, num_kv: int) -> jax.Array:
+    """[B,S,H,D] -> [B,S,Kv,G,D]"""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _scores(q5, k):
+    # q5: [B,Sq,Kv,G,D], k: [B,Sk,Kv,D] -> [B,Kv,G,Sq,Sk]  (f32)
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", q5, k, preferred_element_type=jnp.float32
+    )
+
+
+def _attend_dense(
+    q, k, v, *, causal: bool, window: Optional[int],
+    logit_cap: Optional[float], q_positions, k_positions,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    q5 = _group_q(q, kv)
+    s = _scores(q5, k)  # [B,Kv,G,Sq,Sk] f32
+    s = softcap(s, logit_cap) if logit_cap else s
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= q_positions[:, None] >= k_positions[None, :]
+    if window is not None:
+        mask &= q_positions[:, None] - k_positions[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+def _attend_blockwise(
+    q, k, v, *, causal: bool, window: Optional[int],
+    logit_cap: Optional[float], chunk_q: int,
+) -> jax.Array:
+    """Flash-style online-softmax over query chunks.
+
+    Global-causal: each chunk attends over the full (masked) key range but
+    only one [chunk, Sk] score block is live at a time.
+    Sliding-window: each chunk attends a dynamic KV slice of static size
+    window+chunk — true sub-quadratic compute.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    assert sq % chunk_q == 0, (sq, chunk_q)
+    nchunk = sq // chunk_q
+    qc = q.reshape(b, nchunk, chunk_q, h, d).transpose(1, 0, 2, 3, 4)
+
+    local = window is not None and (window + chunk_q) < sk
+    if local:
+        span = window + chunk_q  # static slice width
+        # pad keys on the left so every slice is in-bounds
+        pad = span - chunk_q
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def body(carry, ci):
+        qi = qc[ci]  # [B,chunk,H,D] — gather of one chunk
+        q_pos = ci * chunk_q + jnp.arange(chunk_q)
+        q5 = _group_q(qi, kvh)
+        if local:
+            start = ci * chunk_q  # in padded coords == q_start - pad + pad
+            ks = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+            k_pos = start - pad + jnp.arange(span)
+        else:
+            ks, vs = k, v
+            k_pos = jnp.arange(sk)
+        s = _scores(q5, ks)
+        s = softcap(s, logit_cap) if logit_cap else s
+        mask = jnp.ones((chunk_q, ks.shape[1]), dtype=bool)
+        mask &= k_pos[None, :] >= 0  # padded region
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vs.dtype), vs)
+        return carry, o.reshape(b, chunk_q, h, d)
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(nchunk))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return out
+
+
+def self_attention(
+    params,
+    x: jax.Array,
+    cfg: AttnConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence self attention (train / prefill).
+
+    Returns (output, (k, v)) so prefill can populate the cache.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if s <= cfg.dense_threshold or s % cfg.chunk_q != 0:
+        out = _attend_dense(
+            q, k, v, causal=causal, window=window, logit_cap=cfg.logit_cap,
+            q_positions=positions, k_positions=positions,
+        )
+    else:
+        out = _attend_blockwise(
+            q, k, v, causal=causal, window=window, logit_cap=cfg.logit_cap,
+            chunk_q=cfg.chunk_q,
+        )
+    wo = unshard_fsdp(params["wo"], "heads", "head_dim", "fsdp")
+    proj = jnp.einsum("bshk,hkd->bsd", out, wo.astype(x.dtype))
+    return proj, (k, v)
+
+
+def cross_attention(
+    params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+    cfg: AttnConfig,
+) -> jax.Array:
+    """Decoder->encoder attention; enc_kv precomputed (k, v)."""
+    b, s, _ = x.shape
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+    q = q * (cfg.query_scale or cfg.head_dim ** -0.5)
+    k, v = enc_kv
+    sq, sk = s, k.shape[1]
+    out = _attend_dense(
+        q, k, v, causal=False, window=None, logit_cap=cfg.logit_cap,
+        q_positions=jnp.arange(sq), k_positions=jnp.arange(sk),
+    )
+    wo = unshard_fsdp(params["wo"], "heads", "head_dim", "fsdp")
+    return jnp.einsum("bshk,hkd->bsd", out, wo.astype(dtype))
+
+
+def cross_kv(params, enc_out: jax.Array, cfg: AttnConfig):
+    dtype = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    params,
+    x: jax.Array,  # [B, 1, d_model]
+    cache_k: jax.Array,  # [B, Smax, Kv, D]
+    cache_v: jax.Array,
+    pos: jax.Array,  # scalar int32: index where the new token goes
+    cfg: AttnConfig,
+    *,
+    window: Optional[int] = None,
+    ring: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step. Returns (out, new_cache_k, new_cache_v).
+
+    ``ring=True`` (sliding-window layers): the cache capacity equals the
+    window and writes wrap at ``pos % cap``. RoPE is applied before
+    caching (absolute positions), softmax is order-invariant, and by
+    construction every resident entry lies within the window, so no
+    window mask is needed — only a fill mask while pos+1 < cap. This is
+    the §Perf memory optimization for long-context local layers."""
+    b, one, _ = x.shape
+    dtype = x.dtype
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    smax = cache_k.shape[1]
+    write_at = (pos % smax) if ring else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), write_at, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), write_at, axis=1
+    )
+    kvh = cache_k.shape[2]
+    q5 = _group_q(q, kvh)  # [B,1,Kv,G,D]
+    s = _scores(q5, cache_k.astype(dtype))  # [B,Kv,G,1,Smax]
+    s = softcap(s, cfg.logit_cap) if cfg.logit_cap else s
+    k_pos = jnp.arange(smax)
+    if ring:
+        mask = k_pos <= pos  # fill mask; window implicit in capacity
+    else:
+        mask = k_pos <= pos
+        if window is not None:
+            mask &= k_pos > pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(dtype),
+                   cache_v.astype(dtype))
+    o = o.reshape(b, 1, q.shape[2], q.shape[3])
+    wo2 = unshard_fsdp(params["wo"], "heads", "head_dim", "fsdp")
+    out = jnp.einsum("bshk,hkd->bsd", o, wo2.astype(dtype))
+    return out, cache_k, cache_v

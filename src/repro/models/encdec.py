@@ -1,0 +1,146 @@
+"""Encoder-decoder backbone (seamless-m4t-medium stub-frontend variant).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+supplies precomputed audio *frame embeddings* [B, frames, d_model]. The
+encoder is a bidirectional transformer over frames; the decoder is a causal
+transformer with cross-attention. Decoder KV (self) and encoder KV (cross)
+are cached for decoding.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn_mod
+from .layers import mlp_apply, mlp_specs, rmsnorm_apply, rmsnorm_specs
+from .params import ParamSpec
+from .transformer import _remat, attn_config, stack_specs
+
+
+def enc_layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": attn_mod.attn_specs(attn_config(cfg), dt),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "self_attn": attn_mod.attn_specs(attn_config(cfg), dt),
+        "ln_x": rmsnorm_specs(cfg.d_model),
+        "cross_attn": attn_mod.attn_specs(attn_config(cfg), dt),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def encdec_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "frontend_proj": ParamSpec(
+            (cfg.d_model, cfg.d_model), ("fsdp", "embed"),
+            dtype=cfg.param_dtype, init="scaled", fan_in_axes=(0,)),
+        "encoder": stack_specs(enc_layer_specs(cfg), cfg.encoder_layers),
+        "enc_norm": rmsnorm_specs(cfg.d_model),
+        "decoder": stack_specs(dec_layer_specs(cfg), cfg.num_layers),
+        "dec_norm": rmsnorm_specs(cfg.d_model),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: [B, F, d_model] stub embeddings -> encoder output."""
+    acfg = attn_config(cfg)
+    x = jnp.einsum("bfd,de->bfe", frames.astype(cfg.compute_dtype),
+                   params["frontend_proj"].astype(cfg.compute_dtype))
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, lp):
+        a = rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
+        a, _ = attn_mod.self_attention(lp["attn"], a, acfg, causal=False,
+                                       positions=positions)
+        h = h + a
+        m = rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
+        h = h + mlp_apply(lp["mlp"], m, act=cfg.act)
+        return h, None
+
+    body = _remat(body, cfg.remat_policy)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(
+    params, enc_out: jax.Array, x: jax.Array, cfg: ModelConfig,
+    collect_cache: bool = False,
+):
+    """Teacher-forced decoder pass over embedded targets x [B,S,d]."""
+    acfg = attn_config(cfg)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a = rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
+        a, (k, v) = attn_mod.self_attention(lp["self_attn"], a, acfg,
+                                            causal=True,
+                                            positions=positions)
+        h = h + a
+        c = rmsnorm_apply(lp["ln_x"], h, cfg.norm_eps)
+        ck, cv = attn_mod.cross_kv(lp["cross_attn"], enc_out, acfg)
+        c = attn_mod.cross_attention(lp["cross_attn"], c, (ck, cv), acfg)
+        h = h + c
+        m = rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
+        h = h + mlp_apply(lp["mlp"], m, act=cfg.act)
+        cache = ({"k": k, "v": v, "ck": ck, "cv": cv}
+                 if collect_cache else None)
+        return h, cache
+
+    body = _remat(body, cfg.remat_policy)
+    x, caches = jax.lax.scan(body, x, params["decoder"])
+    x = rmsnorm_apply(params["dec_norm"], x, cfg.norm_eps)
+    return (x, caches) if collect_cache else x
+
+
+def decode_step(params, x: jax.Array, cache, pos, cfg: ModelConfig):
+    """One decoder token. x [B,1,d]; cache has self k/v + cross ck/cv."""
+    acfg = attn_config(cfg)
+
+    def body(h, scanned):
+        lp, lc = scanned
+        a = rmsnorm_apply(lp["ln1"], h, cfg.norm_eps)
+        a, nk, nv = attn_mod.decode_attention(
+            lp["self_attn"], a, lc["k"], lc["v"], pos, acfg
+        )
+        h = h + a
+        c = rmsnorm_apply(lp["ln_x"], h, cfg.norm_eps)
+        c = attn_mod.cross_attention(
+            lp["cross_attn"], c, (lc["ck"], lc["cv"]), acfg
+        )
+        h = h + c
+        m = rmsnorm_apply(lp["ln2"], h, cfg.norm_eps)
+        h = h + mlp_apply(lp["mlp"], m, act=cfg.act)
+        return h, {"k": nk, "v": nv, "ck": lc["ck"], "cv": lc["cv"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+    x = rmsnorm_apply(params["dec_norm"], x, cfg.norm_eps)
+    return x, new_cache
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    dt = cfg.compute_dtype
+    kvshape = (batch, seq, cfg.num_kv_heads, cfg.head_dim)
+    xshape = (batch, cfg.encoder_frames, cfg.num_kv_heads, cfg.head_dim)
+    lay = ("batch", "seq", "kv_heads", "head_dim")
+    layer = {
+        "k": ParamSpec(kvshape, lay, dtype=dt, init="zeros"),
+        "v": ParamSpec(kvshape, lay, dtype=dt, init="zeros"),
+        "ck": ParamSpec(xshape, lay, dtype=dt, init="zeros"),
+        "cv": ParamSpec(xshape, lay, dtype=dt, init="zeros"),
+    }
+    return stack_specs(layer, cfg.num_layers)

@@ -1,0 +1,201 @@
+"""Shared neural building blocks: norms, MLPs, embeddings, RoPE, softcap.
+
+All modules follow the same convention: ``<name>_specs(cfg...)`` returns a
+ParamSpec pytree, ``<name>_apply(params, x, ...)`` is a pure function.
+Compute runs in ``cfg.compute_dtype`` (bf16 by default) with f32 reductions
+where it matters (norm statistics, softmax, loss).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# activations / misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 style logit soft capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int, dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((dim,), ("embed",), dtype=dtype, init="zeros")}
+
+
+def rmsnorm_apply(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    eps: float = 1e-6,
+    *,
+    plus_one: bool = True,
+) -> jax.Array:
+    """RMSNorm with (1 + scale) parameterization (llama/gemma convention).
+
+    Statistics in f32 regardless of the compute dtype.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    w = (1.0 + scale) if plus_one else scale
+    return (xn * w).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / gated MLP
+# ---------------------------------------------------------------------------
+
+def dense_specs(
+    d_in: int,
+    d_out: Tuple[int, ...],
+    logical_in: str,
+    logical_out: Tuple[str, ...],
+    dtype,
+    *,
+    bias: bool = False,
+) -> Dict[str, ParamSpec]:
+    shape = (d_in,) + d_out
+    logical = (logical_in,) + logical_out
+    specs = {
+        "w": ParamSpec(shape, logical, dtype=dtype, init="scaled",
+                       fan_in_axes=(0,))
+    }
+    if bias:
+        specs["b"] = ParamSpec(d_out, logical_out, dtype=dtype, init="zeros")
+    return specs
+
+
+def mlp_specs(d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
+    """SwiGLU MLP (gate, up, down)."""
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("fsdp", "mlp"), dtype=dtype,
+                             init="scaled", fan_in_axes=(0,)),
+        "wi_up": ParamSpec((d_model, d_ff), ("fsdp", "mlp"), dtype=dtype,
+                           init="scaled", fan_in_axes=(0,)),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "fsdp"), dtype=dtype,
+                        init="scaled", fan_in_axes=(0,)),
+    }
+
+
+def mlp_apply(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    from .sharding_utils import unshard_fsdp
+
+    dtype = x.dtype
+    wg = unshard_fsdp(params["wi_gate"], "fsdp", "mlp").astype(dtype)
+    wu = unshard_fsdp(params["wi_up"], "fsdp", "mlp").astype(dtype)
+    wo = unshard_fsdp(params["wo"], "mlp", "fsdp").astype(dtype)
+    gate = jnp.einsum("...d,df->...f", x, wg)
+    up = jnp.einsum("...d,df->...f", x, wu)
+    h = act_fn(act)(gate) * up
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_specs(vocab: int, d_model: int, dtype) -> Dict[str, ParamSpec]:
+    return {
+        "embedding": ParamSpec(
+            (vocab, d_model), ("vocab", "embed"), dtype=dtype,
+            init="embed", scale=1.0,
+        )
+    }
+
+
+def embed_apply(params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    emb = params["embedding"].astype(compute_dtype)
+    return jnp.take(emb, tokens, axis=0)
+
+
+def logits_apply(
+    params, x: jax.Array, *, tied: bool, head_params=None,
+    final_softcap: Optional[float] = None,
+) -> jax.Array:
+    from .sharding_utils import unshard_fsdp
+
+    if tied:
+        w = params["embedding"].astype(x.dtype)
+        logits = jnp.einsum("...d,vd->...v", x, w)
+    else:
+        w = unshard_fsdp(head_params["w"], "fsdp", "vocab").astype(
+            x.dtype)
+        logits = jnp.einsum("...d,dv->...v", x, w)
+    return softcap(logits, final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Apply rotary embeddings.
+
+    x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq].
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv_freq = 1.0 / (theta ** (freq / half))
+    # angles: [..., seq, half]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    sin = jnp.sin(angles)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None,
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-mean cross entropy in f32 with optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    metrics = {
+        "loss": loss,
+        "ntokens": mask.sum(),
+        "ppl_proxy": loss,
+    }
+    return loss, metrics

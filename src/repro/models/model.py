@@ -1,0 +1,211 @@
+"""Model facade: one entry point for all 10 architectures.
+
+* ``model_specs(cfg)``   — full parameter ParamSpec pytree
+* ``loss_fn``            — train forward + CE loss (+ MoE aux)
+* ``prefill``            — full-sequence forward emitting a decode cache
+* ``decode_step``        — one-token step against the cache
+* ``input_specs``        — ParamSpec pytree for each assigned shape
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+from . import encdec as encdec_mod
+from . import transformer as tfm
+from .layers import (cross_entropy, embed_apply, embed_specs, logits_apply,
+                     rmsnorm_apply, rmsnorm_specs, softcap)
+from .params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": embed_specs(cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "final_norm": rmsnorm_specs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = {
+            "w": ParamSpec((cfg.d_model, cfg.vocab_size),
+                           ("fsdp", "vocab"), dtype=cfg.param_dtype,
+                           init="scaled", fan_in_axes=(0,))
+        }
+    if cfg.is_encdec:
+        specs["encdec"] = encdec_mod.encdec_specs(cfg)
+        return specs
+    if cfg.dense_first_layer:
+        from repro.configs.base import LayerDesc
+
+        specs["first_layer"] = tfm.sublayer_specs(
+            cfg, LayerDesc(kind="attn", ff="dense"),
+            d_ff_override=cfg.dense_first_d_ff or cfg.d_ff,
+        )
+    specs["blocks"] = tfm.stack_specs(tfm.block_specs(cfg), cfg.num_blocks)
+    return specs
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    x = embed_apply(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return x
+
+
+def _logits(params, x, cfg: ModelConfig):
+    return logits_apply(
+        params["embed"], x, tied=cfg.tie_embeddings,
+        head_params=params.get("head"),
+        final_softcap=cfg.final_logit_softcap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+
+def _backbone(params, tokens, cfg: ModelConfig, collect_cache=False):
+    positions = jnp.arange(tokens.shape[1])
+    x = _embed(params, tokens, cfg)
+    first_cache = None
+    moe0 = jnp.zeros((), jnp.float32)
+    if cfg.dense_first_layer:
+        from repro.configs.base import LayerDesc
+
+        x, moe0, first_cache = tfm._apply_sublayer(
+            params["first_layer"], x, LayerDesc(kind="attn", ff="dense"),
+            cfg, positions, collect_cache,
+        )
+    x, moe_loss, caches = tfm.run_blocks(
+        params["blocks"], x, cfg, positions, collect_cache
+    )
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, moe0 + moe_loss, (first_cache, caches)
+
+
+def loss_fn(
+    params, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens/labels [B,S] (+frames for enc-dec)."""
+    if cfg.is_encdec:
+        enc_out = encdec_mod.encode(params["encdec"], batch["frames"], cfg)
+        x = _embed(params, batch["tokens"], cfg)
+        x = encdec_mod.decode_train(params["encdec"], enc_out, x, cfg)
+        moe_loss = jnp.zeros((), jnp.float32)
+    else:
+        x, moe_loss, _ = _backbone(params, batch["tokens"], cfg)
+    logits = _logits(params, x, cfg)
+    loss, metrics = cross_entropy(
+        logits, batch["labels"], batch.get("mask")
+    )
+    total = loss + moe_loss
+    metrics["moe_loss"] = moe_loss
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Returns (last-position logits, cache)."""
+    if cfg.is_encdec:
+        enc_out = encdec_mod.encode(params["encdec"], batch["frames"], cfg)
+        x = _embed(params, batch["tokens"], cfg)
+        x, cache = encdec_mod.decode_train(
+            params["encdec"], enc_out, x, cfg, collect_cache=True
+        )
+        logits = _logits(params, x[:, -1:, :], cfg)
+        return logits, cache
+    x, _, (first_cache, caches) = _backbone(
+        params, batch["tokens"], cfg, collect_cache=True
+    )
+    logits = _logits(params, x[:, -1:, :], cfg)
+    cache = {"blocks": caches}
+    if first_cache is not None:
+        cache["first_layer"] = first_cache
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig):
+    """tokens [B,1] int32; pos scalar int32. Returns (logits, new cache)."""
+    x = _embed(params, tokens, cfg)
+    if cfg.is_encdec:
+        x, new_cache = encdec_mod.decode_step(
+            params["encdec"], x, cache, pos, cfg
+        )
+        return _logits(params, x, cfg), new_cache
+    new_cache = {}
+    if cfg.dense_first_layer:
+        from repro.configs.base import LayerDesc
+
+        x, ne = tfm._sublayer_decode(
+            params["first_layer"], x, LayerDesc(kind="attn", ff="dense"),
+            cfg, cache["first_layer"], pos,
+        )
+        new_cache["first_layer"] = ne
+    x, nb = tfm.decode_blocks(params["blocks"], x, cfg, cache["blocks"], pos)
+    new_cache["blocks"] = nb
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs per assigned shape
+# ---------------------------------------------------------------------------
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.is_encdec:
+        return encdec_mod.encdec_cache_specs(cfg, batch, seq)
+    cache = {"blocks": tfm.cache_specs(cfg, batch, seq)}
+    if cfg.dense_first_layer:
+        from repro.configs.base import LayerDesc
+
+        cache["first_layer"] = tfm.sublayer_cache_spec(
+            cfg, LayerDesc(kind="attn", ff="dense"), batch, seq
+        )
+    return cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ParamSpec pytree of every model input for (cfg, shape).
+
+    Converted to ShapeDtypeStructs (dry-run) or materialized (smoke tests)
+    via params.abstract / params.initialize.
+    """
+    b, s = shape.batch, shape.seq
+    tok = lambda shp: ParamSpec(shp, ("batch", "seq"), dtype=jnp.int32,
+                                init="zeros")
+    if shape.kind == "train":
+        specs = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.is_encdec:
+            specs["frames"] = ParamSpec(
+                (b, cfg.encoder_frames, cfg.d_model),
+                ("batch", "seq", "embed"), dtype=cfg.compute_dtype,
+                init="normal", scale=1.0,
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok((b, s))}
+        if cfg.is_encdec:
+            specs["frames"] = ParamSpec(
+                (b, cfg.encoder_frames, cfg.d_model),
+                ("batch", "seq", "embed"), dtype=cfg.compute_dtype,
+                init="normal", scale=1.0,
+            )
+        return specs
+    if shape.kind == "decode":
+        return {
+            "tokens": tok((b, 1)),
+            "cache": decode_cache_specs(cfg, b, s),
+            "pos": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+        }
+    raise ValueError(shape.kind)

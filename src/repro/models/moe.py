@@ -1,0 +1,169 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, shared experts.
+
+TPU-native dispatch design (documented in DESIGN.md §5.4): the classical
+GShard/Switch dispatch einsum materializes a [T, E, C] one-hot tensor whose
+size is quadratic in tokens (C ∝ T·k/E). Hydra-JAX instead computes each
+token copy's *position within its expert* with an exclusive cumsum over the
+token axis ([T, E] int32, linear memory), then scatters token rows into a
+[E·C, D] buffer and gathers them back — overflow beyond capacity C is
+dropped exactly like capacity-factor routing in GShard/Switch/MaxText.
+Expert weights are stacked [E, ...] and sharded over the 'model' axis; the
+scatter/gather across the expert axis is GSPMD's all-to-all equivalent.
+
+Routing semantics follow DBRX/DeepSeek-MoE: softmax router, top-k with
+renormalized weights, optional shared experts applied densely, Switch-style
+load-balance auxiliary loss and router z-loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, mlp_apply, mlp_specs
+from .params import ParamSpec
+from .sharding_utils import constrain, unshard_fsdp
+
+
+class MoEConfig(NamedTuple):
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0  # shared experts (deepseek), each of d_ff_expert
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss_weight: float = 1e-2
+
+
+def moe_specs(d_model: int, cfg: MoEConfig, dtype) -> Dict[str, Any]:
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    specs: Dict[str, Any] = {
+        "router": ParamSpec((d_model, e), ("embed", None), dtype=jnp.float32,
+                            init="scaled", fan_in_axes=(0,)),
+        "wi_gate": ParamSpec((e, d_model, f), ("experts", "fsdp", "mlp"),
+                             dtype=dtype, init="scaled", fan_in_axes=(1,)),
+        "wi_up": ParamSpec((e, d_model, f), ("experts", "fsdp", "mlp"),
+                           dtype=dtype, init="scaled", fan_in_axes=(1,)),
+        "wo": ParamSpec((e, f, d_model), ("experts", "mlp", "fsdp"),
+                        dtype=dtype, init="scaled", fan_in_axes=(1,)),
+    }
+    if cfg.num_shared > 0:
+        specs["shared"] = mlp_specs(d_model, cfg.num_shared * f, dtype)
+    return specs
+
+
+def _route(
+    logits: jax.Array, cfg: MoEConfig
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Top-k routing. logits [T, E] -> (weights [T,K], idx [T,K], aux)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9
+    )
+    # Switch aux loss: E * sum_e (fraction dispatched_e * mean prob_e)
+    t = logits.shape[0]
+    one_hot_topk = jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32)
+    frac = one_hot_topk.sum(axis=(0, 1)) / (t * cfg.top_k)
+    mean_prob = probs.mean(axis=0)
+    aux_loss = cfg.num_experts * jnp.sum(frac * mean_prob)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    z_loss = jnp.mean(jnp.square(lse))
+    aux = {
+        "moe_aux_loss": aux_loss,
+        "moe_z_loss": z_loss,
+        "moe_expert_frac_max": frac.max(),
+    }
+    return weights, idx, aux
+
+
+def moe_apply(
+    params: Dict[str, Any],
+    x: jax.Array,  # [B, S, D]
+    cfg: MoEConfig,
+    *,
+    act: str = "silu",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Grouped capacity routing (GShard-style groups = sequences).
+
+    Position-in-expert is computed with a cumsum over the SEQUENCE axis
+    of each batch row, so routing math never crosses the batch shards —
+    the baseline global-token cumsum serialized over the (pod, data)
+    axes and dominated the MoE dry-run collectives (EXPERIMENTS.md
+    §Perf, dbrx cells). Capacity is per (group, expert); only the
+    expert-buffer scatter/gather crosses shards (the all-to-all).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.num_experts, cfg.top_k
+    dtype = x.dtype
+
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), params["router"]
+    )
+    weights, idx, aux = _route(logits, cfg)
+
+    # capacity per expert (static)
+    capacity = int(max(k, round(t * k * cfg.capacity_factor / e)))
+    capacity = max(8, capacity)
+
+    # position of each (token, k) copy within its expert, token-major
+    # order. NOTE (EXPERIMENTS.md §Perf A): this global-token cumsum is
+    # the measured-best of three dispatch plans — per-sequence grouped
+    # routing regressed 8.4x (A1: GSPMD replicates+reduces scatter
+    # buffers across the model axis) and staged grouped routing 1.2x
+    # (A2); a shard_map ragged all-to-all is the logged next iteration.
+    running = jnp.zeros((e,), jnp.int32)
+    pos_list = []
+    for kk in range(k):
+        mask_k = jax.nn.one_hot(idx[:, kk], e, dtype=jnp.int32)  # [T,E]
+        within = jnp.cumsum(mask_k, axis=0) - mask_k  # exclusive cumsum
+        pos_k = jnp.take_along_axis(
+            within + running[None, :], idx[:, kk:kk + 1], axis=1
+        )[:, 0]
+        running = running + mask_k.sum(axis=0)
+        pos_list.append(pos_k)
+    pos = jnp.stack(pos_list, axis=1)  # [T, K]
+
+    keep = pos < capacity
+    dest = jnp.where(keep, idx * capacity + pos, e * capacity)  # OOB drop
+
+    # scatter token rows into expert buffers [E*C, D]
+    dest_flat = dest.reshape(t * k)
+    x_rep = jnp.repeat(xt, k, axis=0)  # token-major [T*K, D]
+    buf = jnp.zeros((e * capacity, d), dtype)
+    buf = buf.at[dest_flat].set(x_rep, mode="drop")
+    buf = buf.reshape(e, capacity, d)
+    # expert-parallel: buffers live where the expert weights live
+    buf = constrain(buf, "experts", None, None)
+
+    wg = unshard_fsdp(params["wi_gate"], "experts", "fsdp", "mlp")
+    wu = unshard_fsdp(params["wi_up"], "experts", "fsdp", "mlp")
+    wo = unshard_fsdp(params["wo"], "experts", "mlp", "fsdp")
+    gate = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dtype))
+    h = act_fn(act)(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo.astype(dtype))
+    out_buf = constrain(out_buf, "experts", None, None)
+    out_buf = out_buf.reshape(e * capacity, d)
+
+    # gather back, weight, sum over k copies
+    gathered = jnp.take(out_buf, jnp.minimum(dest_flat, e * capacity - 1),
+                        axis=0)
+    gathered = jnp.where(keep.reshape(t * k, 1), gathered, 0.0)
+    wflat = weights.reshape(t * k, 1).astype(dtype)
+    out = (gathered * wflat).reshape(t, k, d).sum(axis=1)
+
+    if cfg.num_shared > 0:
+        out = out + mlp_apply(params["shared"], xt, act=act)
+
+    aux["moe_dropped_frac"] = 1.0 - keep.mean()
+    return out.reshape(b, s, d), aux
+
+
+def moe_loss(aux: Dict[str, jax.Array], cfg: MoEConfig) -> jax.Array:
+    return (cfg.aux_loss_weight * aux["moe_aux_loss"]
+            + cfg.router_z_loss * aux["moe_z_loss"])

@@ -1,0 +1,220 @@
+"""Parameter specification / initialization / sharding substrate.
+
+Hydra-JAX has no flax dependency: every model declares its parameters as a
+pytree of :class:`ParamSpec` (shape + logical axis names + init rule).  From
+that single declaration we derive
+
+* ``abstract(tree)``        -> ShapeDtypeStruct pytree (dry-run, no alloc)
+* ``initialize(tree, key)`` -> materialized arrays (tests / real training)
+* ``partition(tree, rules, mesh)`` -> PartitionSpec pytree (pjit shardings)
+
+Logical axis names ('embed', 'heads', 'mlp', 'vocab', 'experts', ...) are
+resolved to physical mesh axes through prioritized *rules*, MaxText-style.
+A rule maps a logical axis to one mesh axis, a tuple of mesh axes (the dim
+is sharded over their product) or None.  Resolution is conservative: a
+mapping is dropped when the dimension is not divisible by the mesh axes'
+product or when a mesh axis was already consumed by an earlier dim, so a
+single rule set serves every architecture (e.g. GQA kv_heads=8 simply does
+not bind a 16-way 'model' axis and the 'head_dim' rule picks it up instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Optional[str]
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Axis, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed | scaled | constant
+    scale: Optional[float] = None  # stddev (normal/scaled) or constant value
+    fan_in_axes: Tuple[int, ...] = ()  # dims treated as fan-in for 'scaled'
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"shape {self.shape} and logical {self.logical} rank mismatch"
+            )
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct pytree — zero allocation, for .lower() dry-runs."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree
+    )
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(l.size for l in leaves if is_spec(l))
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(
+        l.size * jnp.dtype(l.dtype).itemsize for l in leaves if is_spec(l)
+    )
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.scale or 0.0, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    if spec.init in ("normal", "scaled"):
+        if spec.scale is not None and spec.init == "normal":
+            std = spec.scale
+        else:
+            fan_axes = spec.fan_in_axes or (0,)
+            fan_in = max(1, int(np.prod([spec.shape[a] for a in fan_axes])))
+            std = (spec.scale or 1.0) / math.sqrt(fan_in)
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def initialize(tree, key: jax.Array):
+    """Materialize a ParamSpec pytree into real arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = [
+        _init_one(l, k) if is_spec(l) else l for l, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical sharding resolution
+# ---------------------------------------------------------------------------
+
+def _as_tuple(mx: MeshAxes) -> Tuple[str, ...]:
+    if mx is None:
+        return ()
+    if isinstance(mx, str):
+        return (mx,)
+    return tuple(mx)
+
+
+def resolve_pspec(
+    logical: Sequence[Axis],
+    shape: Sequence[int],
+    rules: Dict[str, MeshAxes],
+    mesh_shape: Dict[str, int],
+) -> P:
+    """Resolve logical axes to a PartitionSpec under divisibility constraints.
+
+    Later dims never reuse a mesh axis consumed by an earlier dim; a rule
+    that does not divide the dimension evenly is skipped (partial prefixes
+    of a multi-axis rule are allowed, e.g. ('data','model') degrades to
+    ('data',) when only the data factor divides).
+    """
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        entry: Tuple[str, ...] = ()
+        if name is not None and name in rules:
+            cand = [a for a in _as_tuple(rules[name]) if a not in used]
+            # greedy prefix that divides the dim
+            acc: list = []
+            prod = 1
+            for a in cand:
+                if dim % (prod * mesh_shape.get(a, 1)) == 0:
+                    acc.append(a)
+                    prod *= mesh_shape.get(a, 1)
+            entry = tuple(acc)
+        used.update(entry)
+        if len(entry) == 0:
+            out.append(None)
+        elif len(entry) == 1:
+            out.append(entry[0])
+        else:
+            out.append(entry)
+    # strip trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def partition_specs(tree, rules: Dict[str, MeshAxes], mesh: Mesh):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return tree_map_specs(
+        lambda s: resolve_pspec(s.logical, s.shape, rules, mesh_shape), tree
+    )
+
+
+def shardings(tree, rules: Dict[str, MeshAxes], mesh: Mesh):
+    specs = partition_specs(tree, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# Default rule set shared by all architectures. 'fsdp' behaviour comes from
+# mapping the embed/mlp fan dims onto the data axis *after* model axes; the
+# resolver guarantees no axis is double-booked within a tensor.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    # params — tensor parallel first, then fsdp over data
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": "model",
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "fsdp": ("pod", "data"),  # fan-in dim of big matrices
+    "layers": None,  # scan axis, never sharded
+    "conv": None,
+}
+
+
+def logical_sds(
+    shape: Sequence[int],
+    logical: Sequence[Axis],
+    dtype,
+    rules: Dict[str, MeshAxes],
+    mesh: Mesh,
+) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct carrying a NamedSharding (for dry-run inputs)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = resolve_pspec(logical, shape, rules, mesh_shape)
+    return jax.ShapeDtypeStruct(
+        tuple(shape), dtype, sharding=NamedSharding(mesh, spec)
+    )

@@ -1,0 +1,127 @@
+"""Ambient-mesh-aware activation sharding constraints.
+
+GSPMD propagates parameter shardings through simple stacks, but
+heterogeneous layers (SSD's multi-operand einsums, MoE scatter/gather)
+can make the propagator choose replication for large intermediates —
+observed as multi-GB all-gathers in the mamba2 dry-run baseline
+(EXPERIMENTS.md §Dry-run notes). Pinning a handful of activations fixes
+the search space. `constrain` resolves LOGICAL names against whatever
+mesh is ambient (jax.set_mesh or the legacy `with mesh:` context) and
+no-ops when there is none, so the same model code runs in smoke tests
+(1 device), dry-runs (512 fake devices) and real launches.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Set, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical activation axis -> preferred mesh axes (first that divides)
+ACT_MAP = {
+    "batch": ("pod", "data"),
+    "seq_model": ("model",),  # sequence parallelism (residual stream)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "vocab": ("model",),
+    "embed": (),
+    "fsdp": (),  # at USE time fsdp dims are gathered (see unshard_fsdp)
+    None: (),
+}
+
+
+_ACT_OVERRIDES: dict = {}
+
+
+class use_act_map:
+    """Temporarily override ACT_MAP entries (parallelism policies):
+    e.g. pure-FSDP lowers with heads/mlp unmapped and batch spanning
+    every mesh axis. Used by launch/dryrun for per-arch policies."""
+
+    def __init__(self, overrides: dict):
+        self.overrides = overrides
+        self.saved: dict = {}
+
+    def __enter__(self):
+        global _ACT_OVERRIDES
+        self.saved = dict(_ACT_OVERRIDES)
+        _ACT_OVERRIDES.update(self.overrides)
+        return self
+
+    def __exit__(self, *exc):
+        global _ACT_OVERRIDES
+        _ACT_OVERRIDES.clear()
+        _ACT_OVERRIDES.update(self.saved)
+        return False
+
+
+def _act_axes(name):
+    if name in _ACT_OVERRIDES:
+        return _ACT_OVERRIDES[name]
+    return ACT_MAP.get(name, ())
+
+
+def ambient_axis_sizes() -> dict:
+    am = jax.sharding.get_abstract_mesh()
+    if am is not None and not am.empty:
+        return dict(zip(am.axis_names, am.axis_sizes))
+    try:  # legacy `with mesh:` context
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return dict(zip(pm.axis_names, pm.devices.shape))
+    except Exception:  # pragma: no cover - defensive
+        pass
+    return {}
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op w/o mesh.
+
+    Divisibility is checked per dim; mesh axes are never reused across
+    dims of one constraint (mirrors params.resolve_pspec).
+    """
+    sizes = ambient_axis_sizes()
+    if not sizes:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    used: Set[str] = set()
+    entries = []
+    for dim, name in zip(x.shape, logical):
+        acc: Tuple[str, ...] = ()
+        prod = 1
+        for a in _act_axes(name):
+            if a in sizes and a not in used \
+                    and dim % (prod * sizes[a]) == 0:
+                acc = acc + (a,)
+                prod *= sizes[a]
+        used.update(acc)
+        if len(acc) == 0:
+            entries.append(None)
+        elif len(acc) == 1:
+            entries.append(acc[0])
+        else:
+            entries.append(acc)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except (RuntimeError, ValueError):  # no usable mesh
+        return x
+
+
+def unshard_fsdp(w: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Weight-gather FSDP: at rest, parameters are additionally sharded
+    over the data axes on their 'fsdp' dim (ZeRO-3); at USE they must be
+    gathered, otherwise GSPMD contracts the sharded dim and all-reduces
+    ACTIVATION-sized partials over the data axis (observed: 550 GB/dev
+    wire on minitron-8b train — EXPERIMENTS.md §Perf baseline notes).
+    Constraining the use-site to fsdp→replicated makes XLA insert the
+    standard per-block bf16 weight all-gather instead, which is smaller
+    by activations/params orders of magnitude. Tensor-parallel ('model')
+    dims are preserved."""
+    return constrain(w, *logical)

@@ -1,0 +1,3 @@
+from . import batching, serve_step
+
+__all__ = ["batching", "serve_step"]

@@ -1,0 +1,79 @@
+"""Request batching for serving: buckets, deadlines, graceful degrade.
+
+A lightweight continuous-batching front end: requests are bucketed by
+prompt length (power-of-two buckets keep compiled shapes bounded), each
+bucket drains as a uniform batch, and a per-request deadline maps onto
+the paper's taxonomy for the retrieval-augmented path — if the deadline
+budget is short, retrieval degrades from epsilon-guaranteed search to
+ng(nprobe), which is precisely the paper's observation that the first
+best-so-far answers are near-exact (Fig. 8). That makes load shedding a
+*quality* knob rather than a drop decision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.guarantees import Guarantee
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    deadline_ms: Optional[float] = None
+    submitted_at: float = dataclasses.field(default_factory=time.monotonic)
+
+
+def bucket_of(length: int, min_bucket: int = 16) -> int:
+    b = min_bucket
+    while b < length:
+        b *= 2
+    return b
+
+
+def guarantee_for_deadline(
+    deadline_ms: Optional[float], *, full_budget_ms: float = 50.0,
+    nprobe_floor: int = 1, nprobe_ceil: int = 64,
+    epsilon: float = 0.0,
+) -> Guarantee:
+    """Map a latency budget onto the taxonomy (graceful degradation)."""
+    if deadline_ms is None or deadline_ms >= full_budget_ms:
+        return Guarantee(epsilon=epsilon)
+    frac = max(deadline_ms, 1e-3) / full_budget_ms
+    nprobe = int(round(nprobe_floor
+                       + frac * (nprobe_ceil - nprobe_floor)))
+    return Guarantee(nprobe=max(nprobe_floor, nprobe))
+
+
+class Scheduler:
+    """Length-bucketed FIFO batching."""
+
+    def __init__(self, max_batch: int = 8, min_bucket: int = 16):
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.queues: Dict[int, List[Request]] = defaultdict(list)
+        self.completed: Dict[int, np.ndarray] = {}
+
+    def submit(self, req: Request):
+        self.queues[bucket_of(len(req.prompt), self.min_bucket)].append(req)
+
+    def next_batch(self) -> Optional[Tuple[int, List[Request]]]:
+        for bucket, q in sorted(self.queues.items()):
+            if q:
+                take = q[: self.max_batch]
+                self.queues[bucket] = q[len(take):]
+                return bucket, take
+        return None
+
+    def pad_prompts(self, bucket: int, reqs: List[Request]) -> np.ndarray:
+        out = np.zeros((len(reqs), bucket), np.int32)
+        for i, r in enumerate(reqs):
+            out[i, bucket - len(r.prompt):] = r.prompt  # left-pad
+        return out

@@ -1,0 +1,80 @@
+"""Serving: prefill + decode step builders and a generate loop.
+
+`build_decode_step` is the function the decode-shape dry-runs lower:
+one token through the stack against a fixed-capacity cache. Sampling is
+greedy or temperature-categorical. `generate` drives prefill -> N decode
+steps (used by examples and integration tests); cache capacity is
+allocated up front and prefill writes the prefix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.models.params import initialize
+
+
+def build_decode_step(cfg: ModelConfig, *, sample: str = "greedy",
+                      temperature: float = 1.0):
+    def decode_step(params, tokens, cache, pos, rng=None):
+        logits, cache = model_mod.decode_step(params, tokens, cache, pos,
+                                              cfg)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+        else:
+            nxt = jax.random.categorical(
+                rng, logits[:, -1, :] / temperature)
+        return nxt.astype(jnp.int32), logits, cache
+
+    return decode_step
+
+
+def _grow_cache(cache, capacity: int):
+    """Pad prefill KV extents to `capacity` along the seq axis."""
+
+    def grow(x):
+        # KV tensors are [..., S, kv, hd] stacked as [G, B, S, kv, hd];
+        # ssm states have no seq axis — identified by ndim/name shape.
+        if x.ndim >= 4 and x.shape[-3] < capacity:
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, capacity - x.shape[-3])
+            return jnp.pad(x, pad)
+        return x
+
+    def is_kv(path):
+        last = str(path[-1].key) if path else ""
+        return last in ("k", "v")
+
+    out = jax.tree_util.tree_map_with_path(
+        lambda p, x: grow(x) if is_kv(p) else x, cache)
+    return out
+
+
+def generate(
+    params, cfg: ModelConfig, prompt: jax.Array, n_steps: int,
+    *, sample: str = "greedy", rng=None, frames: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """prompt [B, S] -> generated tokens [B, n_steps]."""
+    b, s = prompt.shape
+    batch = {"tokens": prompt}
+    if cfg.is_encdec:
+        assert frames is not None
+        batch["frames"] = frames
+    logits, cache = model_mod.prefill(params, batch, cfg)
+    cache = _grow_cache(cache, s + n_steps)
+    step_fn = build_decode_step(cfg, sample=sample)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    toks = [tok]
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    for t in range(n_steps - 1):
+        rng, sub = jax.random.split(rng)
+        tok, _, cache = step_fn(
+            params, tok[:, None], cache, jnp.int32(s + t), sub)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1), {"cache": cache}

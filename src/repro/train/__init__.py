@@ -1,0 +1,3 @@
+from . import checkpoint, compress, fault, optimizer, train_step
+
+__all__ = ["checkpoint", "compress", "fault", "optimizer", "train_step"]

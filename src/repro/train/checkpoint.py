@@ -1,0 +1,191 @@
+"""Sharded, elastic, integrity-checked checkpointing (no orbax).
+
+Layout:  <dir>/step_<N>/
+            manifest.json   — step, rng, data cursor, config hash,
+                              per-tensor {path, shape, dtype, sha256}
+            <group>.npz     — top-level pytree groups, full logical
+                              tensors (gathered from device shards)
+
+Design points for the 1000-node story (DESIGN.md §5.5):
+* Elastic restore: tensors are saved in logical (unsharded) form keyed
+  by tree path, so restore simply device_puts with the *current* mesh's
+  shardings — rescaling pods between runs is a pure reload. (At 405B you
+  would save per-host shards; the manifest format already records shapes
+  per tensor so a sharded writer is a drop-in change.)
+* Async save: arrays are snapshotted to host then written by a
+  background thread; the train loop never blocks on disk.
+* Integrity: sha256 per file, validated on restore; a save is only
+  visible once its manifest is atomically renamed into place.
+* Retention: keep_last sweeps old steps.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+# npz cannot round-trip ml_dtypes (bf16 etc.) — store a raw-bits view
+# and the true dtype name in the manifest, view back on restore.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _VIEW_AS:
+        return arr.view(_VIEW_AS[name]), name
+    return arr, name
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_AS:
+        import ml_dtypes
+
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(
+        self, step: int, state: Dict[str, Any],
+        extra: Optional[Dict[str, Any]] = None, *, sync: bool = False,
+    ):
+        """state: dict of top-level pytrees (params, opt_state, ...)."""
+        # snapshot to host synchronously (cheap vs training step),
+        # write asynchronously.
+        snap = {g: _flatten_with_paths(t) for g, t in state.items()}
+        self.wait()
+
+        def write():
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+            manifest = {"step": step, "extra": extra or {}, "files": {}}
+            for group, tensors in snap.items():
+                fpath = os.path.join(tmp, f"{group}.npz")
+                savable = {}
+                dtypes = {}
+                for k, v in tensors.items():
+                    savable[k], dtypes[k] = _to_savable(v)
+                np.savez(fpath, **savable)
+                manifest["files"][group] = {
+                    "sha256": _sha256(fpath),
+                    "tensors": {k: [list(v.shape), dtypes[k]]
+                                for k, v in tensors.items()},
+                }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._sweep()
+
+        if sync:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _sweep(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, templates: Dict[str, Any], step: Optional[int] = None,
+        *, shardings: Optional[Dict[str, Any]] = None,
+        validate: bool = True,
+    ) -> Tuple[int, Dict[str, Any], Dict[str, Any]]:
+        """templates: dict of pytrees giving structure. shardings:
+        optional matching dict of sharding pytrees for elastic reload."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        base = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(base, "manifest.json")) as f:
+            manifest = json.load(f)
+        out = {}
+        for group, template in templates.items():
+            fpath = os.path.join(base, f"{group}.npz")
+            if validate:
+                want = manifest["files"][group]["sha256"]
+                got = _sha256(fpath)
+                if want != got:
+                    raise IOError(
+                        f"checkpoint corruption in {fpath}: "
+                        f"sha256 {got} != {want}")
+            data = np.load(fpath)
+            leaves_p, treedef = jax.tree_util.tree_flatten_with_path(
+                template)
+            shard_flat = None
+            if shardings and group in shardings:
+                shard_flat = [
+                    s for _, s in jax.tree_util.tree_flatten_with_path(
+                        shardings[group])[0]]
+            new = []
+            tensor_meta = manifest["files"][group]["tensors"]
+            for i, (path, leaf) in enumerate(leaves_p):
+                key = "/".join(
+                    str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+                arr = _from_savable(data[key], tensor_meta[key][1])
+                if shard_flat is not None:
+                    arr = jax.device_put(arr, shard_flat[i])
+                else:
+                    arr = jnp.asarray(arr)
+                new.append(arr)
+            out[group] = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), new)
+        return step, out, manifest.get("extra", {})

@@ -1,0 +1,110 @@
+"""Optimizers (no optax dependency): AdamW + SGDM, schedules, clipping.
+
+Optimizer state mirrors the parameter pytree, so the same logical-axis
+sharding rules shard it (ZeRO/FSDP falls out of `fsdp` rules for free).
+``state_dtype`` trades optimizer-state memory for precision — the 405B
+single-pod memory table in EXPERIMENTS.md uses bf16 moments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32  # bf16 halves optimizer memory
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment  (pytree like params)
+    nu: Any       # second moment (pytree like params; zeros for sgdm)
+
+
+def init(cfg: OptConfig, params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros2)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply(
+    cfg: OptConfig, params, grads, state: OptState
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        if cfg.name == "adamw":
+            m1 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v1 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m1 / bc1
+            vhat = v1 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), m1.astype(cfg.state_dtype),
+                    v1.astype(cfg.state_dtype))
+        elif cfg.name == "sgdm":
+            m1 = b1 * m.astype(jnp.float32) + gf
+            new_p = p.astype(jnp.float32) - lr * m1
+            return (new_p.astype(p.dtype), m1.astype(cfg.state_dtype), v)
+        raise ValueError(cfg.name)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step, new_m, new_v), metrics

@@ -1,0 +1,90 @@
+"""Train-step builder: loss -> grads -> (optional compression) -> update.
+
+`build_train_step(cfg, opt_cfg, ...)` returns a pure function
+(params, opt_state, batch, extras) -> (params, opt_state, metrics)
+suitable for jax.jit with explicit in/out shardings (launch/dryrun.py)
+or plain CPU execution (tests). Gradient accumulation runs as a
+`lax.scan` over microbatches — activation memory scales with the
+microbatch while keeping arithmetic identical (sum of grads); this is
+also the straggler-tolerant step shape (uniform microbatch work).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+
+from . import compress as compress_mod
+from . import optimizer as opt_mod
+
+
+def loss_and_grads(params, batch, cfg: ModelConfig):
+    (loss, metrics), grads = jax.value_and_grad(
+        model_mod.loss_fn, has_aux=True)(params, batch, cfg)
+    return loss, metrics, grads
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt_mod.OptConfig,
+    *,
+    grad_accum: int = 1,
+    compression: bool = False,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch [, error_state])."""
+
+    def single(params, batch):
+        _, metrics, grads = loss_and_grads(params, batch, cfg)
+        return metrics, grads
+
+    def accumulated(params, batch):
+        # batch leaves [B, ...] -> [A, B/A, ...]
+        def split(x):
+            b = x.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            acc, _ = carry
+            metrics, grads = single(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            return (acc, metrics), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zeros, {"loss": jnp.zeros((), jnp.float32),
+                           "ntokens": jnp.zeros((), jnp.float32),
+                           "ppl_proxy": jnp.zeros((), jnp.float32),
+                           "moe_loss": jnp.zeros((), jnp.float32),
+                           "total_loss": jnp.zeros((), jnp.float32)}),
+            micro)
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        return metrics, grads
+
+    def train_step(params, opt_state, batch, error_state=None):
+        if grad_accum > 1:
+            metrics, grads = accumulated(params, batch)
+        else:
+            metrics, grads = single(params, batch)
+        if compression:
+            assert error_state is not None
+            grads, error_state = compress_mod.ef_quantize(
+                grads, error_state)
+        params, opt_state, opt_metrics = opt_mod.apply(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        if compression:
+            return params, opt_state, error_state, metrics
+        return params, opt_state, metrics
+
+    return train_step

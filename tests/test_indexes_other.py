@@ -1,0 +1,78 @@
+"""IMI / graph (HNSW-style) / SRS behavior tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.indexes import graph, imi, srs
+from repro.core.metrics import workload_metrics
+
+K = 5
+
+
+@pytest.fixture(scope="module")
+def bf(walk_data, walk_queries):
+    return S.brute_force(jnp.asarray(walk_queries),
+                         jnp.asarray(walk_data), K)
+
+
+def test_imi_recall_improves_with_nprobe(walk_data, walk_queries, bf):
+    idx = imi.build(walk_data, kc=8, m=16, kmeans_iters=10)
+    r1 = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=1)
+    r2 = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=32)
+    m1 = workload_metrics(r1.ids, r1.dists, bf.ids, bf.dists)
+    m2 = workload_metrics(r2.ids, r2.dists, bf.ids, bf.dists)
+    assert m2["avg_recall"] >= m1["avg_recall"]
+    assert m2["avg_recall"] > 0.4
+
+
+def test_imi_refine_closes_the_map_gap(walk_data, walk_queries, bf):
+    """Paper finding C4: ADC-only IMI has MAP below its recall; raw
+    re-ranking recovers it."""
+    idx = imi.build(walk_data, kc=8, m=16, kmeans_iters=10)
+    plain = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=64)
+    ref = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=64,
+                    refine=True)
+    mp = workload_metrics(plain.ids, plain.dists, bf.ids, bf.dists)
+    mr = workload_metrics(ref.ids, ref.dists, bf.ids, bf.dists)
+    assert mr["map"] >= mp["map"]
+    assert mr["mre"] <= mp["mre"] + 1e-6
+
+
+def test_graph_beam_width_tradeoff(walk_data, walk_queries, bf):
+    idx = graph.build(walk_data, m_links=8)
+    lo = graph.query(idx, jnp.asarray(walk_queries), K, efs=8)
+    hi = graph.query(idx, jnp.asarray(walk_queries), K, efs=128)
+    mlo = workload_metrics(lo.ids, lo.dists, bf.ids, bf.dists)
+    mhi = workload_metrics(hi.ids, hi.dists, bf.ids, bf.dists)
+    assert mhi["avg_recall"] >= mlo["avg_recall"]
+    assert mhi["avg_recall"] > 0.6
+
+
+def test_graph_is_ng_only_interface(walk_data):
+    """Graph query takes no guarantee params — Table 1 categorization."""
+    import inspect
+
+    sig = inspect.signature(graph.query)
+    assert "epsilon" not in sig.parameters
+    assert "delta" not in sig.parameters
+
+
+def test_srs_delta_controls_scan_depth(walk_data, walk_queries, bf):
+    idx = srs.build(walk_data, m=16)
+    loose = srs.query(idx, jnp.asarray(walk_queries), K, delta=0.5,
+                      epsilon=1.0)
+    tight = srs.query(idx, jnp.asarray(walk_queries), K, delta=0.99,
+                      epsilon=0.0)
+    assert int(loose.rows_scanned.sum()) <= int(tight.rows_scanned.sum())
+    m = workload_metrics(tight.ids, tight.dists, bf.ids, bf.dists)
+    assert m["avg_recall"] > 0.8
+
+
+def test_srs_tiny_index_footprint(walk_data):
+    """SRS's selling point: index (projections) is m/n of the data."""
+    idx = srs.build(walk_data, m=8)
+    feat_bytes = idx.feats.size * 4
+    data_bytes = idx.data.size * 4
+    assert feat_bytes <= data_bytes * 8 / walk_data.shape[1] + 1024

@@ -1,0 +1,90 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes (incl. non-tile-multiples) and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("n_rows", [1, 7, 256, 300])
+@pytest.mark.parametrize("n,l", [(64, 16), (256, 16), (96, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paa_matches_ref(n_rows, n, l, dtype):
+    x = rand((n_rows, n), dtype)
+    got = ops.paa(x, l, force_pallas=True, tile=64)
+    want = ref.ref_paa(x, l)
+    np.testing.assert_allclose(got, want, atol=2e-2 if
+                               dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("b,L,d", [(1, 3, 16), (5, 100, 32), (128, 512, 16),
+                                   (9, 700, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_box_mindist_matches_ref(b, L, d, dtype):
+    q = rand((b, d), dtype)
+    lo = rand((L, d), dtype) - 1.0
+    hi = lo + jnp.abs(rand((L, d), dtype))
+    w = jnp.abs(rand((d,), jnp.float32)) + 0.5
+    got = ops.box_mindist(q, lo, hi, w, force_pallas=True,
+                          tile_b=8, tile_l=64)
+    want = ref.ref_box_mindist(q, lo, hi, w)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,m,n", [(1, 1, 32), (4, 100, 256),
+                                   (130, 257, 100), (8, 64, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_matches_ref(b, m, n, dtype):
+    q = rand((b, n), dtype)
+    x = rand((m, n), dtype)
+    got = ops.l2(q, x, force_pallas=True, tile_b=8, tile_m=64, tile_k=128)
+    want = ref.ref_l2(q, x)
+    tol = 5e-1 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+def test_l2_padding_never_contaminates():
+    """Padded rows/cols must not alter real outputs."""
+    q = rand((3, 50))
+    x = rand((17, 50))
+    got = ops.l2(q, x, force_pallas=True, tile_b=8, tile_m=16, tile_k=64)
+    want = ref.ref_l2(q, x)
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+@pytest.mark.parametrize("m_rows,m,k", [(10, 8, 16), (512, 16, 256),
+                                        (1000, 4, 64)])
+def test_pq_adc_matches_ref(m_rows, m, k):
+    codes = jnp.asarray(RNG.integers(0, k, size=(m_rows, m)), jnp.int32)
+    lut = jnp.asarray(RNG.uniform(size=(m, k)), jnp.float32)
+    got = ops.pq_adc(codes, lut, force_pallas=True, tile_m=128)
+    want = ref.ref_pq_adc(codes, lut)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_l2_topk_agrees_with_sort():
+    q = rand((4, 64))
+    x = rand((200, 64))
+    d, i = ops.l2_topk(q, x, 10)
+    full = ref.ref_l2(q, x)
+    want = jnp.sort(full, axis=1)[:, :10]
+    np.testing.assert_allclose(d, want, atol=1e-4)
+
+
+def test_topk_merge_equals_global_sort():
+    d1 = rand((3, 20))
+    i1 = jnp.arange(60).reshape(3, 20)
+    top_d = jnp.full((3, 5), jnp.inf)
+    top_i = jnp.full((3, 5), -1, jnp.int32)
+    md, mi = ops.topk_merge(d1, i1, top_d, top_i)
+    np.testing.assert_allclose(md, jnp.sort(d1, axis=1)[:, :5], atol=0)

@@ -1,0 +1,61 @@
+"""Metric identities (paper §4.1), property-based."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import metrics as M
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def test_perfect_answers_score_one():
+    ids = jnp.asarray([[3, 1, 2]])
+    d = jnp.asarray([[1.0, 2.0, 3.0]])
+    assert float(M.recall(ids, ids)[0]) == 1.0
+    assert float(M.average_precision(ids, ids)[0]) == 1.0
+    assert float(M.relative_error(d, d)[0]) == 0.0
+
+
+def test_disjoint_answers_score_zero():
+    got = jnp.asarray([[7, 8, 9]])
+    true = jnp.asarray([[1, 2, 3]])
+    assert float(M.recall(got, true)[0]) == 0.0
+    assert float(M.average_precision(got, true)[0]) == 0.0
+
+
+@given(st.lists(st.integers(0, 50), min_size=5, max_size=5, unique=True),
+       st.lists(st.integers(0, 50), min_size=5, max_size=5, unique=True))
+@settings(**SETTINGS)
+def test_map_never_exceeds_recall(got, true):
+    """AP weights correct items by precision <= 1, so MAP <= recall."""
+    g = jnp.asarray([got])
+    t = jnp.asarray([true])
+    assert float(M.average_precision(g, t)[0]) <= \
+        float(M.recall(g, t)[0]) + 1e-6
+
+
+@given(st.integers(1, 5))
+@settings(**SETTINGS)
+def test_prefix_match_ap(k_hit):
+    """First k_hit of 5 correct (in true order) -> AP = k_hit/5."""
+    true = list(range(5))
+    got = true[:k_hit] + [100 + i for i in range(5 - k_hit)]
+    ap = float(M.average_precision(jnp.asarray([got]),
+                                   jnp.asarray([true]))[0])
+    np.testing.assert_allclose(ap, k_hit / 5, atol=1e-6)
+
+
+def test_missing_ids_do_not_count():
+    got = jnp.asarray([[-1, -1, 1]])
+    true = jnp.asarray([[1, 2, 3]])
+    assert float(M.recall(got, true)[0]) == np.float32(1 / 3)
+
+
+def test_mre_guards_zero_distance():
+    got = jnp.asarray([[0.0, 2.0]])
+    true = jnp.asarray([[0.0, 1.0]])
+    mre = float(M.relative_error(got, true)[0])
+    assert np.isfinite(mre)
+    np.testing.assert_allclose(mre, 1.0, atol=1e-5)

@@ -1,0 +1,82 @@
+"""QALSH behavior + index artifact persistence (checkpoint roundtrip,
+bf16 data variant)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.indexes import dstree, qalsh
+from repro.core.metrics import workload_metrics
+from repro.train.checkpoint import Checkpointer
+
+
+@pytest.fixture(scope="module")
+def bf(walk_data, walk_queries):
+    return S.brute_force(jnp.asarray(walk_queries),
+                         jnp.asarray(walk_data), 5)
+
+
+def test_qalsh_recall_grows_with_budget(walk_data, walk_queries, bf):
+    idx = qalsh.build(walk_data, m=8)
+    lo = qalsh.query(idx, jnp.asarray(walk_queries), 5, steps=1,
+                     frontier=16)
+    hi = qalsh.query(idx, jnp.asarray(walk_queries), 5, steps=6,
+                     frontier=64)
+    mlo = workload_metrics(lo.ids, lo.dists, bf.ids, bf.dists)
+    mhi = workload_metrics(hi.ids, hi.dists, bf.ids, bf.dists)
+    assert mhi["avg_recall"] >= mlo["avg_recall"]
+    assert mhi["avg_recall"] > 0.6
+    assert int(hi.rows_scanned.sum()) >= int(lo.rows_scanned.sum())
+
+
+def test_qalsh_refines_on_raw_distances(walk_data, walk_queries, bf):
+    """QALSH re-ranks candidates on true distances: recall == MAP
+    (paper C5 applies to it, unlike IMI)."""
+    idx = qalsh.build(walk_data, m=8)
+    res = qalsh.query(idx, jnp.asarray(walk_queries), 5, steps=6,
+                      frontier=64)
+    m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+    assert abs(m["avg_recall"] - m["map"]) < 1e-6
+
+
+def test_frozen_index_checkpoint_roundtrip(tmp_path, walk_data,
+                                           walk_queries, bf):
+    """The searchable artifact persists/restores through the same
+    checkpointer as model state (fault-tolerance for the search half)."""
+    idx = dstree.build(walk_data, leaf_cap=32)
+    ck = Checkpointer(str(tmp_path))
+    arrays = {
+        "box_lo": idx.box_lo, "box_hi": idx.box_hi,
+        "weights": idx.weights, "offsets": idx.offsets,
+        "data": idx.data, "ids": idx.ids,
+        "hist_edges": idx.hist.edges, "hist_cdf": idx.hist.cdf,
+    }
+    ck.save(1, {"index": arrays}, sync=True)
+    _, state, _ = ck.restore({"index": arrays})
+    from repro.core.histogram import DistanceHistogram
+
+    r = state["index"]
+    idx2 = dataclasses.replace(
+        idx, box_lo=r["box_lo"], box_hi=r["box_hi"],
+        weights=r["weights"], offsets=r["offsets"], data=r["data"],
+        ids=r["ids"],
+        hist=DistanceHistogram(r["hist_edges"], r["hist_cdf"]))
+    a = S.search(idx, jnp.asarray(walk_queries), 5)
+    b = S.search(idx2, jnp.asarray(walk_queries), 5)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(a.dists, b.dists, atol=0)
+
+
+def test_bf16_data_index_keeps_exact_ranking(walk_data, walk_queries,
+                                             bf):
+    """§Perf C1: bf16 refinement stream — MAP impact measured."""
+    idx = dstree.build(walk_data, leaf_cap=32, data_dtype=jnp.bfloat16)
+    assert idx.data.dtype == jnp.bfloat16
+    res = S.search(idx, jnp.asarray(walk_queries), 5)
+    m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+    assert m["avg_recall"] >= 0.95  # bf16 rounding may perturb ties
+    assert m["mre"] < 0.01

@@ -1,0 +1,122 @@
+"""Search correctness: Algorithm 1/2 semantics per index, guarantee
+properties (the paper's taxonomy, property-tested), counters."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.guarantees import Guarantee, delta_epsilon, epsilon, exact, ng
+from repro.core.indexes import dstree, isax, vafile
+from repro.core.metrics import workload_metrics
+
+K = 5
+
+
+@pytest.fixture(scope="module", params=["isax", "dstree", "vafile"])
+def built(request, walk_data):
+    builders = {
+        "isax": lambda d: isax.build(d, leaf_cap=32),
+        "dstree": lambda d: dstree.build(d, leaf_cap=32),
+        "vafile": lambda d: vafile.build(d),
+    }
+    vb = {"isax": 1, "dstree": 1, "vafile": 32}
+    return (request.param, builders[request.param](walk_data),
+            vb[request.param])
+
+
+@pytest.fixture(scope="module")
+def bf(walk_data, walk_queries):
+    return S.brute_force(jnp.asarray(walk_queries),
+                         jnp.asarray(walk_data), K)
+
+
+def test_exact_matches_brute_force(built, walk_queries, bf):
+    name, idx, vb = built
+    res = S.search(idx, jnp.asarray(walk_queries), K, visit_batch=vb)
+    np.testing.assert_allclose(res.dists, bf.dists, rtol=1e-3, atol=1e-3)
+    m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+    assert m["map"] == pytest.approx(1.0)
+    assert m["mre"] < 1e-3
+
+
+@pytest.mark.parametrize("eps", [0.1, 0.5, 2.0])
+def test_epsilon_guarantee_holds(built, walk_queries, bf, eps):
+    """Deterministic (1+eps) bound vs exact distances — Definition 5."""
+    name, idx, vb = built
+    res = S.search(idx, jnp.asarray(walk_queries), K, epsilon=eps,
+                   visit_batch=vb)
+    assert bool((res.dists <= (1 + eps) * bf.dists * (1 + 1e-4)
+                 + 1e-4).all())
+
+
+def test_epsilon_prunes_more_than_exact(built, walk_queries):
+    name, idx, vb = built
+    ex = S.search(idx, jnp.asarray(walk_queries), K, visit_batch=vb)
+    ap = S.search(idx, jnp.asarray(walk_queries), K, epsilon=2.0,
+                  visit_batch=vb)
+    assert int(ap.leaves_visited.sum()) <= int(ex.leaves_visited.sum())
+    assert int(ap.rows_scanned.sum()) <= int(ex.rows_scanned.sum())
+
+
+def test_delta_one_equals_epsilon_path(built, walk_queries):
+    """delta=1 must reduce delta-epsilon to plain epsilon (taxonomy)."""
+    name, idx, vb = built
+    a = S.search(idx, jnp.asarray(walk_queries), K, epsilon=0.5,
+                 visit_batch=vb)
+    b = S.search(idx, jnp.asarray(walk_queries), K, delta=1.0,
+                 epsilon=0.5, visit_batch=vb)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_allclose(a.dists, b.dists, atol=0)
+
+
+def test_delta_epsilon_is_at_least_as_fast(built, walk_queries):
+    name, idx, vb = built
+    e = S.search(idx, jnp.asarray(walk_queries), K, epsilon=0.5,
+                 visit_batch=vb)
+    de = S.search(idx, jnp.asarray(walk_queries), K, delta=0.9,
+                  epsilon=0.5, visit_batch=vb)
+    assert int(de.leaves_visited.sum()) <= int(e.leaves_visited.sum())
+
+
+def test_ng_respects_nprobe(built, walk_queries):
+    name, idx, vb = built
+    res = S.search(idx, jnp.asarray(walk_queries), K, nprobe=3,
+                   visit_batch=vb)
+    # batched visits may overshoot by < visit_batch, never more
+    assert int(res.leaves_visited.max()) <= 3
+    res2 = S.search(idx, jnp.asarray(walk_queries), K, nprobe=1,
+                    visit_batch=vb)
+    assert int(res2.leaves_visited.max()) <= 1
+    # first-leaf bsf is a valid answer; a 1-series leaf (VA+file) fills
+    # only the first slot — the paper's "visit one leaf" baseline
+    assert bool(jnp.isfinite(res2.dists[:, 0]).all())
+
+
+def test_visit_batch_does_not_change_exactness(built, walk_queries, bf):
+    name, idx, vb = built
+    res = S.search(idx, jnp.asarray(walk_queries), K, visit_batch=8)
+    np.testing.assert_allclose(res.dists, bf.dists, rtol=1e-3, atol=1e-3)
+
+
+def test_counters_monotone_in_accuracy(built, walk_queries):
+    name, idx, vb = built
+    probes = [1, 4, 16]
+    leaves = []
+    for p in probes:
+        r = S.search(idx, jnp.asarray(walk_queries), K, nprobe=p,
+                     visit_batch=vb)
+        leaves.append(int(r.leaves_visited.sum()))
+    assert leaves == sorted(leaves)
+
+
+def test_guarantee_kinds():
+    assert exact().kind == "exact"
+    assert epsilon(0.5).kind == "epsilon"
+    assert delta_epsilon(0.9, 0.1).kind == "delta-epsilon"
+    assert ng(4).kind == "ng"
+    assert Guarantee(delta=1.0, epsilon=0.0).kind == "exact"
+    with pytest.raises(ValueError):
+        Guarantee(delta=1.5).validate()
+    with pytest.raises(ValueError):
+        Guarantee(epsilon=-1.0).validate()

@@ -1,0 +1,117 @@
+"""Property tests (hypothesis): the LOWER-BOUNDING INVARIANT.
+
+Every guarantee in the paper rests on lb(Q, S) <= d(Q, S) for each
+summarization. We verify it for PAA (iSAX), EAPCA (DSTree) and DFT
+(VA+file) on arbitrary series, plus box-containment versions (distance
+to any box containing summarize(S) lower-bounds d(Q, S))."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.summaries import dft, eapca, paa, sax
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def series_pair(n):
+    return hnp.arrays(
+        np.float32, (2, n),
+        elements=st.floats(-50, 50, width=32,
+                           allow_nan=False, allow_infinity=False),
+    )
+
+
+def true_dist_sq(q, s):
+    d = q.astype(np.float64) - s.astype(np.float64)
+    return float((d * d).sum())
+
+
+@given(series_pair(64))
+@settings(**SETTINGS)
+def test_paa_lower_bounds(xs):
+    q, s = xs
+    l = 16
+    pq = np.asarray(paa.transform(jnp.asarray(q), l))
+    ps = np.asarray(paa.transform(jnp.asarray(s), l))
+    w = 64 / l
+    lb = w * ((pq - ps) ** 2).sum()
+    assert lb <= true_dist_sq(q, s) * (1 + 1e-4) + 1e-3
+
+
+@given(series_pair(64))
+@settings(**SETTINGS)
+def test_eapca_lower_bounds(xs):
+    q, s = xs
+    l = 8
+    eq = np.asarray(eapca.transform(jnp.asarray(q[None]), l))[0]
+    es = np.asarray(eapca.transform(jnp.asarray(s[None]), l))[0]
+    w = 64 / l
+    lb = w * ((eq - es) ** 2).sum()
+    assert lb <= true_dist_sq(q, s) * (1 + 1e-4) + 1e-3
+
+
+@given(series_pair(64), st.integers(2, 32))
+@settings(**SETTINGS)
+def test_dft_lower_bounds(xs, l):
+    q, s = xs
+    fq = np.asarray(dft.transform(jnp.asarray(q[None]), l))[0]
+    fs = np.asarray(dft.transform(jnp.asarray(s[None]), l))[0]
+    lb = ((fq - fs) ** 2).sum()
+    assert lb <= true_dist_sq(q, s) * (1 + 1e-4) + 1e-3
+
+
+@given(series_pair(64))
+@settings(**SETTINGS)
+def test_box_distance_lower_bounds_member_distance(xs):
+    """If box contains summarize(S), boxdist(q) <= sumdist(q, s)."""
+    q, s = xs
+    l = 16
+    pq = np.asarray(paa.transform(jnp.asarray(q), l))[None]
+    ps = np.asarray(paa.transform(jnp.asarray(s), l))
+    lo = (ps - np.abs(ps) * 0.1 - 0.01)[None]
+    hi = (ps + np.abs(ps) * 0.1 + 0.01)[None]
+    w = np.full(l, 64 / l, np.float32)
+    boxd = float(np.asarray(ref.ref_box_mindist(
+        jnp.asarray(pq), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(w)))[0, 0])
+    sumd = float((64 / l) * ((pq[0] - ps) ** 2).sum())
+    assert boxd <= sumd * (1 + 1e-4) + 1e-3
+
+
+def test_dft_is_isometry_prefix():
+    """Full-length DFT features preserve distances exactly (Parseval)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 64)).astype(np.float32)
+    f = np.asarray(dft.transform(jnp.asarray(x), 64))
+    d_time = ((x[0] - x[1]) ** 2).sum()
+    d_freq = ((f[0] - f[1]) ** 2).sum()
+    np.testing.assert_allclose(d_time, d_freq, rtol=1e-4)
+
+
+def test_sax_breakpoints_are_normal_quantiles():
+    b = sax.breakpoints(4)
+    assert len(b) == 3
+    np.testing.assert_allclose(b[1], 0.0, atol=1e-6)
+    assert b[0] < 0 < b[2]
+    b8 = sax.breakpoints(8)
+    assert np.all(np.diff(b8) > 0)
+
+
+def test_sax_encode_respects_breakpoints():
+    x = jnp.asarray(np.linspace(-3, 3, 64, dtype=np.float32)[None])
+    codes = np.asarray(sax.encode(x, 16, 8))
+    assert codes.min() >= 0 and codes.max() <= 7
+    assert np.all(np.diff(codes[0]) >= 0)  # increasing series -> symbols
+
+
+def test_eapca_uses_population_std():
+    """The bound needs ddof=0; ddof=1 would break lower-bounding."""
+    x = np.asarray([[1.0, 2.0, 3.0, 4.0]], np.float32)
+    e = np.asarray(eapca.transform(jnp.asarray(x), 1))[0]
+    np.testing.assert_allclose(e[0], 2.5, atol=1e-6)
+    np.testing.assert_allclose(e[1], np.std([1, 2, 3, 4]), atol=1e-6)

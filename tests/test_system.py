@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests: the paper's full pipeline on one box —
+generate data -> build indexes -> answer queries across the guarantee
+taxonomy -> evaluate with the paper's measures -> reproduce headline
+findings at reduced scale."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.guarantees import Guarantee
+from repro.core.histogram import build_histogram, f_of, r_delta
+from repro.core.indexes import dstree, isax
+from repro.core.metrics import workload_metrics
+from repro.data import queries as queries_mod
+from repro.data import randomwalk
+
+import jax
+
+
+@pytest.fixture(scope="module")
+def world():
+    data = randomwalk.generate(3, 1024, 128)
+    q = queries_mod.noisy_queries(data, 8)
+    bf = S.brute_force(jnp.asarray(q), jnp.asarray(data), 10)
+    return data, q, bf
+
+
+def test_full_pipeline_exact_answers(world):
+    data, q, bf = world
+    for build, vb in [(isax.build, 1), (dstree.build, 1)]:
+        idx = build(data, leaf_cap=64)
+        res = S.search(idx, jnp.asarray(q), 10, visit_batch=vb)
+        m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+        assert m["map"] == pytest.approx(1.0)
+        assert m["avg_recall"] == pytest.approx(1.0)
+
+
+def test_paper_c2_epsilon_buys_throughput_keeps_accuracy(world):
+    """Fig 8a-c: growing epsilon slashes work; accuracy stays ~1 for
+    small epsilon and empirical MRE << epsilon."""
+    data, q, bf = world
+    idx = dstree.build(data, leaf_cap=64)
+    work, maps, mres = [], [], []
+    for eps in (0.0, 0.5, 1.0, 2.0, 5.0):
+        r = S.search(idx, jnp.asarray(q), 10, epsilon=eps)
+        m = workload_metrics(r.ids, r.dists, bf.ids, bf.dists)
+        work.append(int(r.rows_scanned.sum()))
+        maps.append(m["map"])
+        mres.append(m["mre"])
+    assert work == sorted(work, reverse=True)
+    assert work[-1] < work[0]
+    assert maps[1] > 0.9  # eps=0.5 still near-exact
+    for eps, mre in zip((0.5, 1.0, 2.0, 5.0), mres[1:]):
+        assert mre <= eps + 1e-6  # guarantee
+        assert mre < 0.5 * eps + 0.05  # empirically far below (C2)
+
+
+def test_paper_c3_delta_stop_is_weak(world):
+    """Fig 8d-e: the histogram-estimated r_delta rarely triggers — the
+    negative result the paper reports."""
+    data, q, bf = world
+    idx = dstree.build(data, leaf_cap=64)
+    ex = S.search(idx, jnp.asarray(q), 10)
+    de = S.search(idx, jnp.asarray(q), 10, delta=0.99)
+    # delta=0.99 may prune a little but stays within 2x of exact work,
+    # and accuracy stays high
+    m = workload_metrics(de.ids, de.dists, bf.ids, bf.dists)
+    assert m["avg_recall"] > 0.8
+    assert int(de.leaves_visited.sum()) <= int(ex.leaves_visited.sum())
+
+
+def test_histogram_calibration(world):
+    data, q, bf = world
+    hist = build_histogram(data, jax.random.PRNGKey(0), n_pairs=20000)
+    # F is a CDF
+    assert float(f_of(hist, jnp.float32(0.0))) == pytest.approx(0.0,
+                                                                abs=1e-3)
+    big = float(hist.edges[-1])
+    assert float(f_of(hist, jnp.float32(big))) == pytest.approx(1.0,
+                                                                abs=1e-3)
+    # r_delta shrinks as delta -> 1 and as N grows
+    r9 = float(r_delta(hist, 0.9, 1024))
+    r99 = float(r_delta(hist, 0.99, 1024))
+    assert r99 <= r9
+    rbig = float(r_delta(hist, 0.9, 10**9))
+    assert rbig <= r9
+    assert float(r_delta(hist, 1.0, 1024)) == 0.0
+
+
+def test_ng_first_leaf_is_decent(world):
+    """The paper's baseline observation: the very first bsf (one leaf)
+    is already a usable answer (it's why ng-approximate works)."""
+    data, q, bf = world
+    idx = dstree.build(data, leaf_cap=64)
+    r = S.search(idx, jnp.asarray(q), 10, nprobe=1)
+    m = workload_metrics(r.ids, r.dists, bf.ids, bf.dists)
+    assert m["avg_recall"] > 0.3
+    assert m["mre"] < 0.5
