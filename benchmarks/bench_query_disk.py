@@ -1,20 +1,32 @@
-"""Paper Figure 4: on-disk regime — implementation-independent costs.
+"""Paper Figure 4: the on-disk regime, measured for real.
 
-No spinning disks here, so we report the paper's own hardware-neutral
-measures: fraction of raw data touched (sequential I/O proxy) and leaf
-gathers (random-I/O proxy), for the disk-capable methods only
-(Table 1's last column: iSAX2+/DSTree/VA+file/IMI)."""
+The storage tier (repro.store) persists each index as a leaf-contiguous
+on-disk artifact and serves queries with only the summaries on device,
+so this bench now reports REAL out-of-core costs instead of the old
+hardware-neutral proxies: bytes read from disk, device-cache hit rate,
+h2d bytes, and wall time for a cold cache (first pass over the store)
+vs a warm one (same batch again) — plus the paper's own
+implementation-independent counters (%data accessed, leaf gathers =
+random-I/O units) for continuity with Figure 4. IMI stays in-memory
+(proxy columns only): its ADC scan has no leaf store yet.
+"""
 
 from __future__ import annotations
 
+import os
+import tempfile
+import time
 from typing import List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import search as S
+from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree, imi, isax, vafile
 from repro.core.metrics import workload_metrics
+from repro.store import DeviceLeafCache
 
 from .common import csv_line, dataset, emit
 
@@ -25,29 +37,72 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     k, n = p["k"], p["n"]
     rows: List[dict] = []
 
-    def record(method, knob, res):
-        m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
-        frac = float(res.rows_scanned.mean()) / n
-        gathers = float(res.leaves_visited.mean())
-        rows.append({"bench": "query_disk", "method": method,
-                     "knob": knob, "data_accessed_frac": frac,
-                     "random_ios": gathers, **m})
-        print(csv_line(f"qdisk/{method}/{knob}", gathers,
-                       f"map={m['map']:.3f};data={frac:.4f}"))
-
     built = {
         "isax2+": (isax.build(data, leaf_cap=256), 1),
         "dstree": (dstree.build(data, leaf_cap=256), 1),
         "va+file": (vafile.build(data), 64),
     }
-    for name, (idx, vb) in built.items():
-        for eps in (2.0, 1.0, 0.0):
-            record(name, f"eps{eps}",
-                   S.search(idx, qj, k, delta=0.99, epsilon=eps,
-                            visit_batch=vb))
+
+    def timed_ooc(store, cache, vb, eps):
+        t0 = time.perf_counter()
+        out = S.search_ooc(store, qj, k, delta=0.99, epsilon=eps,
+                           visit_batch=vb, cache=cache)
+        jax.block_until_ready(out.result.dists)
+        return out, time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, (idx, vb) in built.items():
+            store_dir = idx.save(os.path.join(tmp, name))
+            store = FrozenIndex.load(store_dir, resident="summaries")
+            # device cache sized to an eighth of the leaves: strictly
+            # smaller than any visited working set at eps<=1
+            cap = max(store.num_leaves // 8, qj.shape[0] * vb)
+            for eps in (2.0, 1.0, 0.0):
+                cache = DeviceLeafCache(store, cap)
+                cold, t_cold = timed_ooc(store, cache, vb, eps)
+                cache.reset_counters()
+                warm, t_warm = timed_ooc(store, cache, vb, eps)
+                res = cold.result
+                m = workload_metrics(res.ids, res.dists, bf.ids,
+                                     bf.dists)
+                frac = float(res.rows_scanned.mean()) / n
+                gathers = float(res.leaves_visited.mean())
+                rows.append({
+                    "bench": "query_disk", "method": name,
+                    "knob": f"eps{eps}",
+                    "data_accessed_frac": frac,
+                    "random_ios": gathers,
+                    "bytes_read_cold": cold.stats["bytes_read"],
+                    "bytes_read_warm": warm.stats["bytes_read"],
+                    "bytes_h2d_cold": cold.stats["bytes_h2d"],
+                    "cache_hit_rate_cold": cold.stats["hit_rate"],
+                    "cache_hit_rate_warm": warm.stats["hit_rate"],
+                    "cache_capacity_leaves": cap,
+                    "dataset_bytes": cold.stats["dataset_bytes"],
+                    "prefetch_bytes_read":
+                        cold.stats.get("prefetch_bytes_read", 0),
+                    "t_cold_s": t_cold, "t_warm_s": t_warm,
+                    **m,
+                })
+                print(csv_line(
+                    f"qdisk/{name}/eps{eps}", t_cold * 1e6,
+                    f"map={m['map']:.3f};data={frac:.4f};"
+                    f"MBread={cold.stats['bytes_read'] / 1e6:.2f};"
+                    f"hit={cold.stats['hit_rate']:.2f};"
+                    f"whit={warm.stats['hit_rate']:.2f}"))
+
+    # IMI has no leaf store yet: keep the paper's proxy counters
     ii = imi.build(data, kc=16, m=16, kmeans_iters=10)
     for nprobe in (8, 64):
-        record("imi", f"nprobe{nprobe}",
-               imi.query(ii, qj, k, nprobe=nprobe))
+        res = imi.query(ii, qj, k, nprobe=nprobe)
+        m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
+        frac = float(res.rows_scanned.mean()) / n
+        gathers = float(res.leaves_visited.mean())
+        rows.append({"bench": "query_disk", "method": "imi",
+                     "knob": f"nprobe{nprobe}",
+                     "data_accessed_frac": frac, "random_ios": gathers,
+                     **m})
+        print(csv_line(f"qdisk/imi/nprobe{nprobe}", gathers,
+                       f"map={m['map']:.3f};data={frac:.4f}"))
     emit(rows, out_dir, "bench_query_disk")
     return rows

@@ -1,0 +1,79 @@
+"""Out-of-core search walkthrough: the paper's on-disk regime.
+
+Build an index, persist it as a leaf-contiguous store artifact, reload
+ONLY the summaries onto the device, and answer queries while the raw
+series stream from disk through a fixed-size device leaf cache fed by
+an async prefetcher. The answers are bit-identical to the in-memory
+path for every guarantee — only residency changes.
+
+    PYTHONPATH=src python examples/ooc_search.py
+"""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as S
+from repro.core.index import FrozenIndex
+from repro.core.indexes import dstree
+from repro.data import queries, randomwalk
+from repro.store import DeviceLeafCache
+
+N, LEN, K = 8192, 256, 10
+
+print(f"1. build: dstree over {N} random-walk series of length {LEN}")
+data = randomwalk.generate(seed=11, n_series=N, series_len=LEN)
+q = queries.noisy_queries(data, 16)
+qj = jnp.asarray(q)
+idx = dstree.build(data, leaf_cap=256)
+print(f"   {idx.num_leaves} leaves, raw payload "
+      f"{np.asarray(idx.data).nbytes / 1e6:.1f} MB on device")
+
+with tempfile.TemporaryDirectory() as tmp:
+    store_dir = os.path.join(tmp, "dstree_store")
+    print(f"2. save: FrozenIndex.save -> leaf-contiguous data.bin + "
+          f"sidecar")
+    idx.save(store_dir)
+    for f in sorted(os.listdir(store_dir)):
+        sz = os.path.getsize(os.path.join(store_dir, f))
+        print(f"   {f:12s} {sz / 1e6:8.3f} MB")
+
+    print("3. load resident='summaries': raw data STAYS on disk")
+    store = FrozenIndex.load(store_dir, resident="summaries")
+    print(f"   device-resident placeholder rows: "
+          f"{store.resident.data.shape[0]} (filter state only)")
+
+    cap = max(store.num_leaves // 4, 16)
+    print(f"4. search_ooc with a {cap}-leaf device cache "
+          f"({cap}/{store.num_leaves} of the payload resident at once)")
+    cache = DeviceLeafCache(store, cap)
+
+    t0 = time.perf_counter()
+    cold = S.search_ooc(store, qj, K, epsilon=1.0, cache=cache)
+    jax.block_until_ready(cold.result.dists)
+    t_cold = time.perf_counter() - t0
+    cache.reset_counters()
+    t0 = time.perf_counter()
+    warm = S.search_ooc(store, qj, K, epsilon=1.0, cache=cache)
+    jax.block_until_ready(warm.result.dists)
+    t_warm = time.perf_counter() - t0
+
+    ref = S.search(idx, qj, K, epsilon=1.0)
+    same = bool(np.array_equal(np.asarray(ref.ids),
+                               np.asarray(cold.result.ids)))
+    print(f"   identical top-{K} to the in-memory search: {same}")
+    for tag, out, t in (("cold", cold, t_cold), ("warm", warm, t_warm)):
+        s = out.stats
+        print(f"   {tag}: {t * 1e3:7.1f} ms  "
+              f"disk={s['bytes_read'] / 1e6:6.2f} MB  "
+              f"h2d={s['bytes_h2d'] / 1e6:6.2f} MB  "
+              f"hit_rate={s['hit_rate']:.2f}  "
+              f"prefetch_staged={s['prefetch_hits']}/{s['misses']}")
+
+print("\nthe warm pass reads fewer bytes at a higher hit rate — the "
+      "cache + prefetcher turn the paper's on-disk regime into a "
+      "served workload instead of a proxy metric.")

@@ -1,0 +1,36 @@
+"""Version-spanning JAX API shims.
+
+The repo targets the installed jax (0.4.x) while staying forward
+compatible with the renamed/moved APIs in newer releases. Keep every
+cross-version guard here so call sites stay clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map (>=0.5, `check_vma`) or the 0.4.x
+    jax.experimental.shard_map (`check_rep`)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=check)
+        except TypeError:  # intermediate releases: check_rep spelling
+            return sm(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as legacy
+
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
+def cost_analysis(compiled) -> dict:
+    """Compiled.cost_analysis() as a dict: 0.4.x returns a one-element
+    list of dicts (per program), newer JAX returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -13,10 +13,12 @@ Public API:
 from . import guarantees, histogram, index, metrics, search
 from .guarantees import EXACT, Guarantee, delta_epsilon, epsilon, exact, ng
 from .index import FrozenIndex
-from .search import SearchResult, brute_force, search_with_guarantee
+from .search import (SearchResult, brute_force, search_ooc,
+                     search_with_guarantee)
 
 __all__ = [
     "guarantees", "histogram", "index", "metrics", "search",
     "EXACT", "Guarantee", "delta_epsilon", "epsilon", "exact", "ng",
-    "FrozenIndex", "SearchResult", "brute_force", "search_with_guarantee",
+    "FrozenIndex", "SearchResult", "brute_force", "search_ooc",
+    "search_with_guarantee",
 ]

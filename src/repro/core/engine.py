@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -33,11 +34,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .guarantees import Guarantee
 from .histogram import DistanceHistogram, build_histogram
 from .index import FrozenIndex
 from .indexes import dstree, isax, vafile
-from .search import SearchResult, search
+from .search import SearchResult, search_impl
 
 _BUILDERS = {
     "isax2+": isax.build,
@@ -60,6 +63,12 @@ class DistributedEngine:
     axes: Tuple[str, ...] = ("data",)
     method: str = "dstree"
     stacked: Optional[FrozenIndex] = None  # leading shard axis on arrays
+    shard_dirs: Optional[Tuple[str, ...]] = None  # spilled store dirs
+    # jitted query fns keyed by (k, guarantee, batch shape, ...): the
+    # shard_map body closes over those values, so a fresh closure per
+    # call would defeat jit's compile cache
+    _query_fns: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_shards(self) -> int:
@@ -70,11 +79,19 @@ class DistributedEngine:
         return out
 
     # ------------------------------------------------------------------
-    def build(self, data: np.ndarray, key=None, **params):
+    def build(self, data: np.ndarray, key=None,
+              spill_dir: Optional[str] = None, **params):
         """Shard rows, build per-shard indexes (embarrassingly parallel
         on hosts), stack and device_put with the shard axis mapped onto
-        the mesh axes."""
+        the mesh axes.
+
+        ``spill_dir`` additionally persists every shard as an on-disk
+        store artifact (spill_dir/shard_NNNN, global ids and global
+        n_total preserved) so shards can later be served out-of-core
+        via FrozenIndex.load(..., resident="summaries") + search_ooc —
+        the path toward collections larger than pod HBM."""
         key = key if key is not None else jax.random.PRNGKey(0)
+        self._query_fns.clear()  # compiled against the previous index
         n = data.shape[0]
         s = self.n_shards
         bounds = np.linspace(0, n, s + 1).astype(np.int64)
@@ -84,6 +101,7 @@ class DistributedEngine:
         builder = _BUILDERS[self.method]
 
         shards = []
+        spill_dirs = []
         for si in range(s):
             lo, hi = bounds[si], bounds[si + 1]
             idx = builder(data[lo:hi], hist=hist, key=key, **params)
@@ -92,7 +110,11 @@ class DistributedEngine:
             ids = np.where(ids >= 0, ids + lo, -1)
             idx = dataclasses.replace(
                 idx, ids=jnp.asarray(ids, jnp.int32), n_total=n)
+            if spill_dir is not None:
+                d = os.path.join(spill_dir, f"shard_{si:04d}")
+                spill_dirs.append(idx.save(d))
             shards.append(idx)
+        self.shard_dirs = tuple(spill_dirs) if spill_dirs else None
 
         # uniform static metadata + padded array shapes across shards
         max_leafL = max(sh.num_leaves for sh in shards)
@@ -153,6 +175,11 @@ class DistributedEngine:
         assert self.stacked is not None, "build() first"
         idx = self.stacked
         b = queries.shape[0]
+        cache_key = (k, g.delta, g.epsilon, g.nprobe, visit_batch,
+                     sync_bsf, b, queries.shape[-1])
+        cached = self._query_fns.get(cache_key)
+        if cached is not None:
+            return cached(idx, queries)
         axes = self.axes
         spec_shard = P(axes if len(axes) > 1 else axes[0])
         in_specs = (
@@ -178,9 +205,12 @@ class DistributedEngine:
             lidx = dataclasses.replace(
                 idx_local, box_lo=sq[0], box_hi=sq[1], offsets=sq[2],
                 data=sq[3], ids=sq[4])
-            res = search(lidx, q, k, delta=delta, epsilon=epsilon,
-                         nprobe=nprobe, visit_batch=visit_batch,
-                         sync_axes=tuple(axes) if sync_bsf else ())
+            # search_impl, not search: an inner jit under shard_map
+            # miscompiles the refinement loop on jax 0.4.x.
+            res = search_impl(
+                lidx, q, k, delta=delta, epsilon=epsilon,
+                nprobe=nprobe, visit_batch=visit_batch,
+                sync_axes=tuple(axes) if sync_bsf else ())
             # gather per-shard top-k along a new leading axis and merge
             all_d = jax.lax.all_gather(res.dists, axes[-1], tiled=False)
             all_i = jax.lax.all_gather(res.ids, axes[-1], tiled=False)
@@ -199,8 +229,15 @@ class DistributedEngine:
             return SearchResult(sd[:, :k], si[:, :k], leaves, rows, lbs)
 
         out_specs = SearchResult(P(), P(), P(), P(), P())
-        fn = jax.shard_map(
+        # The shard_map'ed fn is called EAGERLY on purpose: on jax
+        # 0.4.x, putting this under jax.jit (inner OR outer) miscompiles
+        # the refinement while_loop — verified wrong neighbors on
+        # 0.4.37; eager execution is correct. Reusing the same wrapped
+        # callable via _query_fns still avoids per-call closure
+        # rebuilding and retracing.
+        fn = compat.shard_map(
             local, mesh=self.mesh, in_specs=in_specs,
-            out_specs=out_specs, check_vma=False,
+            out_specs=out_specs, check=False,
         )
+        self._query_fns[cache_key] = fn
         return fn(idx, queries)

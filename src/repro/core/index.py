@@ -60,6 +60,23 @@ class FrozenIndex:
             return dft_mod.transform(q, self.n_summary)
         raise ValueError(self.summary)
 
+    # --- out-of-core storage tier (repro.store) ---
+    def save(self, directory: str) -> str:
+        """Persist as an on-disk artifact (leaf-contiguous data.bin +
+        sidecar); reload with :meth:`load`."""
+        from repro.store import layout
+
+        return layout.save_index(self, directory)
+
+    @classmethod
+    def load(cls, directory: str, resident: str = "full"):
+        """resident="full" -> FrozenIndex (bit-exact round trip);
+        resident="summaries" -> repro.store.LeafStore whose raw data
+        stays on disk (serve with core.search.search_ooc)."""
+        from repro.store import layout
+
+        return layout.load_index(directory, resident=resident)
+
 
 jax.tree_util.register_dataclass(
     FrozenIndex,

@@ -28,7 +28,6 @@ necessary, never fewer, so guarantees are preserved.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -62,12 +61,7 @@ def _batched_sq_l2(q: jax.Array, rows: jax.Array) -> jax.Array:
     return jnp.maximum(qn - 2.0 * cross + rn, 0.0)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "nprobe", "visit_batch", "force_pallas",
-                     "sync_axes", "share_gathers"),
-)
-def search(
+def search_impl(
     index: FrozenIndex,
     queries: jax.Array,  # [B, n]
     k: int,
@@ -210,6 +204,29 @@ def search(
         rows_scanned=final.rows,
         lb_computed=jnp.int32(L),
     )
+
+
+# Public jitted entry point. Callers already inside a shard_map region
+# must use `search_impl` directly: nesting this jit under shard_map
+# miscompiles the while_loop on jax 0.4.x (the refinement loop exits
+# after ~2 iterations with check_rep=False), observed on 0.4.37.
+search = jax.jit(
+    search_impl,
+    static_argnames=("k", "nprobe", "visit_batch", "force_pallas",
+                     "sync_axes", "share_gathers"),
+)
+
+
+def search_ooc(store, queries: jax.Array, k: int, **kw):
+    """Out-of-core Algorithm 2 over a LeafStore (see repro.store):
+    identical visit order and stopping predicates to :func:`search` —
+    only residency differs, so every guarantee transfers. Accepts
+    delta/epsilon/nprobe/visit_batch plus cache/cache_leaves/prefetch;
+    returns OocResult(result=SearchResult, stats={bytes_read,
+    hit_rate, ...})."""
+    from repro.store.ooc import search_ooc as impl
+
+    return impl(store, queries, k, **kw)
 
 
 def search_with_guarantee(

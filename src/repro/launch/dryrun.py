@@ -15,6 +15,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
                            shape_applicable)
 from repro.launch import analytic  # noqa: E402
@@ -180,7 +181,7 @@ def lower_cell(
     })
     # the two required printouts
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed")
            if k in ca})
     return report

@@ -13,9 +13,10 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core.histogram import DistanceHistogram  # noqa: E402
 from repro.core.index import FrozenIndex  # noqa: E402
-from repro.core.search import SearchResult, search  # noqa: E402
+from repro.core.search import SearchResult, search_impl  # noqa: E402
 from repro.launch import roofline as roof  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
@@ -103,8 +104,9 @@ def lower_search(mesh, *, n_per_shard=2_000_000, series_len=256,
         lidx = dataclasses.replace(
             idx_local, box_lo=sq[0], box_hi=sq[1], offsets=sq[2],
             data=sq[3], ids=sq[4])
-        res = search(lidx, q, k, nprobe=nprobe, visit_batch=visit_batch,
-                     share_gathers=coop)
+        res = search_impl(lidx, q, k, nprobe=nprobe,
+                          visit_batch=visit_batch,
+                          share_gathers=coop)
         all_d = res.dists
         all_i = res.ids
         for ax in axes:
@@ -120,9 +122,9 @@ def lower_search(mesh, *, n_per_shard=2_000_000, series_len=256,
                             jax.lax.psum(res.rows_scanned, axes),
                             jax.lax.psum(res.lb_computed, axes))
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                       out_specs=SearchResult(P(), P(), P(), P(), P()),
-                       check_vma=False)
+    fn = compat.shard_map(local, mesh=mesh, in_specs=in_specs,
+                          out_specs=SearchResult(P(), P(), P(), P(), P()),
+                          check=False)
     t0 = time.time()
     lowered = jax.jit(fn).lower(idx, q_sds)
     compiled = lowered.compile()
@@ -162,7 +164,7 @@ def lower_search(mesh, *, n_per_shard=2_000_000, series_len=256,
         "n_total_series": idx.n_total,
     })
     print(compiled.memory_analysis())
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     print({kk: ca[kk] for kk in ("flops", "bytes accessed") if kk in ca})
     return rep
 

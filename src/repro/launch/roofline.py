@@ -234,7 +234,9 @@ def roofline_report(
     The collective term is parsed from the partitioned HLO with while
     trip-count scaling.
     """
-    ca = compiled.cost_analysis() or {}
+    from repro import compat
+
+    ca = compat.cost_analysis(compiled)
     raw_flops_dev = float(ca.get("flops", 0.0))
     raw_bytes_dev = float(ca.get("bytes accessed", 0.0))
     flops_dev = (analytic_flops_global / world

@@ -67,9 +67,13 @@ def _act_axes(name):
 
 
 def ambient_axis_sizes() -> dict:
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and not am.empty:
-        return dict(zip(am.axis_names, am.axis_sizes))
+    # jax.sharding.get_abstract_mesh only exists in newer JAX releases
+    # (>= 0.5); on 0.4.x fall through to the legacy mesh context.
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        am = get_am()
+        if am is not None and not am.empty:
+            return dict(zip(am.axis_names, am.axis_sizes))
     try:  # legacy `with mesh:` context
         from jax._src import mesh as mesh_lib
 

@@ -1,0 +1,52 @@
+"""Out-of-core storage tier: the paper's on-disk regime, first class.
+
+The paper's headline finding is that data-series methods win when the
+collection does NOT fit in memory; this package makes that a real
+workload instead of a hardware-neutral proxy. Design (one screen):
+
+  Residency split.  A built FrozenIndex factors into a SMALL filter
+  state (leaf boxes, weights, offsets, ids, distance histogram —
+  O(L·D + N) scalars) and a LARGE payload (the [N, n] leaf-contiguous
+  raw series). ``FrozenIndex.save(dir)`` persists both; at load time
+  ``resident="full"`` reconstitutes the device artifact bit-exactly,
+  while ``resident="summaries"`` keeps only the filter state on device
+  and opens the payload as an np.memmap (layout.LeafStore). Because the
+  rows are leaf-contiguous, one leaf visit is one contiguous read — the
+  sequential-I/O unit Hercules/ParIS organize their disk layout around.
+
+  Device leaf cache (cache.DeviceLeafCache).  A fixed slot pool
+  [capacity, max_leaf, series_len] on device, host-side leaf->slot map
+  with CLOCK (second-chance) eviction, hit/miss/bytes counters, and one
+  batched h2d scatter per search iteration for all missing leaves.
+
+  Prefetcher (prefetch.LeafPrefetcher).  A daemon thread stages the
+  NEXT iteration's predicted leaves (each lane's next ranks in its
+  visit order) into padded host buffers while the device scores the
+  current batch — disk latency overlaps compute, double-buffered via a
+  bounded staging area; a mispredicted (early-stopped) lane wastes at
+  most ``depth`` batches.
+
+  Search (ooc.search_ooc).  The filter stage runs on device over the
+  resident summaries EXACTLY as core.search.search; the refinement
+  loop moves to the host so it can perform I/O, but visits leaves in
+  the same order, scores the same candidate layout with the same
+  kernels, and evaluates the same f32 stopping predicates — so the
+  exact / epsilon-approximate / delta-epsilon guarantees of
+  Algorithm 2 are preserved verbatim (tests/test_store.py asserts
+  top-k parity with the in-memory path under tiny caches).
+
+Follow-ups tracked in ROADMAP "Open items": compressed leaf payloads
+(bf16 already supported end-to-end; PQ/zstd leaves next), NUMA-aware
+read scheduling, and multi-host spill for DistributedEngine (today each
+shard spills to its own store directory via ``build(spill_dir=...)``).
+"""
+
+from .cache import DeviceLeafCache
+from .layout import LeafStore, load_index, save_index
+from .ooc import OocResult, search_ooc
+from .prefetch import LeafPrefetcher
+
+__all__ = [
+    "DeviceLeafCache", "LeafStore", "LeafPrefetcher", "OocResult",
+    "load_index", "save_index", "search_ooc",
+]

@@ -1,0 +1,188 @@
+"""On-disk artifact format and the LeafStore handle.
+
+A saved index is a directory:
+
+    meta.json      format version + the FrozenIndex static metadata,
+                   array shapes and the raw-data dtype
+    data.bin       [npad, series_len] raw series in the index dtype,
+                   LEAF-CONTIGUOUS (row i of leaf l lives at
+                   offsets[l] + i) — one leaf is one contiguous byte
+                   range, so a leaf visit is a single sequential read
+    sidecar.npz    box_lo / box_hi / weights / offsets / ids and the
+                   distance-histogram edges/cdf (all small, device
+                   resident at load time)
+
+``save_index`` persists any FrozenIndex bit-exactly; ``load_index``
+either reconstitutes the full device-resident FrozenIndex
+(resident="full") or returns a :class:`LeafStore` (resident="summaries")
+that keeps only the filter-stage state on device and opens ``data.bin``
+via np.memmap for the refinement stage to stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import DistanceHistogram
+from repro.core.index import FrozenIndex
+
+FORMAT_VERSION = 1
+META_NAME = "meta.json"
+DATA_NAME = "data.bin"
+SIDECAR_NAME = "sidecar.npz"
+
+
+def save_index(index: FrozenIndex, directory: str) -> str:
+    """Persist ``index`` under ``directory`` (created if missing)."""
+    os.makedirs(directory, exist_ok=True)
+    data = np.asarray(index.data)
+    meta = {
+        "format_version": FORMAT_VERSION,
+        "kind": index.kind,
+        "summary": index.summary,
+        "n_summary": index.n_summary,
+        "max_leaf": index.max_leaf,
+        "n_total": index.n_total,
+        "series_len": index.series_len,
+        "npad": int(data.shape[0]),
+        "n_leaves": int(index.num_leaves),
+        "n_dims": int(index.box_lo.shape[1]),
+        "data_dtype": str(jnp.dtype(index.data.dtype)),
+    }
+    data.tofile(os.path.join(directory, DATA_NAME))
+    np.savez(
+        os.path.join(directory, SIDECAR_NAME),
+        box_lo=np.asarray(index.box_lo),
+        box_hi=np.asarray(index.box_hi),
+        weights=np.asarray(index.weights),
+        offsets=np.asarray(index.offsets),
+        ids=np.asarray(index.ids),
+        hist_edges=np.asarray(index.hist.edges),
+        hist_cdf=np.asarray(index.hist.cdf),
+    )
+    with open(os.path.join(directory, META_NAME), "w") as f:
+        json.dump(meta, f, indent=1)
+    return directory
+
+
+@dataclasses.dataclass
+class LeafStore:
+    """Out-of-core residency: filter state on device, raw data on disk.
+
+    ``resident`` is a FrozenIndex whose ``data`` child is an EMPTY
+    [0, series_len] placeholder — everything the filter stage (lower
+    bounds, visit order, r_delta) and the id lookup of the refinement
+    stage need is device resident; the raw series are only reachable
+    through ``mmap`` (or a DeviceLeafCache layered on top of it).
+    """
+
+    directory: str
+    resident: FrozenIndex
+    mmap: np.memmap          # [npad, series_len], leaf-contiguous
+    meta: dict
+    offsets_h: np.ndarray    # [L+1] int64 host copy for disk reads
+
+    @property
+    def num_leaves(self) -> int:
+        return self.resident.num_leaves
+
+    @property
+    def max_leaf(self) -> int:
+        return self.resident.max_leaf
+
+    @property
+    def series_len(self) -> int:
+        return self.resident.series_len
+
+    @property
+    def data_dtype(self) -> np.dtype:
+        return self.mmap.dtype
+
+    def leaf_size(self, leaf: int) -> int:
+        return int(self.offsets_h[leaf + 1] - self.offsets_h[leaf])
+
+    def read_leaf(self, leaf: int, out: np.ndarray = None) -> np.ndarray:
+        """One leaf's rows, padded to [max_leaf, series_len].
+
+        A single contiguous range of ``data.bin`` — the sequential-read
+        unit the paper's on-disk evaluation is about.
+        """
+        lo = int(self.offsets_h[leaf])
+        hi = int(self.offsets_h[leaf + 1])
+        if out is None:
+            out = np.zeros((self.max_leaf, self.series_len),
+                           self.mmap.dtype)
+        else:
+            out[hi - lo:] = 0
+        out[: hi - lo] = self.mmap[lo:hi]
+        return out
+
+    def leaf_nbytes(self, leaf: int) -> int:
+        return self.leaf_size(leaf) * self.series_len \
+            * self.mmap.dtype.itemsize
+
+
+def load_index(
+    directory: str, resident: str = "full"
+) -> Union[FrozenIndex, LeafStore]:
+    """Open a saved index. resident="full" -> FrozenIndex (bit-exact
+    round trip, everything on device); resident="summaries" ->
+    LeafStore (raw data stays on disk)."""
+    with open(os.path.join(directory, META_NAME)) as f:
+        meta = json.load(f)
+    if meta["format_version"] != FORMAT_VERSION:
+        raise ValueError(
+            f"store format {meta['format_version']} != {FORMAT_VERSION}")
+    side = np.load(os.path.join(directory, SIDECAR_NAME))
+    dtype = jnp.dtype(meta["data_dtype"])
+    hist = DistanceHistogram(
+        edges=jnp.asarray(side["hist_edges"]),
+        cdf=jnp.asarray(side["hist_cdf"]),
+    )
+    statics = dict(
+        kind=meta["kind"], summary=meta["summary"],
+        n_summary=meta["n_summary"], max_leaf=meta["max_leaf"],
+        n_total=meta["n_total"], series_len=meta["series_len"],
+    )
+    mmap = np.memmap(
+        os.path.join(directory, DATA_NAME), dtype=np.dtype(dtype),
+        mode="r", shape=(meta["npad"], meta["series_len"]),
+    )
+    if resident == "full":
+        return FrozenIndex(
+            box_lo=jnp.asarray(side["box_lo"]),
+            box_hi=jnp.asarray(side["box_hi"]),
+            weights=jnp.asarray(side["weights"]),
+            offsets=jnp.asarray(side["offsets"]),
+            data=jnp.asarray(np.asarray(mmap), dtype),
+            ids=jnp.asarray(side["ids"]),
+            hist=hist,
+            **statics,
+        )
+    if resident != "summaries":
+        raise ValueError(f"resident must be 'full' or 'summaries', "
+                         f"got {resident!r}")
+    placeholder = jnp.zeros((0, meta["series_len"]), dtype)
+    res = FrozenIndex(
+        box_lo=jnp.asarray(side["box_lo"]),
+        box_hi=jnp.asarray(side["box_hi"]),
+        weights=jnp.asarray(side["weights"]),
+        offsets=jnp.asarray(side["offsets"]),
+        data=placeholder,
+        ids=jnp.asarray(side["ids"]),
+        hist=hist,
+        **statics,
+    )
+    return LeafStore(
+        directory=directory,
+        resident=res,
+        mmap=mmap,
+        meta=meta,
+        offsets_h=np.asarray(side["offsets"], np.int64),
+    )

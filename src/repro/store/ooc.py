@@ -1,0 +1,216 @@
+"""Out-of-core Algorithm 2: device filter, streamed refinement.
+
+Semantics are IDENTICAL to core.search.search — same lower-bound
+kernel, same argsort visit order, same candidate layout per iteration
+([V leaves x max_leaf positions] per lane, invalid positions masked to
+inf), same topk_merge, same stopping predicates evaluated in f32 — so
+the exact / epsilon / delta-epsilon guarantees transfer untouched; the
+ONLY difference is residency: raw rows are gathered from the
+DeviceLeafCache slot pool (fed from disk) instead of an HBM-resident
+data array.
+
+Control flow moves from lax.while_loop to a host loop because each
+iteration performs I/O. The host loop:
+
+  1. computes this iteration's leaf batch from the (host) visit order;
+  2. makes those leaves cache-resident (one batched h2d upload);
+  3. schedules NEXT iteration's predicted leaves on the prefetcher, so
+     the disk reads overlap the device scoring it is about to launch;
+  4. runs the jitted refine step (gather from slots -> fused L2 ->
+     topk merge) on device;
+  5. pulls back the per-lane kth-best and evaluates the paper's
+     stopping predicates in numpy f32 (bit-identical arithmetic to the
+     device f32 ops of the in-memory loop).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import r_delta
+from repro.core.search import INF, SearchResult, _batched_sq_l2
+from repro.kernels import ops
+
+from .cache import DeviceLeafCache
+from .layout import LeafStore
+from .prefetch import LeafPrefetcher
+
+
+class OocResult(NamedTuple):
+    result: SearchResult
+    stats: dict
+
+
+@jax.jit
+def _filter_stage(resident, q):
+    """Lower bound every leaf and derive the visit order (device)."""
+    q_sum = resident.summarize_queries(q)
+    lb_sq = ops.box_mindist(
+        q_sum, resident.box_lo, resident.box_hi, resident.weights)
+    order = jnp.argsort(lb_sq, axis=1)
+    lb_sorted = jnp.take_along_axis(lb_sq, order, axis=1)
+    return order, lb_sorted
+
+
+@jax.jit
+def _refine_step(qf, slots, flat_slot_idx, row_idx, top_d, top_i,
+                 valid, ids):
+    """One iteration's scoring: gather rows from the slot pool, fused
+    L2 against every lane, merge into the running top-k. Mirrors the
+    non-share_gathers branch of core.search.search_impl exactly."""
+    b = qf.shape[0]
+    n = qf.shape[1]
+    rows = slots.reshape(-1, n)[flat_slot_idx]       # [B, V*M, n]
+    cand_ids = jnp.where(valid, ids[row_idx], -1)
+    d = _batched_sq_l2(qf, rows)
+    d = jnp.where(valid, d, INF)
+    top_d, top_i = ops.topk_merge(d, cand_ids, top_d, top_i)
+    return top_d, top_i
+
+
+def search_ooc(
+    store: LeafStore,
+    queries: jax.Array,  # [B, n]
+    k: int,
+    *,
+    delta: float = 1.0,
+    epsilon: float = 0.0,
+    nprobe: Optional[int] = None,
+    visit_batch: int = 1,
+    cache: Optional[DeviceLeafCache] = None,
+    cache_leaves: Optional[int] = None,
+    prefetch: bool = True,
+) -> OocResult:
+    """k-NN over an on-disk index without device-resident raw data.
+
+    Pass ``cache`` to reuse (and warm) a cache across calls, or
+    ``cache_leaves`` to size a fresh one; default is 1/8 of the leaves
+    (clamped to at least one iteration's working set).
+    """
+    res = store.resident
+    b, n = queries.shape
+    L = res.num_leaves
+    m = res.max_leaf
+    v = int(visit_batch)
+    per_iter = b * v  # worst-case distinct leaves one iteration pins
+
+    own_prefetcher = None
+    if cache is None:
+        if cache_leaves is None:
+            cache_leaves = max(L // 8, 1)
+        cache_leaves = min(max(cache_leaves, per_iter), max(L, 1))
+        cache = DeviceLeafCache(store, cache_leaves)
+    if prefetch and cache.prefetcher is None:
+        own_prefetcher = LeafPrefetcher(store)
+        cache.prefetcher = own_prefetcher
+    pf_used = cache.prefetcher
+
+    order_d, lb_sorted_d = _filter_stage(res, queries)
+    order = np.asarray(order_d)
+    lb_sorted = np.asarray(lb_sorted_d)
+
+    eps_mult = np.float32((1.0 + epsilon) ** 2)
+    rd = float(r_delta(res.hist, delta, res.n_total))
+    rd_sq = np.float32(rd) * np.float32(rd)
+    max_rank = L if nprobe is None else min(nprobe, L)
+
+    qf = jnp.asarray(queries, jnp.float32)
+    top_d = jnp.full((b, k), INF)
+    top_i = jnp.full((b, k), -1, jnp.int32)
+    rank = np.zeros(b, np.int64)
+    active = np.ones(b, bool)
+    leaves_visited = np.zeros(b, np.int64)
+    rows_scanned = np.zeros(b, np.int64)
+
+    offs = store.offsets_h
+    sizes = offs[1:] - offs[:-1]
+    pos = np.arange(m)[None, None, :]
+    iters = 0
+
+    def iteration_leaves(ranks, act):
+        """[B, V] leaf per visit slot + in_range mask, like the device
+        body: ranks clamped to L-1, masked by max_rank and activity."""
+        rk = ranks[:, None] + np.arange(v)[None, :]
+        in_range = (rk < max_rank) & act[:, None]
+        return order[np.arange(b)[:, None], np.minimum(rk, L - 1)], \
+            in_range
+
+    try:
+        while active.any():
+            leaf, in_range = iteration_leaves(rank, active)
+            needed = np.unique(leaf[in_range])
+            slots = cache.get_slots(needed.tolist())
+            slot_of = dict(zip(needed.tolist(), slots.tolist()))
+
+            # overlap: stage the leaves the NEXT iteration will want
+            # while the device scores this one (skip leaves already
+            # cache-resident — a warm cache must not touch the disk)
+            if cache.prefetcher is not None:
+                nxt_rank = np.minimum(rank + v, max_rank)
+                nxt_leaf, nxt_in = iteration_leaves(nxt_rank, active)
+                nxt = [int(lf) for lf in np.unique(nxt_leaf[nxt_in])
+                       if int(lf) not in cache.slot_of]
+                if nxt:
+                    cache.prefetcher.schedule(nxt)
+
+            # candidate layout mirrors search_impl: [B, V, M] -> [B, V*M]
+            slot_arr = np.zeros_like(leaf)
+            for lf, s in slot_of.items():
+                slot_arr[leaf == lf] = s
+            start = offs[leaf]                         # [B, V]
+            valid = (pos < sizes[leaf][:, :, None]) & in_range[:, :, None]
+            row_idx = np.minimum(start[:, :, None] + pos,
+                                 offs[-1] - 1 if offs[-1] else 0)
+            flat_slot = slot_arr[:, :, None] * m + pos
+
+            top_d, top_i = _refine_step(
+                qf, cache.slots,
+                jnp.asarray(flat_slot.reshape(b, v * m), jnp.int32),
+                jnp.asarray(row_idx.reshape(b, v * m), jnp.int32),
+                top_d, top_i,
+                jnp.asarray(valid.reshape(b, v * m)),
+                res.ids,
+            )
+
+            leaves_visited += np.where(active, in_range.sum(1), 0)
+            rows_scanned += np.where(active, valid.sum((1, 2)), 0)
+
+            rank_next = np.minimum(rank + v, max_rank)
+            exhausted = rank_next >= max_rank
+            next_lb = np.where(
+                exhausted, np.float32(np.inf),
+                lb_sorted[np.arange(b), np.minimum(rank_next, L - 1)],
+            ).astype(np.float32)
+            bsf = np.asarray(top_d[:, k - 1])          # f32, sync point
+            stop = (next_lb * eps_mult > bsf) \
+                | (bsf <= eps_mult * rd_sq) \
+                | exhausted
+            active = active & ~stop
+            rank = rank_next
+            iters += 1
+    finally:
+        if own_prefetcher is not None:
+            own_prefetcher.close()
+            if cache.prefetcher is own_prefetcher:
+                cache.prefetcher = None
+
+    result = SearchResult(
+        dists=jnp.sqrt(top_d),
+        ids=top_i,
+        leaves_visited=jnp.asarray(leaves_visited, jnp.int32),
+        rows_scanned=jnp.asarray(rows_scanned, jnp.int32),
+        lb_computed=jnp.int32(L),
+    )
+    stats = dict(cache.stats())
+    stats["iterations"] = iters
+    stats["dataset_bytes"] = int(store.mmap.nbytes)
+    if pf_used is not None:
+        if cache.prefetcher is None:  # transient pf already detached:
+            stats["bytes_read"] += pf_used.bytes_read  # fold bytes in
+        stats["prefetch_bytes_read"] = pf_used.bytes_read
+        stats["prefetch_leaves_read"] = pf_used.leaves_read
+    return OocResult(result=result, stats=stats)

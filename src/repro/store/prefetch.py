@@ -1,0 +1,136 @@
+"""Async double-buffered host-side leaf prefetcher.
+
+The out-of-core search loop knows, while the device is scoring
+iteration t's leaves, exactly which leaves iteration t+1 will want
+(each query's next ranks in its lb visit order, assuming it stays
+active). ``schedule()`` hands that set to a daemon thread which reads
+the leaves from the memmap into padded host buffers; ``take()`` pops a
+staged buffer on the demand path. The staging area is bounded to
+``depth`` scheduled batches ("double-buffered" at the default depth=2),
+so a query that stops early wastes at most ``depth`` batches of reads.
+
+The prefetcher only READS (memmap -> host buffer). The device upload
+stays in DeviceLeafCache._fill, which already batches one scatter per
+iteration; overlapping h2d as well would need per-slot donation and
+buys little on top of overlapping the disk latency, which dominates.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .layout import LeafStore
+
+
+class LeafPrefetcher:
+    def __init__(self, store: LeafStore, depth: int = 2):
+        self.store = store
+        self.depth = int(depth)
+        self._lock = threading.Condition()
+        self._queue: collections.deque = collections.deque()
+        self._staged: "collections.OrderedDict[int, np.ndarray]" = \
+            collections.OrderedDict()
+        self._inflight: set = set()
+        self._wanted: set = set()
+        self._batches_staged: collections.deque = collections.deque()
+        self._stop = False
+        self._dead = False
+        self.bytes_read = 0          # includes speculative reads
+        self.leaves_read = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    def schedule(self, leaves: Sequence[int]) -> None:
+        """Stage a predicted next-iteration leaf batch (speculative)."""
+        batch = list(dict.fromkeys(int(x) for x in leaves))
+        with self._lock:
+            # bound the staging area: drop the oldest whole batch(es)
+            while len(self._batches_staged) >= self.depth:
+                old = self._batches_staged.popleft()
+                for lf in old:
+                    self._staged.pop(lf, None)
+            todo = [lf for lf in batch
+                    if lf not in self._staged and lf not in self._inflight]
+            self._batches_staged.append(batch)
+            # keep every structure bounded to the live batches: a leaf
+            # no longer in any tracked batch is dropped from the read
+            # queue and (if mid-read) its completion is discarded
+            self._wanted = set()
+            for bt in self._batches_staged:
+                self._wanted.update(bt)
+            self._queue = collections.deque(
+                lf for lf in self._queue if lf in self._wanted)
+            self._inflight &= self._wanted
+            self._inflight.update(todo)
+            self._queue.extend(todo)
+            self._lock.notify_all()
+
+    def take(self, leaf: int,
+             timeout: float = 10.0) -> Optional[np.ndarray]:
+        """Pop a staged leaf buffer; None if this leaf was never
+        scheduled (or was dropped / the thread died).
+
+        A leaf still queued or in flight is WAITED for: the thread is
+        reading it right now (or is about to), so waiting costs at most
+        the tail of one batch of reads, whereas returning None would
+        make the caller issue a duplicate synchronous read of bytes the
+        prefetcher already paid for. The prefetcher remains a pure
+        overlap optimization, never a correctness dependency — every
+        None falls back to a sync read in the cache.
+        """
+        leaf = int(leaf)
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while True:
+                if leaf in self._staged:
+                    return self._staged.pop(leaf)
+                if leaf not in self._inflight and leaf not in self._queue:
+                    return None
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or self._stop or self._dead:
+                    return None
+                self._lock.wait(remaining)
+
+    def close(self) -> None:
+        with self._lock:
+            self._stop = True
+            self._lock.notify_all()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
+    def _run(self) -> None:
+        try:
+            while True:
+                with self._lock:
+                    while not self._queue and not self._stop:
+                        self._lock.wait()
+                    if self._stop:
+                        return
+                    leaf = self._queue.popleft()
+                buf = self.store.read_leaf(leaf)
+                with self._lock:
+                    self._inflight.discard(leaf)
+                    if not self._stop and leaf in self._wanted:
+                        self._staged[leaf] = buf
+                    self._lock.notify_all()
+                self.bytes_read += self.store.leaf_nbytes(leaf)
+                self.leaves_read += 1
+        except Exception:  # I/O failure: unblock waiters, go demand-only
+            with self._lock:
+                self._dead = True
+                self._inflight.clear()
+                self._queue.clear()
+                self._lock.notify_all()

@@ -1,0 +1,108 @@
+"""Optional-hypothesis shim for the property-based test modules.
+
+When `hypothesis` is installed, re-exports the real `given`, `settings`,
+`strategies` and `hypothesis.extra.numpy`, so nothing changes. When it is
+missing (offline containers), provides a deterministic fallback: each
+strategy can draw concrete examples from a seeded Generator, and `given`
+re-runs the test body over a fixed sweep of draws. Coverage is thinner
+than real hypothesis but the invariants are still exercised, and — most
+importantly — collection no longer hard-errors the whole suite.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is present
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """Subset of hypothesis.strategies used by this repo's tests."""
+
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi, width=64, allow_nan=False,
+                   allow_infinity=False):
+            dt = np.float32 if width == 32 else np.float64
+            return _Strategy(
+                lambda rng: dt(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def lists(elems, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                out, seen = [], set()
+                # bounded rejection sampling for `unique`
+                for _ in range(1000):
+                    if len(out) == size:
+                        break
+                    v = elems.draw(rng)
+                    if unique:
+                        if v in seen:
+                            continue
+                        seen.add(v)
+                    out.append(v)
+                return out
+
+            return _Strategy(draw)
+
+    class _Hnp:
+        @staticmethod
+        def arrays(dtype, shape, elements=None):
+            def draw(rng):
+                if elements is None:
+                    flat = rng.standard_normal(int(np.prod(shape)))
+                else:
+                    flat = np.asarray(
+                        [elements.draw(rng)
+                         for _ in range(int(np.prod(shape)))])
+                return flat.reshape(shape).astype(dtype)
+
+            return _Strategy(draw)
+
+    def given(*strategies, **kw_strategies):
+        assert not kw_strategies, "shim supports positional strategies"
+
+        def deco(fn):
+            # Deliberately NOT functools.wraps: the wrapper must expose a
+            # zero-arg signature or pytest treats the drawn parameters as
+            # fixtures.
+            def run():
+                for ex in range(_FALLBACK_EXAMPLES):
+                    rng = np.random.default_rng(ex)
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*drawn)
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+
+        return deco
+
+    def settings(**_kw):  # deadline/max_examples are no-ops here
+        def deco(fn):
+            return fn
+
+        return deco
+
+    st = _St()
+    hnp = _Hnp()
+
+__all__ = ["given", "settings", "st", "hnp", "HAVE_HYPOTHESIS"]

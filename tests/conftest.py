@@ -6,6 +6,15 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tier1: fast core subset (scripts/verify.sh runs it first)")
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute model/distributed smoke tests")
+
+
 @pytest.fixture(scope="session")
 def walk_data():
     """Z-normalized random-walk collection [512, 128] (paper's Rand)."""

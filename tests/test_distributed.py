@@ -117,13 +117,14 @@ def test_compressed_psum_wire_semantics():
     stdout = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.train.compress import compressed_psum
         mesh = jax.make_mesh((4,), ("pod",))
         x = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0
         def f(xs):
             return compressed_psum(xs, "pod")
-        y = jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                          out_specs=P("pod"))(x)
+        y = shard_map(f, mesh=mesh, in_specs=P("pod"),
+                      out_specs=P("pod"))(x)
         true = x.sum(axis=0, keepdims=True)
         err = float(jnp.abs(y[:1] - true).max())
         rel = err / float(jnp.abs(true).max())

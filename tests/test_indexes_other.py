@@ -8,6 +8,8 @@ from repro.core import search as S
 from repro.core.indexes import graph, imi, srs
 from repro.core.metrics import workload_metrics
 
+pytestmark = pytest.mark.tier1
+
 K = 5
 
 

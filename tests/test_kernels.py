@@ -8,6 +8,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.tier1
+
 RNG = np.random.default_rng(42)
 
 

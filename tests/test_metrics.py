@@ -2,10 +2,12 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+from _hyp import given, settings, st
 
 from repro.core import metrics as M
+
+pytestmark = pytest.mark.tier1
 
 SETTINGS = dict(max_examples=40, deadline=None)
 

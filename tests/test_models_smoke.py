@@ -13,6 +13,8 @@ from repro.models.params import initialize, param_count
 from repro.train import optimizer as opt_mod
 from repro.train.train_step import build_train_step
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 16
 

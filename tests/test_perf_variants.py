@@ -12,6 +12,8 @@ from repro.configs import get_smoke_config
 from repro.models import model as M
 from repro.models.params import initialize
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

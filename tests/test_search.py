@@ -10,6 +10,8 @@ from repro.core.guarantees import Guarantee, delta_epsilon, epsilon, exact, ng
 from repro.core.indexes import dstree, isax, vafile
 from repro.core.metrics import workload_metrics
 
+pytestmark = pytest.mark.tier1
+
 K = 5
 
 

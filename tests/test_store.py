@@ -1,0 +1,187 @@
+"""Out-of-core storage tier (repro.store): round-trip bit-exactness and
+search parity. The load-bearing claim is that search_ooc is the SAME
+algorithm as the in-memory search — identical visit order and stopping
+predicates, only residency differs — so every assertion here is exact
+equality, not tolerance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.engine import DistributedEngine
+from repro.core.index import FrozenIndex
+from repro.core.indexes import dstree, isax, vafile
+from repro.store import DeviceLeafCache, LeafPrefetcher, LeafStore
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def walk_data_mod(walk_data):
+    return walk_data
+
+
+@pytest.fixture(scope="module")
+def queries_mod(walk_queries):
+    return jnp.asarray(walk_queries)
+
+
+@pytest.fixture(scope="module")
+def built(walk_data_mod):
+    return dstree.build(walk_data_mod, leaf_cap=32)
+
+
+def assert_same(ref, got):
+    np.testing.assert_array_equal(np.asarray(ref.ids),
+                                  np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(ref.dists),
+                                  np.asarray(got.dists))
+    np.testing.assert_array_equal(np.asarray(ref.leaves_visited),
+                                  np.asarray(got.leaves_visited))
+    np.testing.assert_array_equal(np.asarray(ref.rows_scanned),
+                                  np.asarray(got.rows_scanned))
+
+
+def test_save_load_round_trip_bit_exact(built, tmp_path):
+    d = built.save(str(tmp_path / "idx"))
+    full = FrozenIndex.load(d)
+    for fld in ("box_lo", "box_hi", "weights", "offsets", "data", "ids"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(built, fld)),
+            np.asarray(getattr(full, fld)), err_msg=fld)
+    np.testing.assert_array_equal(np.asarray(built.hist.edges),
+                                  np.asarray(full.hist.edges))
+    for fld in ("kind", "summary", "n_summary", "max_leaf", "n_total",
+                "series_len"):
+        assert getattr(built, fld) == getattr(full, fld), fld
+
+
+def test_bf16_payload_round_trip(walk_data_mod, tmp_path):
+    ix = dstree.build(walk_data_mod, leaf_cap=32,
+                      data_dtype=jnp.bfloat16)
+    d = ix.save(str(tmp_path / "bf16"))
+    full = FrozenIndex.load(d)
+    assert full.data.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(ix.data),
+                                  np.asarray(full.data))
+
+
+def test_summaries_load_keeps_raw_data_off_device(built, tmp_path):
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    assert isinstance(store, LeafStore)
+    assert store.resident.data.shape[0] == 0         # placeholder only
+    assert isinstance(store.mmap, np.memmap)
+    assert store.mmap.shape[0] == np.asarray(built.data).shape[0]
+
+
+@pytest.mark.parametrize(
+    "delta,epsilon,nprobe",
+    [(1.0, 0.0, None),      # exact
+     (1.0, 1.0, None),      # epsilon-approximate
+     (0.99, 1.0, None),     # delta-epsilon
+     (1.0, 0.0, 4)])        # ng(nprobe)
+def test_ooc_matches_in_memory_small_cache(built, queries_mod, tmp_path,
+                                           delta, epsilon, nprobe):
+    """Cache (6 leaves) far smaller than the working set (16 leaves)."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    ref = S.search(built, queries_mod, 5, delta=delta, epsilon=epsilon,
+                   nprobe=nprobe)
+    ooc = S.search_ooc(store, queries_mod, 5, delta=delta,
+                       epsilon=epsilon, nprobe=nprobe, cache_leaves=6)
+    assert_same(ref, ooc.result)
+    assert ooc.stats["bytes_read"] > 0
+    assert ooc.stats["misses"] > 0
+
+
+def test_ooc_matches_for_vafile_visit_batch(walk_data_mod, queries_mod,
+                                            tmp_path):
+    """VA+file: a 'leaf' is a single series, visit_batch=64 per hop."""
+    va = vafile.build(walk_data_mod)
+    store = FrozenIndex.load(va.save(str(tmp_path / "va")),
+                             resident="summaries")
+    ref = S.search(va, queries_mod, 5, epsilon=1.0, visit_batch=64)
+    ooc = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+                       visit_batch=64, cache_leaves=400)
+    assert_same(ref, ooc.result)
+
+
+def test_ooc_matches_for_isax(walk_data_mod, queries_mod, tmp_path):
+    ix = isax.build(walk_data_mod, leaf_cap=32)
+    store = FrozenIndex.load(ix.save(str(tmp_path / "isax")),
+                             resident="summaries")
+    ref = S.search(ix, queries_mod, 5)
+    ooc = S.search_ooc(store, queries_mod, 5,
+                       cache_leaves=max(ix.num_leaves // 4, 6))
+    assert_same(ref, ooc.result)
+
+
+def test_warm_cache_hits_and_fewer_reads(built, queries_mod, tmp_path):
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    cache = DeviceLeafCache(store, capacity_leaves=store.num_leaves)
+    cold = S.search_ooc(store, queries_mod, 5, cache=cache)
+    cache.reset_counters()
+    warm = S.search_ooc(store, queries_mod, 5, cache=cache)
+    assert_same(cold.result, warm.result)
+    assert warm.stats["bytes_read"] == 0       # fully cache-resident
+    assert warm.stats["hit_rate"] == 1.0
+    assert cold.stats["bytes_read"] > 0
+
+
+def test_cache_eviction_counters_and_capacity(built, tmp_path):
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    cache = DeviceLeafCache(store, capacity_leaves=4)
+    L = store.num_leaves
+    cache.get_slots(list(range(4)))
+    assert cache.misses == 4 and cache.hits == 0
+    cache.get_slots([0, 1])                    # resident -> hits
+    assert cache.hits == 2
+    for lf in range(4, L):                     # forces eviction
+        cache.get_slots([lf])
+    assert cache.misses == L
+    assert cache.slots.shape[0] == 4           # pool never grows
+    assert len(cache.slot_of) <= 4
+    # evicted leaves must re-read
+    before = cache.bytes_read
+    cache.get_slots([0])
+    assert cache.bytes_read > before
+
+
+def test_prefetcher_stages_and_takes(built, tmp_path):
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    with LeafPrefetcher(store) as pf:
+        pf.schedule([0, 1, 2])
+        import time
+        deadline = time.time() + 5.0
+        got = None
+        while got is None and time.time() < deadline:
+            got = pf.take(1)
+            if got is None:
+                time.sleep(0.01)
+        assert got is not None
+        np.testing.assert_array_equal(got, store.read_leaf(1))
+        assert pf.take(1) is None              # popped exactly once
+
+
+def test_engine_spill_round_trip(walk_data_mod, queries_mod, tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = DistributedEngine(mesh, method="dstree")
+    eng.build(walk_data_mod, leaf_cap=32, spill_dir=str(tmp_path))
+    assert eng.shard_dirs is not None and len(eng.shard_dirs) == 1
+    store = FrozenIndex.load(eng.shard_dirs[0], resident="summaries")
+    assert store.meta["n_total"] == walk_data_mod.shape[0]
+    ref = S.brute_force(queries_mod, jnp.asarray(walk_data_mod), 5)
+    ooc = S.search_ooc(store, queries_mod, 5, cache_leaves=6)
+    np.testing.assert_array_equal(np.asarray(ref.ids),
+                                  np.asarray(ooc.result.ids))
+    # brute_force uses the fused l2 kernel; tolerance covers the f32
+    # summation-order difference vs the refinement einsum
+    np.testing.assert_allclose(np.asarray(ref.dists),
+                               np.asarray(ooc.result.dists),
+                               rtol=1e-4, atol=1e-4)

@@ -8,12 +8,12 @@ to any box containing summarize(S) lower-bounds d(Q, S))."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra import numpy as hnp
+from _hyp import given, hnp, settings, st
 
 from repro.core.summaries import dft, eapca, paa, sax
 from repro.kernels import ref
+
+pytestmark = pytest.mark.tier1
 
 SETTINGS = dict(max_examples=30, deadline=None)
 
