@@ -9,6 +9,16 @@ vs a warm one (same batch again) — plus the paper's own
 implementation-independent counters (%data accessed, leaf gathers =
 random-I/O units) for continuity with Figure 4. IMI stays in-memory
 (proxy columns only): its ADC scan has no leaf store yet.
+
+The codec x share_gathers section measures the two bytes-read levers of
+store format v2 on the paper's best tree (dstree): compressed leaf
+payloads (bf16 halves every leaf read; pq streams uint8 codes — 64x
+fewer payload bytes at series_len=256/pq_m=16 (1024B -> 16B per row),
+plus the small exact re-rank reads) and cooperative scoring (every
+gathered slot scored
+against all query lanes, so each lane's bsf tightens from the whole
+batch's I/O and the search stops earlier). Expected at matched recall:
+bytes_read <= 0.55x (bf16) and <= 0.2x (pq) of f32.
 """
 
 from __future__ import annotations
@@ -43,10 +53,11 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
         "va+file": (vafile.build(data), 64),
     }
 
-    def timed_ooc(store, cache, vb, eps):
+    def timed_ooc(store, cache, vb, eps, share=False):
         t0 = time.perf_counter()
         out = S.search_ooc(store, qj, k, delta=0.99, epsilon=eps,
-                           visit_batch=vb, cache=cache)
+                           visit_batch=vb, cache=cache,
+                           share_gathers=share)
         jax.block_until_ready(out.result.dists)
         return out, time.perf_counter() - t0
 
@@ -90,6 +101,51 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
                     f"MBread={cold.stats['bytes_read'] / 1e6:.2f};"
                     f"hit={cold.stats['hit_rate']:.2f};"
                     f"whit={warm.stats['hit_rate']:.2f}"))
+
+        # ---- store format v2: codec x share_gathers on dstree ----
+        idx, vb = built["dstree"]
+        f32_read = None
+        for codec in ("f32", "bf16", "pq"):
+            store_dir = idx.save(os.path.join(tmp, f"dstree_{codec}"),
+                                 codec=codec)
+            store = FrozenIndex.load(store_dir, resident="summaries")
+            cap = max(store.num_leaves // 8, qj.shape[0] * vb)
+            for share in (False, True):
+                cache = DeviceLeafCache(store, cap)
+                cold, t_cold = timed_ooc(store, cache, vb, 1.0, share)
+                cache.reset_counters()
+                warm, t_warm = timed_ooc(store, cache, vb, 1.0, share)
+                res = cold.result
+                m = workload_metrics(res.ids, res.dists, bf.ids,
+                                     bf.dists)
+                read = cold.stats["bytes_read"]
+                if codec == "f32" and not share:
+                    f32_read = read
+                ratio = read / f32_read if f32_read else float("nan")
+                rows.append({
+                    "bench": "query_disk", "method": "dstree",
+                    "knob": f"{codec}/share{int(share)}",
+                    "codec": codec, "share_gathers": share,
+                    "bytes_read_cold": read,
+                    "bytes_read_vs_f32": ratio,
+                    "bytes_read_rerank":
+                        cold.stats["bytes_read_rerank"],
+                    "bytes_read_warm": warm.stats["bytes_read"],
+                    "bytes_h2d_cold": cold.stats["bytes_h2d"],
+                    "cache_hit_rate_cold": cold.stats["hit_rate"],
+                    "cache_hit_rate_warm": warm.stats["hit_rate"],
+                    "payload_bytes": os.path.getsize(
+                        os.path.join(store_dir, "data.bin")),
+                    "t_cold_s": t_cold, "t_warm_s": t_warm,
+                    **m,
+                })
+                print(csv_line(
+                    f"qdisk/dstree/{codec}/share{int(share)}",
+                    t_cold * 1e6,
+                    f"map={m['map']:.3f};"
+                    f"MBread={read / 1e6:.2f};"
+                    f"vs_f32={ratio:.3f};"
+                    f"hit={cold.stats['hit_rate']:.2f}"))
 
     # IMI has no leaf store yet: keep the paper's proxy counters
     ii = imi.build(data, kc=16, m=16, kmeans_iters=10)

@@ -17,14 +17,19 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 mode="${1:-all}"
 
+# Store-format deprecation warnings are errors: the repo's own code and
+# tests must never (re)generate or silently depend on pre-v2 artifacts
+# (tests that exercise v1 read-compat catch the warning explicitly).
+WFLAGS=(-W "error::repro.store.layout.StoreFormatDeprecationWarning")
+
 run_fast() {
   echo "== verify: fast tier1 subset =="
-  python -m pytest -q -m tier1
+  python -m pytest -q -m tier1 "${WFLAGS[@]}"
 }
 
 run_full() {
   echo "== verify: full tier-1 command =="
-  python -m pytest -x -q
+  python -m pytest -x -q "${WFLAGS[@]}"
 }
 
 case "$mode" in

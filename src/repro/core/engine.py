@@ -80,7 +80,8 @@ class DistributedEngine:
 
     # ------------------------------------------------------------------
     def build(self, data: np.ndarray, key=None,
-              spill_dir: Optional[str] = None, **params):
+              spill_dir: Optional[str] = None, codec: str = "f32",
+              **params):
         """Shard rows, build per-shard indexes (embarrassingly parallel
         on hosts), stack and device_put with the shard axis mapped onto
         the mesh axes.
@@ -89,7 +90,10 @@ class DistributedEngine:
         store artifact (spill_dir/shard_NNNN, global ids and global
         n_total preserved) so shards can later be served out-of-core
         via FrozenIndex.load(..., resident="summaries") + search_ooc —
-        the path toward collections larger than pod HBM."""
+        the path toward collections larger than pod HBM. ``codec``
+        selects each shard's leaf payload encoding ("f32"/"bf16"/"pq",
+        store format v2) — compressed spill shrinks every shard's
+        bytes-read in the out-of-core serving path."""
         key = key if key is not None else jax.random.PRNGKey(0)
         self._query_fns.clear()  # compiled against the previous index
         n = data.shape[0]
@@ -112,7 +116,7 @@ class DistributedEngine:
                 idx, ids=jnp.asarray(ids, jnp.int32), n_total=n)
             if spill_dir is not None:
                 d = os.path.join(spill_dir, f"shard_{si:04d}")
-                spill_dirs.append(idx.save(d))
+                spill_dirs.append(idx.save(d, codec=codec))
             shards.append(idx)
         self.shard_dirs = tuple(spill_dirs) if spill_dirs else None
 

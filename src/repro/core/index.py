@@ -61,12 +61,14 @@ class FrozenIndex:
         raise ValueError(self.summary)
 
     # --- out-of-core storage tier (repro.store) ---
-    def save(self, directory: str) -> str:
+    def save(self, directory: str, **kw) -> str:
         """Persist as an on-disk artifact (leaf-contiguous data.bin +
-        sidecar); reload with :meth:`load`."""
+        sidecar); reload with :meth:`load`. ``codec`` in {"f32",
+        "bf16", "pq"} selects the leaf payload encoding (store format
+        v2 — see repro.store.layout); pq_* kwargs tune the codebook."""
         from repro.store import layout
 
-        return layout.save_index(self, directory)
+        return layout.save_index(self, directory, **kw)
 
     @classmethod
     def load(cls, directory: str, resident: str = "full"):

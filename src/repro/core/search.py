@@ -74,15 +74,18 @@ def search_impl(
     sync_axes: tuple = (),
     share_gathers: bool = False,
 ) -> SearchResult:
-    """share_gathers (cooperative query batching, §Perf beyond-paper):
+    """Batched Algorithm 2 body (see module docstring for semantics).
+
+    share_gathers (cooperative query batching, §Perf beyond-paper):
     every iteration's gathered rows are scored against ALL query lanes
     (one MXU matmul) instead of only the lane that requested them.
     Extra candidates can only improve a lane's top-k, so every
     guarantee is preserved, while each lane's best-so-far tightens from
     the whole batch's I/O — the per-query bytes drop measurably
     (EXPERIMENTS.md §Perf). Raises arithmetic intensity from ~0.5 to
-    ~0.5*B flops/byte on the refinement stream."""
-    """sync_axes (inside shard_map only): exchange the best-so-far with
+    ~0.5*B flops/byte on the refinement stream.
+
+    sync_axes (inside shard_map only): exchange the best-so-far with
     `pmin` over the given mesh axes every iteration, so pruning uses the
     GLOBAL kth-best. Exactness-preserving: the global kth-best distance
     is <= every shard's local kth-best, so the stop threshold only
@@ -162,7 +165,11 @@ def search_impl(
                 + jnp.sum(rows.astype(jnp.float32) ** 2, 1)[None, :],
                 0.0)
             d = jnp.where(fvalid[None, :], d, INF)
-            top_d, top_i = ops.topk_merge(
+            # dedup merge: a leaf pooled at two iterations is scored
+            # twice for every lane; plain topk_merge would both return
+            # duplicate ids and shrink the kth-best below the true kth
+            # distinct distance (stopping too early)
+            top_d, top_i = ops.topk_merge_unique(
                 d, jnp.broadcast_to(cand_ids, (b, b * v * m)),
                 s.top_d, s.top_i)
         else:
@@ -220,10 +227,15 @@ search = jax.jit(
 def search_ooc(store, queries: jax.Array, k: int, **kw):
     """Out-of-core Algorithm 2 over a LeafStore (see repro.store):
     identical visit order and stopping predicates to :func:`search` —
-    only residency differs, so every guarantee transfers. Accepts
-    delta/epsilon/nprobe/visit_batch plus cache/cache_leaves/prefetch;
-    returns OocResult(result=SearchResult, stats={bytes_read,
-    hit_rate, ...})."""
+    only residency differs, so every guarantee transfers (exception:
+    the lossy codec="pq" payload supports the epsilon/delta-epsilon
+    checks via its exact re-rank but not exact epsilon=0 search, and
+    warns if asked). Accepts
+    delta/epsilon/nprobe/visit_batch plus cache/cache_leaves/prefetch,
+    share_gathers (cooperative scoring, as in :func:`search_impl`) and
+    rerank (codec="pq" exact re-rank pool multiplier); returns
+    OocResult(result=SearchResult, stats={bytes_read, hit_rate,
+    codec, ...})."""
     from repro.store.ooc import search_ooc as impl
 
     return impl(store, queries, k, **kw)

@@ -111,6 +111,12 @@ def adc_lut(cb: PQCodebook, q: jax.Array) -> jax.Array:
     return jnp.sum(diff * diff, axis=-1)
 
 
+def adc_lut_batch(cb: PQCodebook, q: jax.Array) -> jax.Array:
+    """Per-subspace squared-distance tables for a query batch:
+    [B, n] -> [B, m, K] (vmapped :func:`adc_lut`)."""
+    return jax.vmap(lambda qq: adc_lut(cb, qq))(q)
+
+
 def adc_scan(cb: PQCodebook, codes: jax.Array, q: jax.Array,
              **kw) -> jax.Array:
     """Asymmetric distances of all codes to one query: [N]."""

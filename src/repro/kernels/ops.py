@@ -99,6 +99,35 @@ def pq_adc(
     return ref.ref_pq_adc(codes, lut)
 
 
+def pq_adc_batch(
+    codes: jax.Array, luts: jax.Array, *, force_pallas: bool = False,
+) -> jax.Array:
+    """Batched ADC scan: luts [B, m, K] per-query tables; codes [M, m]
+    (one shared row set -> every query scores every row, the
+    cooperative-gather regime) or [B, M, m] (per-lane rows). -> [B, M].
+
+    TPU path reuses the pq_adc one-hot MXU trick: codes expand to a
+    one-hot [*, m*K] tile contracted against the flattened LUTs — for
+    shared codes that is ONE [B, m*K] x [m*K, M] matmul scoring every
+    gathered row against all query lanes.
+    """
+    if force_pallas or on_tpu():
+        b, m, k = luts.shape
+        lf = luts.astype(jnp.float32)
+        onehot = jax.nn.one_hot(codes.astype(jnp.int32), k,
+                                dtype=jnp.float32)
+        if codes.ndim == 2:
+            return jax.lax.dot_general(
+                lf.reshape(b, m * k),
+                onehot.reshape(-1, m * k),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        return jnp.einsum("bmjk,bjk->bm", onehot, lf,
+                          preferred_element_type=jnp.float32)
+    return ref.ref_pq_adc_batch(codes, luts)
+
+
 def l2_topk(
     q: jax.Array, x: jax.Array, k: int, **kw
 ) -> Tuple[jax.Array, jax.Array]:
@@ -111,3 +140,10 @@ def l2_topk(
 def topk_merge(dists, ids, top_d, top_i):
     """Merge a candidate batch into running sorted top-k rows."""
     return ref.ref_topk_merge(dists, ids, top_d, top_i)
+
+
+def topk_merge_unique(dists, ids, top_d, top_i):
+    """topk_merge that keeps each id at most once (best distance).
+    Required by the cooperative (share_gathers) scoring paths, where a
+    leaf pooled at two iterations is scored twice for every lane."""
+    return ref.ref_topk_merge_unique(dists, ids, top_d, top_i)

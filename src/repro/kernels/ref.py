@@ -73,6 +73,25 @@ def ref_pq_adc(codes: jax.Array, lut: jax.Array) -> jax.Array:
     return out
 
 
+def ref_pq_adc_batch(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """Batched PQ asymmetric distance scan.
+
+    luts [B, m, K] per-query subspace tables; codes either [M, m]
+    (one shared row set scored against every query — the cooperative
+    gather regime) or [B, M, m] (per-lane rows). Returns [B, M].
+    Gather formulation — the CPU oracle for the one-hot MXU path.
+    """
+    b, m, _ = luts.shape
+    idx = codes.astype(jnp.int32)
+    if idx.ndim == 2:
+        idx = jnp.broadcast_to(idx[None], (b,) + idx.shape)
+    g = jnp.take_along_axis(
+        jnp.broadcast_to(luts[:, None], (b, idx.shape[1], m,
+                                         luts.shape[2])),
+        idx[..., None], axis=3)
+    return g[..., 0].sum(-1)
+
+
 def ref_topk_merge(
     dists: jax.Array,  # [B, M] candidate distances
     ids: jax.Array,    # [B, M] candidate ids
@@ -84,4 +103,36 @@ def ref_topk_merge(
     all_d = jnp.concatenate([top_d, dists], axis=1)
     all_i = jnp.concatenate([top_i, ids], axis=1)
     new_d, new_i = jax.lax.sort((all_d, all_i), num_keys=1)
+    return new_d[:, :k], new_i[:, :k]
+
+
+def ref_topk_merge_unique(
+    dists: jax.Array,  # [B, M] candidate distances
+    ids: jax.Array,    # [B, M] candidate ids
+    top_d: jax.Array,  # [B, k] current best (asc, ids distinct)
+    top_i: jax.Array,  # [B, k]
+) -> tuple:
+    """topk_merge with id dedup: each id keeps only its best distance.
+
+    The cooperative (share_gathers) path needs this: a leaf pooled at
+    two different iterations (two lanes visiting it at different ranks)
+    is scored TWICE for every lane, and without dedup the duplicates
+    (a) collapse the returned top-k to fewer distinct neighbors and
+    (b) shrink the kth-best below the true kth-distinct distance,
+    making the stopping predicate prune too early — an exactness bug,
+    not just cosmetics. Sort by (id, d) to cluster duplicates (best
+    first), mask all but the first of each run, re-sort by distance.
+    Masked/invalid candidates (id -1, d inf) collapse to one placeholder
+    which sorts last, so they never displace real neighbors.
+    """
+    k = top_d.shape[1]
+    all_d = jnp.concatenate([top_d, dists], axis=1)
+    all_i = jnp.concatenate([top_i, ids], axis=1)
+    si, sd = jax.lax.sort((all_i, all_d), num_keys=2)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(si[:, :1], bool), si[:, 1:] == si[:, :-1]],
+        axis=1)
+    sd = jnp.where(dup, jnp.float32(jnp.inf), sd)
+    si = jnp.where(dup, -1, si)
+    new_d, new_i = jax.lax.sort((sd, si), num_keys=1)
     return new_d[:, :k], new_i[:, :k]

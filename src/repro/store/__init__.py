@@ -35,18 +35,35 @@ workload instead of a hardware-neutral proxy. Design (one screen):
   Algorithm 2 are preserved verbatim (tests/test_store.py asserts
   top-k parity with the in-memory path under tiny caches).
 
-Follow-ups tracked in ROADMAP "Open items": compressed leaf payloads
-(bf16 already supported end-to-end; PQ/zstd leaves next), NUMA-aware
-read scheduling, and multi-host spill for DistributedEngine (today each
-shard spills to its own store directory via ``build(spill_dir=...)``).
+  Leaf codecs (store format v2, layout.py).  data.bin's payload is
+  pluggable: "f32" (native dtype, bit-exact), "bf16" (half the
+  bytes-read per leaf; parity is bit-exact vs in-memory search over
+  the bfloat16 index), or "pq" (uint8 PQ codes, ~itemsize*n/m x fewer
+  bytes; codes are ADC-scored on device via the pq_adc one-hot MXU
+  trick and the final top-k is exactly re-ranked against exact.bin so
+  the guarantee checks survive the lossy payload). The cache stores
+  ENCODED slots; decoding happens in the scoring step.
+
+  Cooperative scoring (ooc.search_ooc(share_gathers=True)).  Every
+  iteration's gathered slots are scored against ALL query lanes in one
+  MXU matmul, mirroring search_impl's in-memory branch — per-query
+  bytes-read drops as the batch grows.
+
+Follow-ups tracked in ROADMAP "Open items": zstd-compressed leaves,
+NUMA-aware read scheduling, and multi-host spill for DistributedEngine
+(today each shard spills to its own store directory via
+``build(spill_dir=..., codec=...)``).
 """
 
 from .cache import DeviceLeafCache
-from .layout import LeafStore, load_index, save_index
+from .layout import (FORMAT_VERSION, LeafStore,
+                     StoreFormatDeprecationWarning, load_index,
+                     save_index)
 from .ooc import OocResult, search_ooc
 from .prefetch import LeafPrefetcher
 
 __all__ = [
-    "DeviceLeafCache", "LeafStore", "LeafPrefetcher", "OocResult",
-    "load_index", "save_index", "search_ooc",
+    "DeviceLeafCache", "FORMAT_VERSION", "LeafStore", "LeafPrefetcher",
+    "OocResult", "StoreFormatDeprecationWarning", "load_index",
+    "save_index", "search_ooc",
 ]

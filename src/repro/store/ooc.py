@@ -5,7 +5,7 @@ kernel, same argsort visit order, same candidate layout per iteration
 ([V leaves x max_leaf positions] per lane, invalid positions masked to
 inf), same topk_merge, same stopping predicates evaluated in f32 — so
 the exact / epsilon / delta-epsilon guarantees transfer untouched; the
-ONLY difference is residency: raw rows are gathered from the
+ONLY difference is residency: payload rows are gathered from the
 DeviceLeafCache slot pool (fed from disk) instead of an HBM-resident
 data array.
 
@@ -16,15 +16,38 @@ iteration performs I/O. The host loop:
   2. makes those leaves cache-resident (one batched h2d upload);
   3. schedules NEXT iteration's predicted leaves on the prefetcher, so
      the disk reads overlap the device scoring it is about to launch;
-  4. runs the jitted refine step (gather from slots -> fused L2 ->
+  4. runs the jitted refine step (gather from slots -> decode/score ->
      topk merge) on device;
   5. pulls back the per-lane kth-best and evaluates the paper's
      stopping predicates in numpy f32 (bit-identical arithmetic to the
      device f32 ops of the in-memory loop).
+
+Codecs (store format v2).  The refine step decodes-then-scores the
+ENCODED slots: f32 slots score directly, bf16 slots upcast inside the
+fused L2 (bit-exact to in-memory search over the bfloat16 index), and
+codec="pq" slots hold uint8 codes that are ADC-scored on device via the
+kernels/pq_adc one-hot MXU trick — the loop then tracks padded row
+POSITIONS and finishes with an exact re-rank: the final candidate pool
+(``rerank``*k per lane) is re-scored in f32 against raw rows read from
+``exact.bin``, so the reported distances are exact for the returned
+neighbors and the epsilon/delta-epsilon guarantee checks survive the
+lossy payload. Carve-out: the EXACT (epsilon=0) guarantee does NOT
+survive pq — the stop predicate's kth-best is an ADC approximation
+that can prune the true neighbor's leaf early; search_ooc warns if
+asked for it.
+
+Cooperative scoring (``share_gathers=True``) mirrors search_impl's
+in-memory branch: every iteration's gathered slots are scored against
+ALL query lanes in one MXU matmul instead of only the lane that
+requested them. Extra candidates can only improve a lane's top-k, so
+every guarantee is preserved, while each lane's best-so-far tightens
+from the whole batch's I/O — per-query bytes-read drops as the batch
+grows (for pq this is ONE [B, m*K] x [m*K, rows] matmul per iteration).
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -33,6 +56,7 @@ import numpy as np
 
 from repro.core.histogram import r_delta
 from repro.core.search import INF, SearchResult, _batched_sq_l2
+from repro.core.summaries.pq import adc_lut_batch
 from repro.kernels import ops
 
 from .cache import DeviceLeafCache
@@ -72,6 +96,98 @@ def _refine_step(qf, slots, flat_slot_idx, row_idx, top_d, top_i,
     return top_d, top_i
 
 
+@jax.jit
+def _refine_step_shared(qf, slots, flat_slot_idx, row_idx, top_d,
+                        top_i, valid, ids):
+    """Cooperative scoring: pool the iteration's gathered slots and
+    score every row against ALL query lanes with one MXU matmul.
+    Mirrors the share_gathers branch of core.search.search_impl
+    exactly (same op sequence -> bit-exact parity)."""
+    b = qf.shape[0]
+    n = qf.shape[1]
+    flat = flat_slot_idx.reshape(-1)
+    rows = slots.reshape(-1, n)[flat]                # [B*V*M, n]
+    fvalid = valid.reshape(-1)
+    cand_ids = jnp.where(fvalid, ids[row_idx.reshape(-1)], -1)
+    d = jnp.maximum(
+        jnp.sum(qf * qf, 1)[:, None]
+        - 2.0 * (qf @ rows.astype(jnp.float32).T)
+        + jnp.sum(rows.astype(jnp.float32) ** 2, 1)[None, :],
+        0.0)
+    d = jnp.where(fvalid[None, :], d, INF)
+    # dedup merge (as in search_impl's share branch): a leaf pooled at
+    # two iterations is scored twice for every lane
+    top_d, top_i = ops.topk_merge_unique(
+        d, jnp.broadcast_to(cand_ids, (b, cand_ids.shape[0])),
+        top_d, top_i)
+    return top_d, top_i
+
+
+@jax.jit
+def _refine_step_pq(luts, slots, flat_slot_idx, row_idx, top_d, top_i,
+                    valid):
+    """PQ decode-and-score: gather uint8 codes from the slot pool, ADC
+    against each lane's LUT (one-hot MXU trick in ops.pq_adc_batch),
+    merge padded row POSITIONS (exact re-rank maps them to ids)."""
+    mcols = slots.shape[-1]
+    codes = slots.reshape(-1, mcols)[flat_slot_idx]  # [B, V*M, m]
+    cand_pos = jnp.where(valid, row_idx, -1)
+    d = ops.pq_adc_batch(codes, luts)
+    d = jnp.where(valid, d, INF)
+    return ops.topk_merge(d, cand_pos, top_d, top_i)
+
+
+@jax.jit
+def _refine_step_pq_shared(luts, slots, flat_slot_idx, row_idx, top_d,
+                           top_i, valid):
+    """Cooperative PQ scoring: ONE [B, m*K] x [m*K, rows] matmul scores
+    every gathered code row against all query lanes."""
+    b = luts.shape[0]
+    mcols = slots.shape[-1]
+    flat = flat_slot_idx.reshape(-1)
+    codes = slots.reshape(-1, mcols)[flat]           # [B*V*M, m]
+    fvalid = valid.reshape(-1)
+    cand_pos = jnp.where(fvalid, row_idx.reshape(-1), -1)
+    d = ops.pq_adc_batch(codes, luts)                # [B, B*V*M]
+    d = jnp.where(fvalid[None, :], d, INF)
+    return ops.topk_merge_unique(
+        d, jnp.broadcast_to(cand_pos, (b, cand_pos.shape[0])),
+        top_d, top_i)
+
+
+def _exact_rerank(store: LeafStore, qf, top_d, top_i, k: int):
+    """Re-score the PQ candidate pool (padded row positions) in f32
+    against raw rows from exact.bin; return exact top-k (d_sq, ids)
+    plus the re-rank bytes read. Tiny random reads — each distinct
+    candidate row is read once for the whole batch."""
+    pos = np.asarray(top_i)                          # [B, kk]
+    uniq = np.unique(pos[pos >= 0])
+    n = store.series_len
+    if uniq.size == 0:
+        return top_d[:, :k], top_i[:, :k], 0
+    rows = np.asarray(store.read_rows_exact(uniq), np.float32)
+    rerank_bytes = int(uniq.size) * n \
+        * int(np.dtype(store.exact_mmap.dtype
+                       if store.exact_mmap is not None
+                       else store.mmap.dtype).itemsize)
+    gather = np.searchsorted(uniq, np.clip(pos, 0, None))
+    cand = rows[gather]                              # [B, kk, n]
+    # direct difference form, not the expanded |q|^2-2qx+|x|^2: the
+    # expanded form loses ~1e-3 absolute accuracy to cancellation at
+    # near-zero distances, which would break the "reported distances
+    # are exact" contract of the re-rank (and the guarantee checks
+    # when a query coincides with a stored series); the candidate
+    # pool is tiny so the elementwise cost is irrelevant
+    diff = jnp.asarray(cand) - jnp.asarray(qf)[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)
+    d = jnp.where(jnp.asarray(pos >= 0), d, INF)
+    ids_h = np.asarray(store.resident.ids)
+    cids = np.where(pos >= 0,
+                    ids_h[np.clip(pos, 0, ids_h.shape[0] - 1)], -1)
+    sd, si = jax.lax.sort((d, jnp.asarray(cids, jnp.int32)), num_keys=1)
+    return sd[:, :k], si[:, :k], rerank_bytes
+
+
 def search_ooc(
     store: LeafStore,
     queries: jax.Array,  # [B, n]
@@ -84,12 +200,21 @@ def search_ooc(
     cache: Optional[DeviceLeafCache] = None,
     cache_leaves: Optional[int] = None,
     prefetch: bool = True,
+    share_gathers: bool = False,
+    rerank: int = 4,
 ) -> OocResult:
     """k-NN over an on-disk index without device-resident raw data.
 
     Pass ``cache`` to reuse (and warm) a cache across calls, or
     ``cache_leaves`` to size a fresh one; default is 1/8 of the leaves
     (clamped to at least one iteration's working set).
+    ``prefetch=False`` disables speculative scheduling for this call —
+    including on a prefetcher already attached to a supplied cache —
+    so stats measure pure demand-path reads.
+    ``share_gathers=True`` scores every gathered slot against all query
+    lanes (cooperative batching — module docstring). For codec="pq"
+    stores, ``rerank``*k candidates per lane are kept through the ADC
+    loop and exactly re-ranked against raw rows at the end.
     """
     res = store.resident
     b, n = queries.shape
@@ -109,6 +234,27 @@ def search_ooc(
         cache.prefetcher = own_prefetcher
     pf_used = cache.prefetcher
 
+    pq = store.codec == "pq"
+    kk = k * max(1, int(rerank)) if pq else k
+    luts = None
+    if pq:
+        if store.codebook is None:
+            raise ValueError("codec='pq' store has no codebook")
+        if epsilon == 0.0 and nprobe is None:
+            # the stopping predicate compares EXACT leaf lower bounds
+            # against the ADC (approximate) kth-best, which can
+            # underestimate and prune the true NN's leaf before it is
+            # visited; the re-rank only rescores pooled candidates and
+            # cannot recover it — so epsilon=0 is NOT exact under pq.
+            warnings.warn(
+                "codec='pq' cannot honor the exact (epsilon=0) "
+                "guarantee: ADC-scored stopping may prune the true "
+                "neighbor's leaf. Use epsilon>0 (the epsilon/"
+                "delta-epsilon checks hold after the exact re-rank), "
+                "nprobe, or a lossless codec.", UserWarning,
+                stacklevel=2)
+        luts = adc_lut_batch(store.codebook, queries)
+
     order_d, lb_sorted_d = _filter_stage(res, queries)
     order = np.asarray(order_d)
     lb_sorted = np.asarray(lb_sorted_d)
@@ -119,8 +265,8 @@ def search_ooc(
     max_rank = L if nprobe is None else min(nprobe, L)
 
     qf = jnp.asarray(queries, jnp.float32)
-    top_d = jnp.full((b, k), INF)
-    top_i = jnp.full((b, k), -1, jnp.int32)
+    top_d = jnp.full((b, kk), INF)
+    top_i = jnp.full((b, kk), -1, jnp.int32)
     rank = np.zeros(b, np.int64)
     active = np.ones(b, bool)
     leaves_visited = np.zeros(b, np.int64)
@@ -142,14 +288,18 @@ def search_ooc(
     try:
         while active.any():
             leaf, in_range = iteration_leaves(rank, active)
-            needed = np.unique(leaf[in_range])
+            # full per-lane request list (dups included) so the cache's
+            # per-request hit accounting credits lanes sharing a leaf
+            needed = leaf[in_range]
             slots = cache.get_slots(needed.tolist())
             slot_of = dict(zip(needed.tolist(), slots.tolist()))
 
             # overlap: stage the leaves the NEXT iteration will want
             # while the device scores this one (skip leaves already
-            # cache-resident — a warm cache must not touch the disk)
-            if cache.prefetcher is not None:
+            # cache-resident — a warm cache must not touch the disk).
+            # prefetch=False disables scheduling even on an attached
+            # prefetcher: callers use it to measure pure demand reads.
+            if prefetch and cache.prefetcher is not None:
                 nxt_rank = np.minimum(rank + v, max_rank)
                 nxt_leaf, nxt_in = iteration_leaves(nxt_rank, active)
                 nxt = [int(lf) for lf in np.unique(nxt_leaf[nxt_in])
@@ -167,14 +317,26 @@ def search_ooc(
                                  offs[-1] - 1 if offs[-1] else 0)
             flat_slot = slot_arr[:, :, None] * m + pos
 
-            top_d, top_i = _refine_step(
-                qf, cache.slots,
-                jnp.asarray(flat_slot.reshape(b, v * m), jnp.int32),
-                jnp.asarray(row_idx.reshape(b, v * m), jnp.int32),
-                top_d, top_i,
-                jnp.asarray(valid.reshape(b, v * m)),
-                res.ids,
-            )
+            flat_slot_j = jnp.asarray(
+                flat_slot.reshape(b, v * m), jnp.int32)
+            row_idx_j = jnp.asarray(row_idx.reshape(b, v * m), jnp.int32)
+            valid_j = jnp.asarray(valid.reshape(b, v * m))
+            if pq and share_gathers:
+                top_d, top_i = _refine_step_pq_shared(
+                    luts, cache.slots, flat_slot_j, row_idx_j,
+                    top_d, top_i, valid_j)
+            elif pq:
+                top_d, top_i = _refine_step_pq(
+                    luts, cache.slots, flat_slot_j, row_idx_j,
+                    top_d, top_i, valid_j)
+            elif share_gathers:
+                top_d, top_i = _refine_step_shared(
+                    qf, cache.slots, flat_slot_j, row_idx_j,
+                    top_d, top_i, valid_j, res.ids)
+            else:
+                top_d, top_i = _refine_step(
+                    qf, cache.slots, flat_slot_j, row_idx_j,
+                    top_d, top_i, valid_j, res.ids)
 
             leaves_visited += np.where(active, in_range.sum(1), 0)
             rows_scanned += np.where(active, valid.sum((1, 2)), 0)
@@ -198,6 +360,11 @@ def search_ooc(
             if cache.prefetcher is own_prefetcher:
                 cache.prefetcher = None
 
+    rerank_bytes = 0
+    if pq:
+        top_d, top_i, rerank_bytes = _exact_rerank(
+            store, qf, top_d, top_i, k)
+
     result = SearchResult(
         dists=jnp.sqrt(top_d),
         ids=top_i,
@@ -207,7 +374,11 @@ def search_ooc(
     )
     stats = dict(cache.stats())
     stats["iterations"] = iters
-    stats["dataset_bytes"] = int(store.mmap.nbytes)
+    stats["codec"] = store.codec
+    stats["share_gathers"] = bool(share_gathers)
+    stats["dataset_bytes"] = store.dataset_nbytes
+    stats["bytes_read_rerank"] = rerank_bytes
+    stats["bytes_read"] += rerank_bytes
     if pf_used is not None:
         if cache.prefetcher is None:  # transient pf already detached:
             stats["bytes_read"] += pf_used.bytes_read  # fold bytes in

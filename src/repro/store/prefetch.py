@@ -40,6 +40,14 @@ class LeafPrefetcher:
         self._batches_staged: collections.deque = collections.deque()
         self._stop = False
         self._dead = False
+        self._reading: Optional[int] = None  # leaf mid-read right now
+        # counters: mutated ONLY under self._lock (the reader thread
+        # races reset_counters otherwise — a straggler cold-pass read
+        # landing after the reset would pollute warm-run stats); the
+        # epoch stamps each read with its measurement window so even a
+        # read that outlives reset_counters' quiesce timeout cannot
+        # leak its bytes into the next window
+        self._epoch = 0
         self.bytes_read = 0          # includes speculative reads
         self.leaves_read = 0
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -97,6 +105,30 @@ class LeafPrefetcher:
                     return None
                 self._lock.wait(remaining)
 
+    def reset_counters(self, timeout: float = 10.0) -> None:
+        """Zero the read counters for a fresh measurement window.
+
+        Quiesces first: queued (not yet started) speculative reads are
+        dropped, and an in-flight read is WAITED for — so no byte read
+        on behalf of the previous window can land after the zeroing.
+        Even if the wait times out (pathologically slow disk), the
+        epoch bump makes the straggler's completion drop its counter
+        update, so the new window still starts clean.
+        """
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            for lf in self._queue:
+                self._inflight.discard(lf)
+            self._queue.clear()
+            while self._reading is not None and not self._dead:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._lock.wait(remaining)
+            self._epoch += 1
+            self.bytes_read = 0
+            self.leaves_read = 0
+
     def close(self) -> None:
         with self._lock:
             self._stop = True
@@ -120,17 +152,23 @@ class LeafPrefetcher:
                     if self._stop:
                         return
                     leaf = self._queue.popleft()
+                    self._reading = leaf
+                    epoch = self._epoch
                 buf = self.store.read_leaf(leaf)
+                nbytes = self.store.leaf_nbytes(leaf)
                 with self._lock:
                     self._inflight.discard(leaf)
+                    self._reading = None
                     if not self._stop and leaf in self._wanted:
                         self._staged[leaf] = buf
+                    if epoch == self._epoch:  # not reset mid-read
+                        self.bytes_read += nbytes
+                        self.leaves_read += 1
                     self._lock.notify_all()
-                self.bytes_read += self.store.leaf_nbytes(leaf)
-                self.leaves_read += 1
         except Exception:  # I/O failure: unblock waiters, go demand-only
             with self._lock:
                 self._dead = True
+                self._reading = None
                 self._inflight.clear()
                 self._queue.clear()
                 self._lock.notify_all()

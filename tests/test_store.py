@@ -2,7 +2,14 @@
 search parity. The load-bearing claim is that search_ooc is the SAME
 algorithm as the in-memory search — identical visit order and stopping
 predicates, only residency differs — so every assertion here is exact
-equality, not tolerance."""
+equality, not tolerance. Lossy codecs (format v2) keep that bar where
+it is keepable: bf16 ooc is bit-exact vs in-memory search over the
+bfloat16 index; pq is held to the paper's guarantee checks after the
+exact re-rank."""
+
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +20,8 @@ from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree, isax, vafile
-from repro.store import DeviceLeafCache, LeafPrefetcher, LeafStore
+from repro.store import (DeviceLeafCache, LeafPrefetcher, LeafStore,
+                         StoreFormatDeprecationWarning)
 
 pytestmark = pytest.mark.tier1
 
@@ -167,6 +175,354 @@ def test_prefetcher_stages_and_takes(built, tmp_path):
         assert got is not None
         np.testing.assert_array_equal(got, store.read_leaf(1))
         assert pf.take(1) is None              # popped exactly once
+
+
+# ---------------------------------------------------------------- v2 codecs
+
+
+@pytest.fixture(scope="module")
+def pq_store_dir(built, tmp_path_factory):
+    d = tmp_path_factory.mktemp("pq_store")
+    return built.save(str(d / "pq"), codec="pq")
+
+
+@pytest.mark.parametrize("codec", ["f32", "bf16"])
+@pytest.mark.parametrize("share", [False, True])
+@pytest.mark.parametrize("delta,epsilon", [(1.0, 0.0), (0.99, 1.0)])
+def test_ooc_codec_parity_bit_exact(built, queries_mod, tmp_path,
+                                    codec, share, delta, epsilon):
+    """f32/bf16 ooc == in-memory search over the decoded index, bit
+    exact, for both the per-lane and the cooperative scoring path."""
+    d = built.save(str(tmp_path / codec), codec=codec)
+    full = FrozenIndex.load(d)
+    if codec == "bf16":
+        assert full.data.dtype == jnp.bfloat16
+    store = FrozenIndex.load(d, resident="summaries")
+    ref = S.search(full, queries_mod, 5, delta=delta, epsilon=epsilon,
+                   share_gathers=share)
+    ooc = S.search_ooc(store, queries_mod, 5, delta=delta,
+                       epsilon=epsilon, share_gathers=share,
+                       cache_leaves=6)
+    assert_same(ref, ooc.result)
+    assert ooc.stats["codec"] == codec
+    assert ooc.stats["share_gathers"] is share
+
+
+@pytest.mark.parametrize("share", [False, True])
+@pytest.mark.parametrize("delta,epsilon", [(1.0, 1.0), (0.99, 1.0)])
+def test_ooc_pq_guarantee_with_exact_rerank(
+        walk_data_mod, queries_mod, pq_store_dir, share, delta,
+        epsilon):
+    """pq + exact re-rank must satisfy the epsilon / delta-epsilon
+    guarantee checks (Definition 5) against brute force — the reported
+    distances are EXACT for the returned neighbors, so the (1+eps)
+    bound is checkable directly."""
+    store = FrozenIndex.load(pq_store_dir, resident="summaries")
+    assert store.codec == "pq" and store.codebook is not None
+    bf = S.brute_force(queries_mod, jnp.asarray(walk_data_mod), 5)
+    ooc = S.search_ooc(store, queries_mod, 5, delta=delta,
+                       epsilon=epsilon, share_gathers=share,
+                       cache_leaves=6)
+    ok = (np.asarray(ooc.result.dists)
+          <= (1 + epsilon) * np.asarray(bf.dists) * (1 + 1e-4) + 1e-4)
+    if delta == 1.0:
+        assert ok.all()
+    else:
+        assert ok.mean() >= 0.9
+    assert ooc.stats["bytes_read_rerank"] > 0
+
+
+def test_pq_exact_guarantee_request_warns(queries_mod, pq_store_dir):
+    """epsilon=0 (exact) cannot be honored over the lossy pq payload —
+    the ADC kth-best can prune the true neighbor's leaf early — so
+    asking for it must warn (nprobe / epsilon>0 requests must not)."""
+    store = FrozenIndex.load(pq_store_dir, resident="summaries")
+    with pytest.warns(UserWarning, match="cannot honor the exact"):
+        S.search_ooc(store, queries_mod, 5, cache_leaves=6)
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error", UserWarning)
+        S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+                     cache_leaves=6)
+        S.search_ooc(store, queries_mod, 5, nprobe=4, cache_leaves=6)
+
+
+def test_dataset_nbytes_is_codec_invariant(built, tmp_path,
+                                           pq_store_dir):
+    """stats['dataset_bytes'] must mean the RAW collection for every
+    codec, not the encoded payload, or %-data metrics skew 2x/64x."""
+    raw = np.asarray(built.data).nbytes
+    for codec in ("f32", "bf16"):
+        d = built.save(str(tmp_path / f"dn_{codec}"), codec=codec)
+        store = FrozenIndex.load(d, resident="summaries")
+        assert store.dataset_nbytes == raw, codec
+    store = FrozenIndex.load(pq_store_dir, resident="summaries")
+    assert store.dataset_nbytes == raw
+
+
+def test_pq_resident_full_round_trip_bit_exact(built, pq_store_dir):
+    """codec="pq" keeps exact.bin, so resident="full" reconstitutes the
+    original index bit-exactly despite the lossy refinement payload."""
+    full = FrozenIndex.load(pq_store_dir)
+    np.testing.assert_array_equal(np.asarray(built.data),
+                                  np.asarray(full.data))
+    np.testing.assert_array_equal(np.asarray(built.ids),
+                                  np.asarray(full.ids))
+
+
+def test_codec_payload_sizes_and_bytes_read(built, queries_mod,
+                                            tmp_path, pq_store_dir):
+    """The bytes-read currency: bf16 payload is exactly half of f32,
+    pq codes far smaller still, and search_ooc bytes_read shrinks
+    accordingly (the ISSUE's ~2x / ~8-16x targets at this scale)."""
+    reads = {}
+    payload = {}
+    for codec in ("f32", "bf16", "pq"):
+        d = pq_store_dir if codec == "pq" else \
+            built.save(str(tmp_path / codec), codec=codec)
+        payload[codec] = os.path.getsize(os.path.join(d, "data.bin"))
+        store = FrozenIndex.load(d, resident="summaries")
+        ooc = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+                           cache_leaves=6)
+        reads[codec] = ooc.stats["bytes_read"]
+    assert payload["bf16"] * 2 == payload["f32"]
+    assert payload["pq"] * 8 <= payload["f32"]
+    assert reads["bf16"] <= 0.55 * reads["f32"]
+    assert reads["pq"] <= 0.5 * reads["f32"]
+
+
+def test_share_gathers_never_reads_more(built, queries_mod, tmp_path):
+    """Cooperative scoring only tightens each lane's bsf, so it can
+    only stop earlier — bytes_read must not grow."""
+    d = built.save(str(tmp_path / "coop"))
+    store = FrozenIndex.load(d, resident="summaries")
+    solo = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+                        cache_leaves=6, prefetch=False)
+    coop = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+                        cache_leaves=6, prefetch=False,
+                        share_gathers=True)
+    assert coop.stats["bytes_read"] <= solo.stats["bytes_read"]
+
+
+def test_share_gathers_returns_distinct_ids(built, queries_mod,
+                                            tmp_path):
+    """Regression: a leaf pooled at two iterations is scored twice for
+    every lane; without the dedup merge the top-k collapses to
+    duplicate ids AND the kth-best shrinks below the true kth distinct
+    distance (pruning too early). Both cooperative paths must return
+    k distinct neighbors."""
+    d = built.save(str(tmp_path / "dedup"))
+    store = FrozenIndex.load(d, resident="summaries")
+    ooc = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+                       cache_leaves=6, share_gathers=True)
+    ref = S.search(built, queries_mod, 5, epsilon=1.0,
+                   share_gathers=True)
+    for ids in (np.asarray(ooc.result.ids), np.asarray(ref.ids)):
+        for row in ids:
+            real = row[row >= 0]
+            assert len(np.unique(real)) == len(real), row
+
+
+def test_prefetch_false_disables_attached_prefetcher(
+        built, queries_mod, tmp_path):
+    """Regression: prefetch=False must suppress speculative scheduling
+    even when the caller-supplied cache has a prefetcher attached —
+    the flag exists to measure pure demand-path reads."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    pf = LeafPrefetcher(store)
+    cache = DeviceLeafCache(store, capacity_leaves=6, prefetcher=pf)
+    try:
+        out = S.search_ooc(store, queries_mod, 5, cache=cache,
+                           prefetch=False)
+        assert out.stats["prefetch_bytes_read"] == 0
+        assert pf.leaves_read == 0
+        assert out.stats["bytes_read"] == out.stats["bytes_read_sync"]
+    finally:
+        pf.close()
+
+
+def test_scatter_fill_traces_are_bucketed(built, tmp_path):
+    """Miss batches pad to the next power of two, so the jitted scatter
+    compiles O(log capacity) variants, not one per miss count."""
+    from repro.store.cache import _scatter_fill
+    if not hasattr(_scatter_fill, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    cache = DeviceLeafCache(store, capacity_leaves=16)
+    L = store.num_leaves                       # 16 for this fixture
+    cache.get_slots(list(range(5)))            # 5 misses -> pad 8
+    before = _scatter_fill._cache_size()
+    cache.get_slots(list(range(5, 11)))        # 6 misses -> pad 8
+    cache.get_slots(list(range(11, min(L, 18))))  # 5-7 misses -> pad 8
+    assert _scatter_fill._cache_size() == before
+
+
+def test_pq_rerank_distance_is_exact_at_zero(walk_data_mod, tmp_path):
+    """The re-rank uses the direct difference form: a query identical
+    to a stored series must come back at distance exactly 0.0 (the
+    expanded |q|^2-2qx+|x|^2 form loses ~1e-3 to cancellation here)."""
+    ix = dstree.build(walk_data_mod, leaf_cap=32)
+    d = ix.save(str(tmp_path / "pq0"), codec="pq")
+    store = FrozenIndex.load(d, resident="summaries")
+    q = jnp.asarray(walk_data_mod[:4])         # exact stored rows
+    ooc = S.search_ooc(store, q, 5, epsilon=1.0)
+    ids = np.asarray(ooc.result.ids)
+    dists = np.asarray(ooc.result.dists)
+    for lane in range(4):
+        hit = np.where(ids[lane] == lane)[0]
+        assert hit.size == 1, (lane, ids[lane])
+        assert dists[lane, hit[0]] == 0.0
+
+
+def test_engine_spill_codec_threads_through(walk_data_mod, tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = DistributedEngine(mesh, method="dstree")
+    eng.build(walk_data_mod, leaf_cap=32, spill_dir=str(tmp_path),
+              codec="bf16")
+    store = FrozenIndex.load(eng.shard_dirs[0], resident="summaries")
+    assert store.codec == "bf16"
+    assert store.mmap.dtype == jnp.bfloat16
+
+
+def test_v1_store_reads_with_deprecation_warning(built, tmp_path):
+    """v1 read-compat: a pre-codec artifact loads as codec="f32" but
+    warns (scripts/verify.sh escalates the warning to an error so the
+    repo itself never regenerates v1 stores)."""
+    d = built.save(str(tmp_path / "v1"))
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["format_version"] = 1
+    for key in ("codec", "payload_dtype", "payload_cols"):
+        meta.pop(key, None)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.warns(StoreFormatDeprecationWarning):
+        store = FrozenIndex.load(d, resident="summaries")
+    assert store.codec == "f32"
+    assert store.payload_cols == built.series_len
+
+
+def test_newer_format_version_is_an_explicit_error(built, tmp_path):
+    d = built.save(str(tmp_path / "vfuture"))
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["format_version"] = 99
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="newer"):
+        FrozenIndex.load(d)
+
+
+# ------------------------------------------------------- satellite bugfixes
+
+
+def test_fill_reuses_device_pool_buffer(built, tmp_path):
+    """Regression: the _fill scatter must donate the slot pool so the
+    device buffer is updated in place (O(misses) per iteration), not
+    copied wholesale (O(capacity * max_leaf * n))."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    cache = DeviceLeafCache(store, capacity_leaves=8)
+    cache.get_slots([0, 1])          # compile+donate path for 2 misses
+    ptr = cache.slots.unsafe_buffer_pointer()
+    cache.get_slots([2, 3])
+    assert cache.slots.unsafe_buffer_pointer() == ptr
+    cache.get_slots([4])             # different miss count: new trace
+    cache.get_slots([5])
+    assert cache.slots.unsafe_buffer_pointer() == ptr
+
+
+def test_prefetcher_reset_counters_quiesces(built, tmp_path):
+    """Regression: a cold-pass read still in flight must not land its
+    bytes AFTER reset_counters zeroes them (the straggler race that
+    polluted warm-run stats in bench_query_disk)."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    with LeafPrefetcher(store) as pf:
+        pf.schedule(list(range(store.num_leaves)))
+        pf.reset_counters()          # drops the queue, waits in-flight
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 0.3:
+            assert pf.bytes_read == 0 and pf.leaves_read == 0
+            time.sleep(0.02)
+        # counters still work for reads scheduled AFTER the reset
+        pf.schedule([0])
+        deadline = time.monotonic() + 5.0
+        while pf.take(0, timeout=0.1) is None \
+                and time.monotonic() < deadline:
+            pass
+        assert pf.bytes_read == store.leaf_nbytes(0)
+        assert pf.leaves_read == 1
+
+
+def test_per_request_hit_counting_with_duplicates(built, tmp_path):
+    """Pin the get_slots accounting semantics: every occurrence served
+    without a disk read is a hit; misses count distinct reads; the
+    distinct view is reported alongside."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    cache = DeviceLeafCache(store, capacity_leaves=8)
+    # 4 lanes share leaf 0, 2 request leaf 1: two reads, four dup hits
+    slots = cache.get_slots([0, 0, 1, 0, 0, 1])
+    assert cache.misses == 2
+    assert cache.hits == 4            # per-request: dups are hits
+    assert cache.hits_distinct == 0   # nothing resident at batch start
+    assert slots[0] == slots[1] == slots[3] == slots[4]
+    # resident leaves: every occurrence is a hit, one distinct each
+    cache.get_slots([0, 1, 0])
+    assert cache.hits == 7 and cache.hits_distinct == 2
+    st = cache.stats()
+    assert st["hit_rate"] == pytest.approx(7 / 9)
+    assert st["hit_rate_distinct"] == pytest.approx(2 / 4)
+
+
+def test_warm_cache_with_attached_prefetcher_stats(built, queries_mod,
+                                                   tmp_path):
+    """Caller-supplied cache with its OWN prefetcher: the stats fold-in
+    must route through cache.bytes_read (no double count), and a warm
+    pass — after the quiescing reset — reads nothing."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    pf = LeafPrefetcher(store)
+    cache = DeviceLeafCache(store, capacity_leaves=store.num_leaves,
+                            prefetcher=pf)
+    try:
+        cold = S.search_ooc(store, queries_mod, 5, cache=cache)
+        assert cache.prefetcher is pf       # not detached
+        assert cold.stats["bytes_read"] == \
+            cold.stats["bytes_read_sync"] \
+            + cold.stats["prefetch_bytes_read"]
+        cache.reset_counters()
+        warm = S.search_ooc(store, queries_mod, 5, cache=cache)
+        assert_same(cold.result, warm.result)
+        assert warm.stats["bytes_read"] == 0
+        assert warm.stats["prefetch_bytes_read"] == 0
+        assert warm.stats["hit_rate"] == 1.0
+    finally:
+        pf.close()
+
+
+def test_read_leaf_out_reuse_zeroes_tail(built, tmp_path):
+    """A reused out= buffer must not leak rows from a larger leaf that
+    previously occupied it."""
+    store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
+                             resident="summaries")
+    sizes = store.offsets_h[1:] - store.offsets_h[:-1]
+    big = int(np.argmax(sizes))
+    small = int(np.argmin(np.where(sizes > 0, sizes, sizes.max())))
+    buf = store.read_leaf(big)
+    buf[:] = 7                       # poison: simulate stale rows
+    out = store.read_leaf(small, out=buf)
+    assert out is buf
+    ssz = store.leaf_size(small)
+    np.testing.assert_array_equal(
+        out[:ssz], store.mmap[store.offsets_h[small]:
+                              store.offsets_h[small] + ssz])
+    assert not np.any(out[ssz:])     # tail fully zeroed
 
 
 def test_engine_spill_round_trip(walk_data_mod, queries_mod, tmp_path):
