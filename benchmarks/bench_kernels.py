@@ -12,9 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 from .common import csv_line, emit, timeit
+
+K = 10          # top-k width of every merge case (paper default)
+LEAF_M = 64     # rows per visited leaf in the merge widths
 
 
 def run(scale: str = "default", out_dir=None) -> List[dict]:
@@ -31,23 +34,74 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     w = jnp.ones((32,), jnp.float32)
     codes = jnp.asarray(rng.integers(0, 256, (m, 16)), jnp.int32)
     lut = jnp.asarray(rng.uniform(size=(16, 256)), jnp.float32)
+    luts = jnp.asarray(rng.uniform(size=(b, 16, 256)), jnp.float32)
 
+    # merge operands at the refinement loop's real widths: the solo
+    # candidate block is k + V*M per lane; the cooperative block is
+    # k + B*V*M (every lane scores the whole pool). Pool ids are
+    # lane-invariant, exactly like the share_gathers call sites.
+    solo_w = LEAF_M
+    coop_w = b * LEAF_M
+    d_solo = jnp.asarray(rng.uniform(size=(b, solo_w)), jnp.float32)
+    i_solo = jnp.asarray(
+        rng.integers(0, 4 * m, (b, solo_w)), jnp.int32)
+    d_coop = jnp.asarray(rng.uniform(size=(b, coop_w)), jnp.float32)
+    i_coop1 = jnp.asarray(rng.permutation(4 * coop_w)[:coop_w],
+                          jnp.int32)
+    i_coop2 = jnp.broadcast_to(i_coop1[None], (b, coop_w))
+    top_d = jnp.sort(jnp.asarray(rng.uniform(size=(b, K)), jnp.float32),
+                     axis=1)
+    top_i = jnp.asarray(10 * coop_w + np.arange(b * K).reshape(b, K),
+                        jnp.int32)
+
+    # every case is a (fn, operands) pair jitted with the operands as
+    # RUNTIME arguments — closing over device arrays would inline them
+    # as constants and XLA constant-folds whole sorts away (the ref
+    # merge baselines then time as ~0 after a 40s+ compile)
     cases = {
-        "paa": lambda: ops.paa(x, 16),
-        "box_mindist": lambda: ops.box_mindist(qs, lo, hi, w),
-        "l2": lambda: ops.l2(q, x),
-        "l2_topk": lambda: ops.l2_topk(q, x, 10),
-        "pq_adc": lambda: ops.pq_adc(codes, lut),
+        "paa": (lambda a: ops.paa(a, 16), (x,)),
+        "box_mindist": (ops.box_mindist, (qs, lo, hi, w)),
+        "l2": (ops.l2, (q, x)),
+        "l2_topk": (lambda a, c: ops.l2_topk(a, c, K), (q, x)),
+        "pq_adc": (ops.pq_adc, (codes, lut)),
+        "pq_adc_batch": (ops.pq_adc_batch, (codes, luts)),
+        "topk_merge": (ops.topk_merge, (d_solo, i_solo, top_d, top_i)),
+        "topk_merge_sort_ref": (ref.ref_topk_merge,
+                                (d_solo, i_solo, top_d, top_i)),
+        "topk_merge_unique_coop": (ops.topk_merge_unique,
+                                   (d_coop, i_coop1, top_d, top_i)),
+        "topk_merge_unique_sort_ref_coop":
+            (ref.ref_topk_merge_unique, (d_coop, i_coop2, top_d, top_i)),
+    }
+    widths = {
+        "pq_adc_batch": f"b={b};m_rows={m};pq_m=16",
+        "topk_merge": f"b={b};width=k+{solo_w}",
+        "topk_merge_sort_ref": f"b={b};width=k+{solo_w}",
+        "topk_merge_unique_coop": f"b={b};width=k+{coop_w}",
+        "topk_merge_unique_sort_ref_coop": f"b={b};width=k+{coop_w}",
     }
     rows: List[dict] = []
-    for name, fn in cases.items():
+    timed = {}
+    for name, (fn, operands) in cases.items():
         jitted = jax.jit(fn)
-        sec = timeit(jitted, repeats=5)
+        sec = timeit(lambda: jitted(*operands), repeats=5)
+        timed[name] = sec
         rows.append({"bench": "kernels", "kernel": name,
                      "us_per_call": sec * 1e6,
                      "note": "XLA:CPU oracle path; Pallas validated in "
                              "interpret mode (tests/test_kernels.py)"})
         print(csv_line(f"kernel/{name}", sec * 1e6,
-                       f"b={b};m={m};n={n}"))
+                       widths.get(name, f"b={b};m={m};n={n}")))
+    # selection-vs-full-sort speedups (the ISSUE 3 acceptance metric)
+    for new, old in (("topk_merge", "topk_merge_sort_ref"),
+                     ("topk_merge_unique_coop",
+                      "topk_merge_unique_sort_ref_coop")):
+        speedup = timed[old] / timed[new]
+        rows.append({"bench": "kernels", "kernel": f"{new}_speedup",
+                     "speedup_vs_full_sort": speedup,
+                     "us_new": timed[new] * 1e6,
+                     "us_old": timed[old] * 1e6})
+        print(csv_line(f"kernel/{new}_speedup", timed[new] * 1e6,
+                       f"x{speedup:.1f}_vs_full_sort"))
     emit(rows, out_dir, "bench_kernels")
     return rows

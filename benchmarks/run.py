@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.run [--scale small|default|large]
                                             [--only fig3,fig8,...]
+    PYTHONPATH=src python -m benchmarks.run --snapshot           # perf
+        trajectory: writes BENCH_pr3.json at the repo root (kernel µs,
+        bytes-read, queries/s at the default scale)
+    PYTHONPATH=src python -m benchmarks.run --snapshot --smoke   # the
+        scripts/verify.sh gate: compile+run every snapshot path once at
+        the small scale, write nothing
 
 Prints ``name,us_per_call,derived`` CSV lines (harness contract) and
 writes JSON rows under experiments/bench/."""
@@ -28,12 +34,41 @@ SUITES = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", default="small",
-                    choices=["small", "default", "large"])
+    ap.add_argument("--scale", default=None,
+                    choices=["small", "default", "large"],
+                    help="bench scale (figure suites default to small; "
+                         "--snapshot defaults to default)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite keys (substring match)")
-    ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--out", default=None,
+                    help="JSON output dir for the figure suites "
+                         "(default experiments/bench; not applicable "
+                         "to --snapshot, which writes BENCH_pr3.json "
+                         "at the repo root by contract)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="write the BENCH_pr3.json perf-trajectory "
+                         "snapshot at the repo root instead of running "
+                         "the figure suites")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --snapshot: compile+run once at the "
+                         "small scale, write nothing (verify.sh gate)")
     args = ap.parse_args()
+
+    if args.smoke and not args.snapshot:
+        ap.error("--smoke only applies to --snapshot")
+    if args.snapshot:
+        if args.only is not None or args.out is not None:
+            ap.error("--only/--out do not apply to --snapshot (it "
+                     "always writes BENCH_pr3.json at the repo root)")
+        from . import snapshot
+
+        # explicit --scale is honored; --smoke shrinks the default
+        scale = args.scale or ("small" if args.smoke else "default")
+        snapshot.run_snapshot(scale=scale, smoke=args.smoke)
+        return
+
+    args.scale = args.scale or "small"
+    args.out = args.out or "experiments/bench"
 
     import importlib
 

@@ -1,0 +1,104 @@
+"""Perf-trajectory snapshot: one compact JSON at the repo root per PR.
+
+``python -m benchmarks.run --snapshot`` writes BENCH_pr3.json with the
+three currencies of the serving hot path at the default bench scale —
+kernel µs (selection merges vs their full-sort baselines), on-disk
+bytes-read, and in-memory queries/s — so later PRs can diff the perf
+trajectory without rerunning whole suites. ``--smoke`` compiles and
+runs every path once at the small scale without writing the file (the
+scripts/verify.sh regression gate: a snapshot that stops compiling
+fails verify before it rots).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search as S
+from repro.core.index import FrozenIndex
+from repro.core.indexes import dstree
+from repro.store import DeviceLeafCache
+
+from . import bench_kernels
+from .common import dataset, timeit
+
+SNAPSHOT_NAME = "BENCH_pr3.json"
+
+
+def _repo_root_path() -> str:
+    return os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", SNAPSHOT_NAME))
+
+
+def collect(scale: str = "default", smoke: bool = False) -> dict:
+    repeats = 1 if smoke else 3
+    data, q, _bf, p = dataset(scale)
+    qj = jnp.asarray(q)
+    k = p["k"]
+
+    # --- kernel µs + the selection-vs-full-sort speedups ---
+    krows = bench_kernels.run(scale, out_dir=None)
+    kernels_us = {r["kernel"]: round(r["us_per_call"], 1)
+                  for r in krows if "us_per_call" in r}
+    speedups = {r["kernel"]: round(r["speedup_vs_full_sort"], 2)
+                for r in krows if "speedup_vs_full_sort" in r}
+
+    # --- in-memory queries/s (the paper's best tree, eps=1) ---
+    idx = dstree.build(data, leaf_cap=256)
+
+    def qfn():
+        return S.search(idx, qj, k, delta=0.99, epsilon=1.0)
+
+    sec = timeit(qfn, repeats=repeats)
+    qps = len(q) / sec
+
+    # --- on-disk bytes-read (f32 store, solo vs cooperative) ---
+    disk = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        store = FrozenIndex.load(idx.save(os.path.join(tmp, "f32")),
+                                 resident="summaries")
+        cap = max(store.num_leaves // 8, qj.shape[0])
+        for share in (False, True):
+            cache = DeviceLeafCache(store, cap)
+            t0 = time.perf_counter()
+            out = S.search_ooc(store, qj, k, delta=0.99, epsilon=1.0,
+                               cache=cache, share_gathers=share)
+            jax.block_until_ready(out.result.dists)
+            tag = "coop" if share else "solo"
+            disk[f"bytes_read_cold_{tag}"] = out.stats["bytes_read"]
+            disk[f"t_cold_s_{tag}"] = round(time.perf_counter() - t0, 4)
+        disk["dataset_bytes"] = out.stats["dataset_bytes"]
+
+    return {
+        "snapshot": SNAPSHOT_NAME,
+        "scale": scale,
+        "backend": jax.default_backend(),
+        "kernels_us": kernels_us,
+        "merge_speedup_vs_full_sort": speedups,
+        "query_memory": {
+            "method": "dstree", "epsilon": 1.0, "delta": 0.99,
+            "queries_per_s": round(qps, 1),
+            "us_per_query": round(sec / len(q) * 1e6, 1),
+        },
+        "query_disk": disk,
+    }
+
+
+def run_snapshot(scale: str = "default", smoke: bool = False,
+                 out_path: Optional[str] = None) -> dict:
+    snap = collect(scale=scale, smoke=smoke)
+    if smoke:
+        print("# snapshot smoke OK (nothing written)")
+        return snap
+    path = out_path or _repo_root_path()
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1)
+    print(f"# snapshot written to {path}")
+    return snap

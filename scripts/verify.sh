@@ -25,6 +25,8 @@ WFLAGS=(-W "error::repro.store.layout.StoreFormatDeprecationWarning")
 run_fast() {
   echo "== verify: fast tier1 subset =="
   python -m pytest -q -m tier1 "${WFLAGS[@]}"
+  echo "== verify: bench snapshot smoke (compile-only, small scale) =="
+  python -m benchmarks.run --snapshot --smoke
 }
 
 run_full() {

@@ -7,7 +7,7 @@ single-node semantics. A query batch is replicated to all shards, each
 runs the batched Algorithm 2 locally (shard_map), and per-shard top-k
 rows are merged with an all-gather + static sort.
 
-Guarantee preservation under sharding (DESIGN.md §5.3): every global true
+Guarantee preservation under sharding (docs/PERF.md §6): every global true
 r-th NN lives in some shard where it ranks <= r locally; the local
 guarantee bounds that shard's reported r-th by (1+eps) x local true r-th
 <= (1+eps) x global true r-th, and the merged r-th best across shards
@@ -125,7 +125,7 @@ class DistributedEngine:
         max_rows = max(sh.data.shape[0] for sh in shards)
         max_leaf = max(sh.max_leaf for sh in shards)
         arrs = {"box_lo": [], "box_hi": [], "offsets": [], "data": [],
-                "ids": []}
+                "ids": [], "row_norms": []}
         for sh in shards:
             L = sh.num_leaves
             off = np.asarray(sh.offsets)
@@ -141,6 +141,10 @@ class DistributedEngine:
                 np.asarray(sh.data), max_rows, np.float32(0)))
             arrs["ids"].append(_pad_to(
                 np.asarray(sh.ids), max_rows, np.int64(-1)))
+            # padding rows are all-zero, so norm 0 keeps the cache
+            # consistent with the padded data
+            arrs["row_norms"].append(_pad_to(
+                np.asarray(sh.row_norms), max_rows, np.float32(0)))
 
         spec0 = P(self.axes if len(self.axes) > 1 else self.axes[0])
 
@@ -156,6 +160,8 @@ class DistributedEngine:
                                     jnp.int32)),
             data=put(jnp.asarray(np.stack(arrs["data"]))),
             ids=put(jnp.asarray(np.stack(arrs["ids"]), jnp.int32)),
+            row_norms=put(jnp.asarray(np.stack(arrs["row_norms"]),
+                                      jnp.float32)),
             weights=jax.device_put(
                 base.weights, NamedSharding(self.mesh, P())),
             hist=DistanceHistogram(
@@ -194,6 +200,7 @@ class DistributedEngine:
                 kind=idx.kind, summary=idx.summary,
                 n_summary=idx.n_summary, max_leaf=idx.max_leaf,
                 n_total=idx.n_total, series_len=idx.series_len,
+                row_norms=spec_shard,
             ),
             P(),  # queries replicated
         )
@@ -205,10 +212,10 @@ class DistributedEngine:
             sq = jax.tree_util.tree_map(
                 lambda a: a[0], (idx_local.box_lo, idx_local.box_hi,
                                  idx_local.offsets, idx_local.data,
-                                 idx_local.ids))
+                                 idx_local.ids, idx_local.row_norms))
             lidx = dataclasses.replace(
                 idx_local, box_lo=sq[0], box_hi=sq[1], offsets=sq[2],
-                data=sq[3], ids=sq[4])
+                data=sq[3], ids=sq[4], row_norms=sq[5])
             # search_impl, not search: an inner jit under shard_map
             # miscompiles the refinement loop on jax 0.4.x.
             res = search_impl(

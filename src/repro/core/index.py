@@ -1,7 +1,7 @@
 """FrozenIndex: the searchable artifact shared by iSAX2+/DSTree/VA+file.
 
 Every data-series index in the paper reduces, once built, to the same
-searchable structure (DESIGN.md §5.1): per-leaf summary-space *boxes* with
+searchable structure (docs/PERF.md §6): per-leaf summary-space *boxes* with
 per-dim weights (the lower bound is a weighted box distance), leaf extents
 over a leaf-contiguous permutation of the raw data, and the distance
 histogram for r_delta. Trees differ only in how boxes/extents are chosen
@@ -21,6 +21,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops
 
 from .histogram import DistanceHistogram
 from .summaries import dft as dft_mod
@@ -45,6 +47,12 @@ class FrozenIndex:
     max_leaf: int = dataclasses.field(metadata={"static": True})
     n_total: int = dataclasses.field(metadata={"static": True})
     series_len: int = dataclasses.field(metadata={"static": True})
+    # [Npad] f32 squared row norms of ``data``, cached at freeze time so
+    # the refinement loop gathers |x|^2 instead of re-reducing the
+    # gathered rows every iteration (docs/PERF.md). Optional: indexes
+    # assembled without freeze_from_leaves fall back to a one-off
+    # compute in search_impl.
+    row_norms: Optional[jax.Array] = None
 
     @property
     def num_leaves(self) -> int:
@@ -83,7 +91,7 @@ class FrozenIndex:
 jax.tree_util.register_dataclass(
     FrozenIndex,
     data_fields=["box_lo", "box_hi", "weights", "offsets", "data", "ids",
-                 "hist"],
+                 "hist", "row_norms"],
     meta_fields=["kind", "summary", "n_summary", "max_leaf", "n_total",
                  "series_len"],
 )
@@ -123,14 +131,16 @@ def freeze_from_leaves(
         pdata = np.asarray(jnp.asarray(pdata, data_dtype))
     pids = np.full(npad, -1, np.int64)
     pids[:n] = perm
+    dev_data = jnp.asarray(pdata, data_dtype)
     return FrozenIndex(
         box_lo=jnp.asarray(box_lo, jnp.float32),
         box_hi=jnp.asarray(box_hi, jnp.float32),
         weights=jnp.asarray(weights, jnp.float32),
         offsets=jnp.asarray(offsets, jnp.int32),
-        data=jnp.asarray(pdata, data_dtype),
+        data=dev_data,
         ids=jnp.asarray(pids, jnp.int32),
         hist=hist,
+        row_norms=ops.row_sq_norms(dev_data),
         kind=kind,
         summary=summary,
         n_summary=n_summary,

@@ -1,14 +1,23 @@
 """Batched, TPU-native Algorithm 1 / Algorithm 2 (the paper's §3.2.3).
 
 Semantics are the paper's exactly; the execution strategy is the TPU
-adaptation of DESIGN.md §3:
+adaptation (docs/PERF.md):
 
   1. lower-bound every leaf in one vectorized pass (box_mindist kernel);
-  2. argsort -> per-query leaf visit order (the priority-queue order);
+  2. LAZY leaf frontier -> per-query visit order (the priority-queue
+     order): instead of a full [B, L] argsort, partially select only the
+     first F ranks with lax.top_k and refill each lane's frontier from
+     the remaining lb pool when it runs low. The refill threshold is the
+     last consumed (lb, leaf-id) pair, so every refill selects exactly
+     the lexicographic successors — the emitted order is provably the
+     stable argsort order (globally non-decreasing lb, Algorithm 2's
+     correctness condition) while per-query sort work scales with ranks
+     VISITED, not with L.
   3. `lax.while_loop` over visit ranks: each iteration every active query
      lane gathers its next `visit_batch` leaves, computes true distances
-     (fused L2), merges into its running sorted top-k, and evaluates the
-     stopping predicate
+     (fused L2 with squared row norms cached at freeze time), merges
+     into its running sorted top-k via O(k) partial-selection merges
+     (kernels/ops.py topk_merge*), and evaluates the stopping predicate
          next_lb > bsf/(1+eps)            [Alg.2 line 10/20 pruning]
        | bsf <= (1+eps) * r_delta         [Alg.2 line 16 early stop]
        | visited >= nprobe                [ng-approximate]
@@ -18,8 +27,8 @@ adaptation of DESIGN.md §3:
 Guarantees: with nprobe=None this is exact for (delta=1, eps=0),
 epsilon-approximate for (1, eps), delta-epsilon otherwise — identical to
 Algorithm 2 because leaves are visited in non-decreasing lb order and the
-predicates match (proof sketch in DESIGN.md §3). All comparisons run in
-squared-distance space to avoid sqrt in the loop.
+predicates match (frontier proof in docs/PERF.md). All comparisons run
+in squared-distance space to avoid sqrt in the loop.
 
 `visit_batch > 1` amortizes loop overhead (essential for VA+file where a
 "leaf" is a single series); it can only visit *more* than strictly
@@ -50,15 +59,68 @@ class SearchResult(NamedTuple):
     lb_computed: jax.Array     # scalar int32 (= L, the filter pass size)
 
 
-def _batched_sq_l2(q: jax.Array, rows: jax.Array) -> jax.Array:
-    """q [B, n], rows [B, M, n] -> [B, M] f32 squared distances."""
-    qf = q.astype(jnp.float32)
-    rf = rows.astype(jnp.float32)
-    qn = jnp.sum(qf * qf, axis=-1)[:, None]
-    rn = jnp.sum(rf * rf, axis=-1)
-    cross = jnp.einsum("bn,bmn->bm", qf, rf,
-                       preferred_element_type=jnp.float32)
-    return jnp.maximum(qn - 2.0 * cross + rn, 0.0)
+def default_frontier(num_leaves: int, visit_batch: int) -> int:
+    """Default lazy-frontier width: a few refill-free batches of
+    lookahead (covering this iteration's visits, the next_lb probe and
+    the prefetch window) without approaching the full leaf count."""
+    return min(num_leaves, max(64, 4 * visit_batch))
+
+
+def frontier_select(lb_sq: jax.Array, thr_lb: jax.Array,
+                    thr_id: jax.Array, f: int) -> tuple:
+    """Partially select each lane's next ``f`` visit ranks: the
+    lexicographic (lb, leaf-id) successors of the lane's threshold
+    pair (thr = (-1, -1) selects the first window). lax.top_k breaks
+    lb ties by lower leaf id — the stable argsort tie order — so
+    chaining selections reproduces the full sorted visit order exactly
+    (Algorithm 2's non-decreasing-lb condition; docs/PERF.md §2).
+
+    THE visit-order primitive: search_impl's in-loop refill and
+    store.ooc's host refill both call this one function, so the
+    bit-exact in-memory/OOC parity of the visit order holds by
+    construction."""
+    L = lb_sq.shape[1]
+    iota = jnp.arange(L, dtype=jnp.int32)
+    remaining = jnp.where(
+        (lb_sq > thr_lb[:, None])
+        | ((lb_sq == thr_lb[:, None])
+           & (iota[None, :] > thr_id[:, None])),
+        lb_sq, INF)
+    nv, ni = jax.lax.top_k(-remaining, f)
+    return -nv, ni
+
+
+def dup_leaf_mask(leaf: jax.Array, ok: jax.Array) -> jax.Array:
+    """[B, V] leaf ids + slot-usable mask -> [B, V] True where the slot
+    repeats a leaf already pooled by an EARLIER usable slot this
+    iteration. The cooperative paths mask those copies out before
+    scoring, which (a) keeps ops.topk_merge_unique's distinct-id
+    precondition and (b) changes nothing semantically — the copies
+    carry bit-identical (d, id) pairs.
+
+    Shared by search_impl (device) and search_ooc's host loop (tiny
+    [B, V] operands) so both cooperative pools stay identical by
+    construction. dup[i] = exists j < i with leaf_j == leaf_i and
+    ok[j]; computed in O(BV log BV): sort slots by (leaf, ok-first
+    rank), find each leaf group's leader (its minimal-position usable
+    slot), and a slot is a duplicate iff that leader is usable and
+    strictly earlier."""
+    bv = leaf.shape[0] * leaf.shape[1]
+    fl = jnp.asarray(leaf, jnp.int32).reshape(bv)
+    fo = jnp.asarray(ok).reshape(bv)
+    posv = jnp.arange(bv, dtype=jnp.int32)
+    rank = jnp.where(fo, posv, posv + bv)  # usable slots sort first
+    leaf_s, _, pos_s, ok_s = jax.lax.sort(
+        (fl, rank, posv, fo.astype(jnp.int32)), num_keys=2)
+    t = jnp.arange(bv, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), leaf_s[1:] != leaf_s[:-1]])
+    start_idx = jax.lax.cummax(jnp.where(is_start, t, 0))
+    leader_ok = ok_s[start_idx] > 0
+    leader_pos = pos_s[start_idx]
+    dup_s = leader_ok & (leader_pos < pos_s)
+    dup = jnp.zeros((bv,), bool).at[pos_s].set(dup_s)
+    return dup.reshape(leaf.shape)
 
 
 def search_impl(
@@ -73,6 +135,7 @@ def search_impl(
     force_pallas: bool = False,
     sync_axes: tuple = (),
     share_gathers: bool = False,
+    frontier: Optional[int] = None,
 ) -> SearchResult:
     """Batched Algorithm 2 body (see module docstring for semantics).
 
@@ -82,7 +145,7 @@ def search_impl(
     Extra candidates can only improve a lane's top-k, so every
     guarantee is preserved, while each lane's best-so-far tightens from
     the whole batch's I/O — the per-query bytes drop measurably
-    (EXPERIMENTS.md §Perf). Raises arithmetic intensity from ~0.5 to
+    (docs/PERF.md §4). Raises arithmetic intensity from ~0.5 to
     ~0.5*B flops/byte on the refinement stream.
 
     sync_axes (inside shard_map only): exchange the best-so-far with
@@ -93,21 +156,32 @@ def search_impl(
     enter the global top-k (§Perf beyond-paper optimization — the
     collective analogue of the paper's shared bsf). Loop continuation
     becomes a global flag carried in-state so shards iterate in
-    lockstep (collectives inside the body, none in cond)."""
+    lockstep (collectives inside the body, none in cond).
+
+    frontier: lazy leaf-frontier width F (ranks partially selected per
+    refill; None -> default_frontier). Any width yields the SAME visit
+    order — the stable argsort order — it only tunes how much lookahead
+    each refill materializes."""
     b, n = queries.shape
     L = index.num_leaves
     m = index.max_leaf
     v = visit_batch
     npad = index.data.shape[0]
 
-    # ---- filter: lower bound to every leaf, visit order ----
+    # ---- filter: lower bound to every leaf ----
     q_sum = index.summarize_queries(queries)
     lb_sq = ops.box_mindist(
         q_sum, index.box_lo, index.box_hi, index.weights,
         force_pallas=force_pallas,
     )  # [B, L] squared
-    order = jnp.argsort(lb_sq, axis=1)
-    lb_sorted = jnp.take_along_axis(lb_sq, order, axis=1)
+
+    # lazy frontier: the first F ranks of the visit order, refilled in
+    # the loop body when a lane runs low (never a full [B, L] argsort)
+    F = default_frontier(L, v) if frontier is None \
+        else min(max(int(frontier), v + 1), L)
+    fr_lb0, fr_id0 = frontier_select(
+        lb_sq, jnp.full((b,), -1.0, jnp.float32),
+        jnp.full((b,), -1, jnp.int32), F)
 
     eps_mult = jnp.float32((1.0 + epsilon) ** 2)
     rd = r_delta(index.hist, delta, index.n_total)
@@ -115,6 +189,8 @@ def search_impl(
     max_rank = L if nprobe is None else min(nprobe, L)
 
     qf = queries.astype(jnp.float32)
+    norms = index.row_norms if index.row_norms is not None \
+        else ops.row_sq_norms(index.data)
 
     class State(NamedTuple):
         rank: jax.Array       # [B] next visit rank
@@ -124,6 +200,11 @@ def search_impl(
         leaves: jax.Array     # [B]
         rows: jax.Array       # [B]
         go: jax.Array         # scalar bool: any shard still active
+        fr_lb: jax.Array      # [B, F] frontier lbs (rank window)
+        fr_id: jax.Array      # [B, F] frontier leaf ids
+        fpos: jax.Array       # [B] next unconsumed frontier position
+        thr_lb: jax.Array     # [B] last consumed lb (refill threshold)
+        thr_id: jax.Array     # [B] last consumed leaf id
 
     init = State(
         rank=jnp.zeros((b,), jnp.int32),
@@ -133,6 +214,11 @@ def search_impl(
         leaves=jnp.zeros((b,), jnp.int32),
         rows=jnp.zeros((b,), jnp.int32),
         go=jnp.asarray(True),
+        fr_lb=fr_lb0,
+        fr_id=fr_id0,
+        fpos=jnp.zeros((b,), jnp.int32),
+        thr_lb=jnp.full((b,), -1.0, jnp.float32),
+        thr_id=jnp.full((b,), -1, jnp.int32),
     )
 
     lane = jnp.arange(b)
@@ -140,12 +226,33 @@ def search_impl(
     def cond(s: State):
         return s.go
 
+    def refill_frontier(fr_lb, fr_id, fpos, thr_lb, thr_id, need):
+        """Refilling lanes get the F lexicographic (lb, leaf-id)
+        successors of their threshold — exactly ranks [rank, rank+F)
+        of the stable argsort order (frontier_select)."""
+        nv, ni = frontier_select(lb_sq, thr_lb, thr_id, F)
+        sel = need[:, None]
+        return (jnp.where(sel, nv, fr_lb),
+                jnp.where(sel, ni, fr_id),
+                jnp.where(need, 0, fpos))
+
     def body(s: State) -> State:
+        # refill exhausted frontiers first (rare: amortized once per
+        # floor(F/v) iterations per lane; skipped entirely via cond
+        # when no lane needs it)
+        need = s.active & (s.fpos > F - 1 - v)
+        fr_lb, fr_id, fpos = jax.lax.cond(
+            jnp.any(need),
+            lambda a: refill_frontier(*a),
+            lambda a: a[:3],
+            (s.fr_lb, s.fr_id, s.fpos, s.thr_lb, s.thr_id, need),
+        )
+
         # ranks to visit this iteration: [B, V]
         rk = s.rank[:, None] + jnp.arange(v)[None, :]
         in_range = rk < max_rank
-        rk_c = jnp.minimum(rk, L - 1)
-        leaf = jnp.take_along_axis(order, rk_c, axis=1)  # [B, V]
+        ppos = jnp.minimum(fpos[:, None] + jnp.arange(v)[None, :], F - 1)
+        leaf = jnp.take_along_axis(fr_id, ppos, axis=1)  # [B, V]
         start = index.offsets[leaf]          # [B, V]
         end = index.offsets[leaf + 1]
         pos = jnp.arange(m)[None, None, :]
@@ -154,29 +261,29 @@ def search_impl(
             & s.active[:, None, None]
         idx = jnp.minimum(idx, npad - 1).reshape(b, v * m)
         if share_gathers:
-            # all lanes' rows pooled; every query scores every row
+            # all lanes' rows pooled; every query scores every row.
+            # Copies of a leaf pooled twice THIS iteration are masked
+            # (dup_leaf_mask) so pool ids stay distinct — the
+            # topk_merge_unique/coop_score_select precondition; dedup
+            # across ITERATIONS happens in the merge.
             flat = idx.reshape(b * v * m)
             rows = index.data[flat]          # [B*V*M, n]
-            fvalid = valid.reshape(b * v * m)
+            slot_ok = in_range & s.active[:, None]
+            dup = dup_leaf_mask(leaf, slot_ok)
+            fvalid = (valid & ~dup[:, :, None]).reshape(b * v * m)
             cand_ids = jnp.where(fvalid, index.ids[flat], -1)
-            d = jnp.maximum(
-                jnp.sum(qf * qf, 1)[:, None]
-                - 2.0 * (qf @ rows.astype(jnp.float32).T)
-                + jnp.sum(rows.astype(jnp.float32) ** 2, 1)[None, :],
-                0.0)
-            d = jnp.where(fvalid[None, :], d, INF)
-            # dedup merge: a leaf pooled at two iterations is scored
-            # twice for every lane; plain topk_merge would both return
-            # duplicate ids and shrink the kth-best below the true kth
-            # distinct distance (stopping too early)
-            top_d, top_i = ops.topk_merge_unique(
-                d, jnp.broadcast_to(cand_ids, (b, b * v * m)),
-                s.top_d, s.top_i)
+            # fused score+select: candidates for the dedup merge are
+            # chosen per lane without materializing [B, B*V*M] on TPU
+            sel_d, sel_i = ops.coop_score_select(
+                qf, rows, norms[flat], cand_ids,
+                min(2 * k, b * v * m), force_pallas=force_pallas)
+            top_d, top_i = ops.dedup_merge_topk(
+                sel_d, sel_i, s.top_d, s.top_i)
         else:
             rows = index.data[idx]           # [B, V*M, n]
             cand_ids = jnp.where(valid.reshape(b, v * m),
                                  index.ids[idx], -1)
-            d = _batched_sq_l2(qf, rows)
+            d = ops.sq_l2(qf, rows, norms[idx])
             d = jnp.where(valid.reshape(b, v * m), d, INF)
             top_d, top_i = ops.topk_merge(d, cand_ids, s.top_d, s.top_i)
 
@@ -189,7 +296,9 @@ def search_impl(
         exhausted = rank_next >= max_rank
         next_lb = jnp.where(
             exhausted, INF,
-            lb_sorted[lane, jnp.minimum(rank_next, L - 1)],
+            jnp.take_along_axis(
+                fr_lb, jnp.minimum(fpos + v, F - 1)[:, None], axis=1,
+            )[:, 0],
         )
         bsf = top_d[:, k - 1]
         if sync_axes:
@@ -201,7 +310,17 @@ def search_impl(
         go = jnp.any(active)
         if sync_axes:
             go = jax.lax.pmax(go.astype(jnp.int32), sync_axes) > 0
-        return State(rank_next, top_d, top_i, active, leaves, rows_c, go)
+
+        # refill threshold <- last rank consumed this iteration
+        last = jnp.minimum(fpos + v - 1, F - 1)[:, None]
+        thr_lb = jnp.where(
+            s.active, jnp.take_along_axis(fr_lb, last, axis=1)[:, 0],
+            s.thr_lb)
+        thr_id = jnp.where(
+            s.active, jnp.take_along_axis(fr_id, last, axis=1)[:, 0],
+            s.thr_id)
+        return State(rank_next, top_d, top_i, active, leaves, rows_c,
+                     go, fr_lb, fr_id, fpos + v, thr_lb, thr_id)
 
     final = jax.lax.while_loop(cond, body, init)
     return SearchResult(
@@ -220,7 +339,7 @@ def search_impl(
 search = jax.jit(
     search_impl,
     static_argnames=("k", "nprobe", "visit_batch", "force_pallas",
-                     "sync_axes", "share_gathers"),
+                     "sync_axes", "share_gathers", "frontier"),
 )
 
 
@@ -232,8 +351,9 @@ def search_ooc(store, queries: jax.Array, k: int, **kw):
     checks via its exact re-rank but not exact epsilon=0 search, and
     warns if asked). Accepts
     delta/epsilon/nprobe/visit_batch plus cache/cache_leaves/prefetch,
-    share_gathers (cooperative scoring, as in :func:`search_impl`) and
-    rerank (codec="pq" exact re-rank pool multiplier); returns
+    share_gathers (cooperative scoring, as in :func:`search_impl`),
+    frontier (lazy visit-order window width, as in :func:`search_impl`)
+    and rerank (codec="pq" exact re-rank pool multiplier); returns
     OocResult(result=SearchResult, stats={bytes_read, hit_rate,
     codec, ...})."""
     from repro.store.ooc import search_ooc as impl

@@ -3,6 +3,7 @@
 #   box_mindist.py — unified summary lower bound (filter step)
 #   l2_dist.py     — fused raw-distance refinement ("calcRealDist")
 #   pq_adc.py      — IMI PQ asymmetric-distance scan
+#   topk.py        — fused cooperative score + top-k select (share path)
 # ops.py = jit'd wrappers with CPU fallback; ref.py = pure-jnp oracles.
 from . import ops, ref
 

@@ -19,6 +19,7 @@ from .box_mindist import box_mindist_pallas
 from .l2_dist import l2_pallas
 from .paa import paa_pallas
 from .pq_adc import pq_adc_pallas
+from .topk import coop_score_select_pallas
 
 
 def on_tpu() -> bool:
@@ -137,13 +138,226 @@ def l2_topk(
     return -neg, idx
 
 
+def row_sq_norms(rows: jax.Array) -> jax.Array:
+    """Per-row squared L2 norms [N, n] -> [N] f32.
+
+    THE norm computation of the serving path: FrozenIndex freeze,
+    save_index sidecar, LeafStore open and every fallback all call this
+    one function so cached-vs-recomputed norms stay bit-identical.
+    """
+    rf = rows.astype(jnp.float32)
+    return jnp.sum(rf * rf, axis=-1)
+
+
+def sq_l2(q: jax.Array, rows: jax.Array, row_norms: jax.Array
+          ) -> jax.Array:
+    """Fused squared-L2 with precomputed row norms (f32 accumulation).
+
+    q [B, n]; rows [R, n] -> [B, R] pooled (one MXU matmul scoring
+    every row against every lane — the cooperative regime) or rows
+    [B, M, n] -> [B, M] per-lane (row_norms [B, M]). The single
+    ``astype(f32)`` + norms-passed-in replaces the three copy-pasted
+    variants that previously lived in core/search.py and store/ooc.py.
+    """
+    qf = q.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1)[:, None]
+    rf = rows.astype(jnp.float32)
+    rn = row_norms.astype(jnp.float32)
+    if rows.ndim == 2:
+        return jnp.maximum(qn - 2.0 * (qf @ rf.T) + rn[None, :], 0.0)
+    cross = jnp.einsum("bn,bmn->bm", qf, rf,
+                       preferred_element_type=jnp.float32)
+    return jnp.maximum(qn - 2.0 * cross + rn, 0.0)
+
+
+def _select_k_by_d(dists, ids, kk: int):
+    """Per-row kk smallest candidates by distance, ties by column.
+
+    lax.top_k prefers the lower index on ties, which is exactly the
+    order a stable full sort gives candidates — so the selection drops
+    only elements that could never reach the merged top-k.
+    Output is sorted ascending (ties column-ascending).
+    """
+    neg_d, pos = jax.lax.top_k(-dists, kk)
+    return -neg_d, jnp.take_along_axis(ids, pos, axis=1)
+
+
+def _select_k_by_d_id_shared(dists, ids, kk: int):
+    """Per-row kk lexicographically-smallest (d, id) pairs when the
+    candidate ids are LANE-INVARIANT (ids [R], dists [B, R]) — every
+    cooperative call site, since the pooled rows are shared.
+
+    One cheap 1-D argsort of the R ids permutes the candidate COLUMNS
+    into id order; a single f32 top_k then breaks distance ties by
+    permuted position = by id, which IS the (d, id)-lex selection,
+    int32-exact, already in canonical order. One TopK total: XLA:CPU
+    rewrites a lone top_k to its fast custom call, but a top_k whose
+    operand depends on another top_k is left as a full O(R log R) sort
+    (measured ~70x slower at cooperative width), so threshold-style
+    two-pass selection is a trap here.
+    """
+    order = jnp.argsort(ids.astype(jnp.int32))
+    d_p = dists[:, order]
+    ids_p = ids.astype(jnp.int32)[order]
+    neg, pos = jax.lax.top_k(-d_p, kk)
+    return -neg, jnp.take(ids_p, pos)
+
+
+def _select_k_by_d_id(dists, ids, kk: int):
+    """Per-row kk lexicographically-smallest (d, id) pairs, sorted —
+    the generic [B, M] per-row-ids form (property tests; real callers
+    with shared pools use _select_k_by_d_id_shared).
+
+    Two top_k passes: pass 1 finds the kk-th smallest distance (the
+    selection threshold); pass 2 re-ranks only the threshold TIES by
+    id, so the selected SET matches the full (d, id) sort; a width-kk
+    2-key sort canonicalizes the order. Pass-2 keys are f32 (ids exact
+    below 2^24; above, float rounding only weakens WHICH of several
+    equal-distance candidates crosses the selection boundary — a
+    deterministic, guarantee-preserving tie-break, distances
+    identical; the final int32 2-key sort keeps the emitted order
+    exact regardless).
+    """
+    ids = ids.astype(jnp.int32)
+    neg_d, _ = jax.lax.top_k(-dists, kk)
+    thr = -neg_d[:, -1:]  # [B, 1] kk-th smallest distance
+    key = jnp.where(
+        dists < thr, jnp.float32(jnp.inf),
+        jnp.where(dists == thr, -ids.astype(jnp.float32),
+                  jnp.float32(-jnp.inf)))
+    _, pos = jax.lax.top_k(key, kk)
+    sel_d = jnp.take_along_axis(dists, pos, axis=1)
+    sel_i = jnp.take_along_axis(ids, pos, axis=1)
+    return jax.lax.sort((sel_d, sel_i), num_keys=2)
+
+
+def bitonic_merge_sorted(da, ia, db, ib):
+    """Merge two per-row sorted (ascending) lists: [B,ka]+[B,kb] ->
+    [B,ka+kb], the k+k bitonic-merge stage of :func:`topk_merge`.
+
+    Each element is tagged with its concatenation position; compares
+    are (d, tag)-lexicographic, so keys are unique and the
+    compare-exchange network reproduces the STABLE merge exactly
+    (a-list wins distance ties, as in the full-sort oracle). log2(W)
+    stages of [B, W] where-swaps, W = ka+kb padded to a power of two.
+    """
+    b, ka = da.shape
+    kb = db.shape[1]
+    total = ka + kb
+    w = 1 if total == 1 else 1 << (total - 1).bit_length()
+    pad = w - total
+    tag_a = jnp.broadcast_to(jnp.arange(ka, dtype=jnp.int32), (b, ka))
+    tag_b = jnp.broadcast_to(
+        jnp.arange(ka, w, dtype=jnp.int32), (b, kb + pad))
+    db_p = jnp.pad(db, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    ib_p = jnp.pad(ib, ((0, 0), (0, pad)), constant_values=-1)
+    # A asc ++ reverse(B asc) = one bitonic sequence in (d, tag)
+    d = jnp.concatenate([da, jnp.flip(db_p, axis=1)], axis=1)
+    i = jnp.concatenate([ia, jnp.flip(ib_p, axis=1)], axis=1)
+    t = jnp.concatenate([tag_a, jnp.flip(tag_b, axis=1)], axis=1)
+    step = w // 2
+    while step >= 1:
+        sh = (b, w // (2 * step), 2, step)
+        dr, ir, tr = d.reshape(sh), i.reshape(sh), t.reshape(sh)
+        d0, d1 = dr[:, :, 0], dr[:, :, 1]
+        i0, i1 = ir[:, :, 0], ir[:, :, 1]
+        t0, t1 = tr[:, :, 0], tr[:, :, 1]
+        swap = (d1 < d0) | ((d1 == d0) & (t1 < t0))
+        d = jnp.stack([jnp.where(swap, d1, d0),
+                       jnp.where(swap, d0, d1)], axis=2).reshape(b, w)
+        i = jnp.stack([jnp.where(swap, i1, i0),
+                       jnp.where(swap, i0, i1)], axis=2).reshape(b, w)
+        t = jnp.stack([jnp.where(swap, t1, t0),
+                       jnp.where(swap, t0, t1)], axis=2).reshape(b, w)
+        step //= 2
+    return d[:, :total], i[:, :total]
+
+
 def topk_merge(dists, ids, top_d, top_i):
-    """Merge a candidate batch into running sorted top-k rows."""
-    return ref.ref_topk_merge(dists, ids, top_d, top_i)
+    """Merge a candidate batch into running sorted top-k rows.
+
+    Selection formulation (bit-exact to :func:`ref.ref_topk_merge`,
+    ties included): lax.top_k picks the k best candidates — O(M log k)
+    instead of sorting the full k+M width — then a k+k bitonic merge
+    of the two sorted lists keeps per-iteration merge cost O(k log k)
+    independent of candidate width (docs/PERF.md)."""
+    k = top_d.shape[1]
+    kk = min(k, dists.shape[1])
+    sel_d, sel_i = _select_k_by_d(dists, ids, kk)
+    md, mi = bitonic_merge_sorted(top_d, top_i, sel_d, sel_i)
+    return md[:, :k], mi[:, :k]
+
+
+def dedup_merge_topk(sel_d, sel_i, top_d, top_i):
+    """Fold PRE-SELECTED candidates [B, kk] into the running top-k with
+    id dedup — the merge half of :func:`topk_merge_unique`, shared with
+    the fused cooperative kernel path. Id-dedup runs over the k+kk
+    survivors only (two tiny sorts), never the full candidate width;
+    the op sequence matches the full-sort oracle so placeholders and
+    (d, id) tie order come out identical."""
+    k = top_d.shape[1]
+    all_d = jnp.concatenate([top_d, sel_d], axis=1)
+    all_i = jnp.concatenate([top_i, sel_i.astype(top_i.dtype)], axis=1)
+    si, sd = jax.lax.sort((all_i, all_d), num_keys=2)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(si[:, :1], bool), si[:, 1:] == si[:, :-1]],
+        axis=1)
+    sd = jnp.where(dup, jnp.float32(jnp.inf), sd)
+    si = jnp.where(dup, -1, si)
+    new_d, new_i = jax.lax.sort((sd, si), num_keys=1)
+    return new_d[:, :k], new_i[:, :k]
 
 
 def topk_merge_unique(dists, ids, top_d, top_i):
     """topk_merge that keeps each id at most once (best distance).
     Required by the cooperative (share_gathers) scoring paths, where a
-    leaf pooled at two iterations is scored twice for every lane."""
-    return ref.ref_topk_merge_unique(dists, ids, top_d, top_i)
+    leaf pooled at two iterations is scored twice for every lane.
+
+    Selection formulation (bit-exact to ref.ref_topk_merge_unique):
+    select 2k candidates by (d, id) — k fresh winners can hide behind
+    at most k duplicates of running entries — then dedup among the
+    <=3k survivors only. ``ids`` may be [M] (lane-invariant pool, the
+    cooperative call sites: fast single-TopK path) or [B, M].
+    PRECONDITION (call-site invariant, enforced by the per-iteration
+    leaf dedup in search_impl/search_ooc): each real id appears at most
+    once among the candidate columns; only the -1 placeholder repeats.
+    Candidate ids duplicating RUNNING entries are fine at any
+    distance."""
+    k = top_d.shape[1]
+    kk = min(2 * k, dists.shape[1])
+    if ids.ndim == 1:
+        sel_d, sel_i = _select_k_by_d_id_shared(dists, ids, kk)
+    else:
+        sel_d, sel_i = _select_k_by_d_id(dists, ids, kk)
+    return dedup_merge_topk(sel_d, sel_i, top_d, top_i)
+
+
+def coop_score_select(
+    q: jax.Array,          # [B, n] f32 queries
+    rows: jax.Array,       # [R, n] pooled rows (index/payload dtype)
+    row_norms: jax.Array,  # [R] f32 cached squared norms
+    ids: jax.Array,        # [R] int32, -1 = masked slot
+    kk: int,
+    *,
+    force_pallas: bool = False,
+    tile_b: int = 128,
+    tile_r: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused cooperative score+select: per lane, the kk best (d, id)
+    candidates from the pooled rows, without materializing the [B, R]
+    distance matrix in HBM on TPU (kernels/topk.py tiles R and keeps
+    the running selection in VMEM). CPU path is the jnp oracle
+    (sq_l2 + partial selection). Output feeds dedup_merge_topk."""
+    if force_pallas or on_tpu():
+        b = q.shape[0]
+        qp = _pad_rows(q, tile_b)
+        rp = _pad_rows(rows, tile_r)
+        rn_p = _pad_rows(row_norms[:, None], tile_r)
+        ip = _pad_rows(ids.astype(jnp.int32)[:, None], tile_r, value=-1)
+        od, oi = coop_score_select_pallas(
+            qp, rp, rn_p, ip, kk, tile_b=tile_b, tile_r=tile_r,
+            interpret=not on_tpu())
+        return od[:b], oi[:b]
+    d = sq_l2(q.astype(jnp.float32), rows, row_norms)
+    d = jnp.where(ids[None, :] < 0, jnp.float32(jnp.inf), d)
+    return _select_k_by_d_id_shared(d, ids, kk)

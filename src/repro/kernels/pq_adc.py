@@ -3,7 +3,7 @@
 For one query, per-subspace distance LUT lut [m, K] and PQ codes
 codes [M, m], the scan computes dist[i] = sum_j lut[j, codes[i, j]].
 
-TPU adaptation (DESIGN.md §5.6): random per-lane gathers are the natural
+TPU adaptation (docs/PERF.md §6): random per-lane gathers are the natural
 CUDA formulation but map poorly onto the VPU; instead the code tile is
 expanded to a one-hot matrix and contracted against the flattened LUT on
 the MXU: onehot[TM, m*K] @ lut.flat[m*K] — a matmul-shaped scan that

@@ -98,7 +98,15 @@ def ref_topk_merge(
     top_d: jax.Array,  # [B, k] current best distances (sorted asc)
     top_i: jax.Array,  # [B, k] current best ids
 ) -> tuple:
-    """Merge candidates into running sorted top-k rows."""
+    """Merge candidates into running sorted top-k rows.
+
+    Full-sort formulation: O((k+M) log (k+M)) comparator depth over the
+    whole candidate width. Kept as the semantic oracle AND the timing
+    baseline for the selection-based ``ops.topk_merge`` (docs/PERF.md),
+    which must agree bit-exactly, ties included: this sort is stable, so
+    distance ties resolve by concatenation position (running entries
+    first, then candidates in block order).
+    """
     k = top_d.shape[1]
     all_d = jnp.concatenate([top_d, dists], axis=1)
     all_i = jnp.concatenate([top_i, ids], axis=1)
@@ -124,6 +132,12 @@ def ref_topk_merge_unique(
     first), mask all but the first of each run, re-sort by distance.
     Masked/invalid candidates (id -1, d inf) collapse to one placeholder
     which sorts last, so they never displace real neighbors.
+
+    Full-sort formulation: TWO sorts over the whole k+M cooperative
+    width. Kept as the semantic oracle and timing baseline for the
+    selection-based ``ops.topk_merge_unique`` (docs/PERF.md). Note the
+    resulting order is (d, id)-lexicographic: the second sort is stable
+    over the id-sorted sequence, so distance ties come out id-ascending.
     """
     k = top_d.shape[1]
     all_d = jnp.concatenate([top_d, dists], axis=1)
@@ -136,3 +150,32 @@ def ref_topk_merge_unique(
     si = jnp.where(dup, -1, si)
     new_d, new_i = jax.lax.sort((sd, si), num_keys=1)
     return new_d[:, :k], new_i[:, :k]
+
+
+def ref_coop_score_select(
+    q: jax.Array,          # [B, n] f32 queries
+    rows: jax.Array,       # [R, n] pooled candidate rows (any dtype)
+    row_norms: jax.Array,  # [R] f32 precomputed squared row norms
+    ids: jax.Array,        # [R] int32 candidate ids, -1 = masked slot
+    kk: int,
+) -> tuple:
+    """Oracle for the fused cooperative score+select kernel.
+
+    Scores every pooled row against every query lane (|q|^2 - 2 q.x +
+    |x|^2 with the norms passed in, masked slots at +inf) and returns,
+    per lane, the ``kk`` lexicographically-smallest (d, id) pairs sorted
+    by (d, id) — the candidate half of ``ops.topk_merge_unique``'s
+    selection stage. Precondition (call-site invariant): real ids are
+    distinct within the pool; only the -1 placeholder repeats.
+    """
+    qf = q.astype(jnp.float32)
+    rf = rows.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1)[:, None]
+    d = jnp.maximum(qn - 2.0 * (qf @ rf.T)
+                    + row_norms.astype(jnp.float32)[None, :], 0.0)
+    d = jnp.where(ids[None, :] < 0, jnp.float32(jnp.inf), d)
+    b = q.shape[0]
+    idm = jnp.broadcast_to(ids.astype(jnp.int32)[None, :],
+                           (b, ids.shape[0]))
+    sd, si = jax.lax.sort((d, idm), num_keys=2)
+    return sd[:, :kk], si[:, :kk]

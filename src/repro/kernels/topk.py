@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused cooperative score + top-k select.
+
+The cooperative (share_gathers) refinement step scores every pooled
+candidate row against every query lane. Done naively that materializes
+a [B, R] = [B, B*V*M] distance matrix in HBM each iteration, only for
+the merge to keep k << R entries per lane. This kernel fuses the two:
+the pool dimension R is tiled, each [TB, TR] distance tile lives only
+in VMEM, and a running per-lane selection of the kk lexicographically
+smallest (d, id) pairs is carried in the output block across R steps —
+TPU never writes the distance matrix out (DESIGN ref: docs/PERF.md).
+
+Selection inside the kernel is kk rounds of lexicographic min-extraction
+over the [TB, kk + TR] concat of the running selection and the tile
+(VPU reductions + where-masks only — no sort network, no gathers), which
+keeps every op Pallas-TPU friendly. Extracted slots are remasked to the
+(inf, -1) placeholder, so exhausted tiles emit exactly the placeholder
+the jnp oracle (ref.ref_coop_score_select) emits. Precondition (as for
+ops.topk_merge_unique): real ids are distinct within the pool.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_I32_MAX = 2**31 - 1
+
+
+def _coop_topk_kernel(q_ref, rows_ref, rn_ref, ids_ref, outd_ref,
+                      outi_ref, *, kk: int):
+    rstep = pl.program_id(1)
+
+    @pl.when(rstep == 0)
+    def _init():
+        outd_ref[...] = jnp.full_like(outd_ref, jnp.inf)
+        outi_ref[...] = jnp.full_like(outi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)        # [TB, n]
+    rows = rows_ref[...].astype(jnp.float32)  # [TR, n]
+    rn = rn_ref[...].astype(jnp.float32)      # [TR, 1]
+    ids = ids_ref[...]                        # [TR, 1] int32
+
+    qn = jnp.sum(q * q, axis=1, keepdims=True)            # [TB, 1]
+    cross = jax.lax.dot_general(
+        q, rows, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # [TB, TR]
+    d = jnp.maximum(qn - 2.0 * cross + rn[:, 0][None, :], 0.0)
+    idv = ids[:, 0][None, :]                              # [1, TR]
+    d = jnp.where(idv < 0, jnp.inf, d)
+    idm = jnp.broadcast_to(idv, d.shape)
+
+    # running selection ++ tile, then kk lex-min extractions
+    cur_d = jnp.concatenate([outd_ref[...], d], axis=1)
+    cur_i = jnp.concatenate([outi_ref[...], idm], axis=1)
+    out_d, out_i = [], []
+    for _ in range(kk):
+        bd = jnp.min(cur_d, axis=1, keepdims=True)        # [TB, 1]
+        tie = jnp.where(cur_d == bd, cur_i, jnp.int32(_I32_MAX))
+        bi = jnp.min(tie, axis=1, keepdims=True)          # [TB, 1]
+        out_d.append(bd)
+        out_i.append(bi)
+        hit = (cur_d == bd) & (cur_i == bi)
+        cur_d = jnp.where(hit, jnp.inf, cur_d)
+        cur_i = jnp.where(hit, -1, cur_i)
+    outd_ref[...] = jnp.concatenate(out_d, axis=1)
+    outi_ref[...] = jnp.concatenate(out_i, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kk", "tile_b", "tile_r",
+                                    "interpret"))
+def coop_score_select_pallas(
+    q: jax.Array,          # [B, n] f32
+    rows: jax.Array,       # [R, n] payload dtype
+    row_norms: jax.Array,  # [R, 1] f32
+    ids: jax.Array,        # [R, 1] int32, -1 = masked
+    kk: int,
+    *,
+    tile_b: int = 128,
+    tile_r: int = 256,
+    interpret: bool = False,
+) -> tuple:
+    b, n = q.shape
+    r = rows.shape[0]
+    assert b % tile_b == 0 and r % tile_r == 0, (b, r, tile_b, tile_r)
+    grid = (b // tile_b, r // tile_r)  # R innermost: sequential carry
+    return pl.pallas_call(
+        functools.partial(_coop_topk_kernel, kk=kk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_r, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, kk), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kk), jnp.float32),
+            jax.ShapeDtypeStruct((b, kk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, rows, row_norms, ids.astype(jnp.int32))

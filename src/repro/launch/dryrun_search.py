@@ -61,6 +61,9 @@ def abstract_index(mesh, axes, n_per_shard: int, series_len: int,
         kind="dstree", summary=summary, n_summary=8,
         max_leaf=leaf_cap, n_total=n_per_shard * shards,
         series_len=series_len,
+        # cached |x|^2 (PR 3): the refinement loop gathers norms
+        # instead of re-reducing gathered rows each iteration
+        row_norms=sds((shards, n_per_shard), spec0),
     )
     return idx, shards, leaves
 
@@ -91,7 +94,7 @@ def lower_search(mesh, *, n_per_shard=2_000_000, series_len=256,
             hist=DistanceHistogram(edges=P(), cdf=P()),
             kind=idx.kind, summary=idx.summary, n_summary=idx.n_summary,
             max_leaf=idx.max_leaf, n_total=idx.n_total,
-            series_len=idx.series_len,
+            series_len=idx.series_len, row_norms=spec0,
         ),
         P(),
     )
@@ -100,10 +103,10 @@ def lower_search(mesh, *, n_per_shard=2_000_000, series_len=256,
         sq = jax.tree_util.tree_map(
             lambda a: a[0], (idx_local.box_lo, idx_local.box_hi,
                              idx_local.offsets, idx_local.data,
-                             idx_local.ids))
+                             idx_local.ids, idx_local.row_norms))
         lidx = dataclasses.replace(
             idx_local, box_lo=sq[0], box_hi=sq[1], offsets=sq[2],
-            data=sq[3], ids=sq[4])
+            data=sq[3], ids=sq[4], row_norms=sq[5])
         res = search_impl(lidx, q, k, nprobe=nprobe,
                           visit_batch=visit_batch,
                           share_gathers=coop)

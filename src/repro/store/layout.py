@@ -16,7 +16,12 @@ A saved index is a directory:
                    distance-histogram edges/cdf (all small, device
                    resident at load time); for codec="pq" also the
                    trained PQ codebook (pq_centroids [m, K, dsub] and
-                   pq_rotation [d, d])
+                   pq_rotation [d, d]); since PR 3 also ``row_norms``
+                   ([npad] f32 squared norms of the DECODED payload
+                   rows) so search_ooc gathers cached norms instead of
+                   re-reducing gathered rows every iteration (absent in
+                   older sidecars -> recomputed at open, bit-identical
+                   via ops.row_sq_norms)
 
 Format v2 — pluggable leaf codecs.  ``codec`` selects the encoding of
 ``data.bin`` (the bytes the refinement stage streams from disk):
@@ -64,6 +69,7 @@ import numpy as np
 from repro.core.histogram import DistanceHistogram
 from repro.core.index import FrozenIndex
 from repro.core.summaries.pq import PQCodebook, pq_encode, pq_train
+from repro.kernels import ops
 
 FORMAT_VERSION = 2
 CODECS = ("f32", "bf16", "pq")
@@ -130,6 +136,20 @@ def save_index(
         hist_edges=np.asarray(index.hist.edges),
         hist_cdf=np.asarray(index.hist.cdf),
     )
+    # squared norms of the DECODED payload rows: what the reloaded
+    # index (resident="full") and search_ooc's refine gathers both use,
+    # so they stay bit-identical to the in-memory search over the same
+    # decoded image. f32/pq decode to the index's own rows — reuse the
+    # freeze-time cache when present; bf16 decodes to the bfloat16
+    # image, whose norms differ from the f32 rows'.
+    if codec == "bf16":
+        sidecar["row_norms"] = np.asarray(ops.row_sq_norms(
+            jnp.asarray(data, jnp.bfloat16)))
+    elif index.row_norms is not None:
+        sidecar["row_norms"] = np.asarray(index.row_norms)
+    else:
+        sidecar["row_norms"] = np.asarray(ops.row_sq_norms(
+            jnp.asarray(data)))
     if codec == "f32":
         payload = data
     elif codec == "bf16":
@@ -296,6 +316,22 @@ def load_index(
             centroids=jnp.asarray(side["pq_centroids"]),
             rotation=jnp.asarray(side["pq_rotation"]),
         )
+    def decoded_norms(chunk_rows: int = 65536):
+        """Pre-PR3 sidecars lack row_norms: recompute from the decoded
+        rows with the same op the freeze/save paths use. Chunked so a
+        summaries-resident open of a legacy store never materializes
+        the whole payload on device (row-wise sums are independent of
+        the chunking, so the result stays bit-identical)."""
+        src = exact_mmap if codec == "pq" else mmap
+        out = np.empty(src.shape[0], np.float32)
+        for lo in range(0, src.shape[0], chunk_rows):
+            hi = min(lo + chunk_rows, src.shape[0])
+            out[lo:hi] = np.asarray(
+                ops.row_sq_norms(jnp.asarray(np.asarray(src[lo:hi]))))
+        return jnp.asarray(out)
+
+    row_norms = (jnp.asarray(side["row_norms"])
+                 if "row_norms" in side else decoded_norms())
     if resident == "full":
         if codec == "pq":
             full_rows = jnp.asarray(np.asarray(exact_mmap), dtype)
@@ -311,6 +347,7 @@ def load_index(
             data=full_rows,
             ids=jnp.asarray(side["ids"]),
             hist=hist,
+            row_norms=row_norms,
             **statics,
         )
     if resident != "summaries":
@@ -325,6 +362,7 @@ def load_index(
         data=placeholder,
         ids=jnp.asarray(side["ids"]),
         hist=hist,
+        row_norms=row_norms,
         **statics,
     )
     return LeafStore(

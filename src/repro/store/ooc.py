@@ -1,13 +1,15 @@
 """Out-of-core Algorithm 2: device filter, streamed refinement.
 
 Semantics are IDENTICAL to core.search.search — same lower-bound
-kernel, same argsort visit order, same candidate layout per iteration
-([V leaves x max_leaf positions] per lane, invalid positions masked to
-inf), same topk_merge, same stopping predicates evaluated in f32 — so
-the exact / epsilon / delta-epsilon guarantees transfer untouched; the
-ONLY difference is residency: payload rows are gathered from the
-DeviceLeafCache slot pool (fed from disk) instead of an HBM-resident
-data array.
+kernel, same lazy-frontier visit order (bit-equal to the stable argsort
+order; the refill threshold proof is shared with search_impl, see
+docs/PERF.md), same candidate layout per iteration ([V leaves x
+max_leaf positions] per lane, invalid positions masked to inf), same
+partial-selection topk merges over the same cached row norms, same
+stopping predicates evaluated in f32 — so the exact / epsilon /
+delta-epsilon guarantees transfer untouched; the ONLY difference is
+residency: payload rows are gathered from the DeviceLeafCache slot
+pool (fed from disk) instead of an HBM-resident data array.
 
 Control flow moves from lax.while_loop to a host loop because each
 iteration performs I/O. The host loop:
@@ -47,6 +49,7 @@ grows (for pq this is ONE [B, m*K] x [m*K, rows] matmul per iteration).
 
 from __future__ import annotations
 
+import functools
 import warnings
 from typing import NamedTuple, Optional
 
@@ -55,7 +58,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.histogram import r_delta
-from repro.core.search import INF, SearchResult, _batched_sq_l2
+from repro.core.search import (INF, SearchResult, default_frontier,
+                               dup_leaf_mask, frontier_select)
 from repro.core.summaries.pq import adc_lut_batch
 from repro.kernels import ops
 
@@ -71,26 +75,30 @@ class OocResult(NamedTuple):
 
 @jax.jit
 def _filter_stage(resident, q):
-    """Lower bound every leaf and derive the visit order (device)."""
+    """Lower bound every leaf (device). The visit order is NOT fully
+    argsorted here any more — the lazy frontier partially selects it
+    rank window by rank window (_frontier_refill)."""
     q_sum = resident.summarize_queries(q)
-    lb_sq = ops.box_mindist(
+    return ops.box_mindist(
         q_sum, resident.box_lo, resident.box_hi, resident.weights)
-    order = jnp.argsort(lb_sq, axis=1)
-    lb_sorted = jnp.take_along_axis(lb_sq, order, axis=1)
-    return order, lb_sorted
+
+
+# the SAME visit-order primitive search_impl refills with (bit-exact
+# in-memory/OOC parity by construction), jitted for the host loop
+_frontier_refill = jax.jit(frontier_select, static_argnames=("f",))
 
 
 @jax.jit
 def _refine_step(qf, slots, flat_slot_idx, row_idx, top_d, top_i,
-                 valid, ids):
+                 valid, ids, row_norms):
     """One iteration's scoring: gather rows from the slot pool, fused
-    L2 against every lane, merge into the running top-k. Mirrors the
-    non-share_gathers branch of core.search.search_impl exactly."""
-    b = qf.shape[0]
+    L2 (cached row norms) against every lane, O(k) merge into the
+    running top-k. Mirrors the non-share_gathers branch of
+    core.search.search_impl exactly."""
     n = qf.shape[1]
     rows = slots.reshape(-1, n)[flat_slot_idx]       # [B, V*M, n]
     cand_ids = jnp.where(valid, ids[row_idx], -1)
-    d = _batched_sq_l2(qf, rows)
+    d = ops.sq_l2(qf, rows, row_norms[row_idx])
     d = jnp.where(valid, d, INF)
     top_d, top_i = ops.topk_merge(d, cand_ids, top_d, top_i)
     return top_d, top_i
@@ -98,29 +106,26 @@ def _refine_step(qf, slots, flat_slot_idx, row_idx, top_d, top_i,
 
 @jax.jit
 def _refine_step_shared(qf, slots, flat_slot_idx, row_idx, top_d,
-                        top_i, valid, ids):
+                        top_i, pool_valid, ids, row_norms):
     """Cooperative scoring: pool the iteration's gathered slots and
-    score every row against ALL query lanes with one MXU matmul.
-    Mirrors the share_gathers branch of core.search.search_impl
-    exactly (same op sequence -> bit-exact parity)."""
-    b = qf.shape[0]
+    score every row against ALL query lanes, selecting each lane's
+    2k candidates fused with the scoring (ops.coop_score_select — on
+    TPU the [B, B*V*M] distance matrix never reaches HBM), then dedup
+    merge. Mirrors the share_gathers branch of
+    core.search.search_impl exactly (same op sequence -> bit-exact
+    parity). ``pool_valid`` already excludes same-iteration duplicate
+    leaf copies (the distinct-id precondition)."""
     n = qf.shape[1]
+    k = top_d.shape[1]
     flat = flat_slot_idx.reshape(-1)
     rows = slots.reshape(-1, n)[flat]                # [B*V*M, n]
-    fvalid = valid.reshape(-1)
-    cand_ids = jnp.where(fvalid, ids[row_idx.reshape(-1)], -1)
-    d = jnp.maximum(
-        jnp.sum(qf * qf, 1)[:, None]
-        - 2.0 * (qf @ rows.astype(jnp.float32).T)
-        + jnp.sum(rows.astype(jnp.float32) ** 2, 1)[None, :],
-        0.0)
-    d = jnp.where(fvalid[None, :], d, INF)
-    # dedup merge (as in search_impl's share branch): a leaf pooled at
-    # two iterations is scored twice for every lane
-    top_d, top_i = ops.topk_merge_unique(
-        d, jnp.broadcast_to(cand_ids, (b, cand_ids.shape[0])),
-        top_d, top_i)
-    return top_d, top_i
+    fvalid = pool_valid.reshape(-1)
+    flat_rows = row_idx.reshape(-1)
+    cand_ids = jnp.where(fvalid, ids[flat_rows], -1)
+    sel_d, sel_i = ops.coop_score_select(
+        qf, rows, row_norms[flat_rows], cand_ids,
+        min(2 * k, cand_ids.shape[0]))
+    return ops.dedup_merge_topk(sel_d, sel_i, top_d, top_i)
 
 
 @jax.jit
@@ -139,20 +144,20 @@ def _refine_step_pq(luts, slots, flat_slot_idx, row_idx, top_d, top_i,
 
 @jax.jit
 def _refine_step_pq_shared(luts, slots, flat_slot_idx, row_idx, top_d,
-                           top_i, valid):
+                           top_i, pool_valid):
     """Cooperative PQ scoring: ONE [B, m*K] x [m*K, rows] matmul scores
-    every gathered code row against all query lanes."""
-    b = luts.shape[0]
+    every gathered code row against all query lanes; selection-based
+    dedup merge keeps per-iteration merge cost O(k). ``pool_valid``
+    already excludes same-iteration duplicate leaf copies."""
     mcols = slots.shape[-1]
     flat = flat_slot_idx.reshape(-1)
     codes = slots.reshape(-1, mcols)[flat]           # [B*V*M, m]
-    fvalid = valid.reshape(-1)
+    fvalid = pool_valid.reshape(-1)
     cand_pos = jnp.where(fvalid, row_idx.reshape(-1), -1)
     d = ops.pq_adc_batch(codes, luts)                # [B, B*V*M]
     d = jnp.where(fvalid[None, :], d, INF)
-    return ops.topk_merge_unique(
-        d, jnp.broadcast_to(cand_pos, (b, cand_pos.shape[0])),
-        top_d, top_i)
+    # cand_pos is lane-invariant -> topk_merge_unique's fast 1-D path
+    return ops.topk_merge_unique(d, cand_pos, top_d, top_i)
 
 
 def _exact_rerank(store: LeafStore, qf, top_d, top_i, k: int):
@@ -202,6 +207,7 @@ def search_ooc(
     prefetch: bool = True,
     share_gathers: bool = False,
     rerank: int = 4,
+    frontier: Optional[int] = None,
 ) -> OocResult:
     """k-NN over an on-disk index without device-resident raw data.
 
@@ -215,6 +221,9 @@ def search_ooc(
     lanes (cooperative batching — module docstring). For codec="pq"
     stores, ``rerank``*k candidates per lane are kept through the ADC
     loop and exactly re-ranked against raw rows at the end.
+    ``frontier`` tunes the lazy visit-order window width (None ->
+    core.search.default_frontier, widened to cover the prefetch
+    lookahead); any width emits the same visit order.
     """
     res = store.resident
     b, n = queries.shape
@@ -255,9 +264,18 @@ def search_ooc(
                 stacklevel=2)
         luts = adc_lut_batch(store.codebook, queries)
 
-    order_d, lb_sorted_d = _filter_stage(res, queries)
-    order = np.asarray(order_d)
-    lb_sorted = np.asarray(lb_sorted_d)
+    lb_sq_d = _filter_stage(res, queries)  # [B, L], stays on device
+
+    # lazy frontier (host mirror of search_impl's): F covers this
+    # iteration's visits, the next_lb probe AND the prefetch lookahead
+    F = min(max(default_frontier(L, v), 2 * v), L) if frontier is None \
+        else min(max(int(frontier), min(2 * v, L)), L)
+    lane2 = np.arange(b)[:, None]
+    fr_lb = np.full((b, F), np.inf, np.float32)
+    fr_id = np.zeros((b, F), np.int64)
+    fpos = np.full(b, F, np.int64)           # empty -> fill on entry
+    thr_lb = np.full(b, -1.0, np.float32)
+    thr_id = np.full(b, -1, np.int64)
 
     eps_mult = np.float32((1.0 + epsilon) ** 2)
     rd = float(r_delta(res.hist, delta, res.n_total))
@@ -277,17 +295,40 @@ def search_ooc(
     pos = np.arange(m)[None, None, :]
     iters = 0
 
-    def iteration_leaves(ranks, act):
-        """[B, V] leaf per visit slot + in_range mask, like the device
-        body: ranks clamped to L-1, masked by max_rank and activity."""
-        rk = ranks[:, None] + np.arange(v)[None, :]
-        in_range = (rk < max_rank) & act[:, None]
-        return order[np.arange(b)[:, None], np.minimum(rk, L - 1)], \
-            in_range
+    def frontier_leaves(first):
+        """[B, V] leaf ids from frontier positions ``first`` (clamped
+        to the window; callers mask out-of-rank slots via in_range,
+        like the device body's clamped reads)."""
+        ppos = np.minimum(first[:, None] + np.arange(v)[None, :], F - 1)
+        return fr_id[lane2, ppos]
+
+    def pool_dup_mask(leaf, in_range):
+        """[B, V] True where the slot repeats a leaf already pooled by
+        an earlier in-range slot this iteration — the SAME
+        core.search.dup_leaf_mask the in-memory cooperative branch
+        uses, so both pools are identical by construction (the [B, V]
+        operands are tiny, the device round-trip is noise next to the
+        scoring step)."""
+        return np.asarray(dup_leaf_mask(jnp.asarray(leaf),
+                                        jnp.asarray(in_range)))
 
     try:
         while active.any():
-            leaf, in_range = iteration_leaves(rank, active)
+            # refill frontiers running too low to cover this
+            # iteration + the prefetch lookahead (amortized: once per
+            # floor(F/v) iterations per lane)
+            need = active & (fpos > F - 2 * v)
+            if need.any():
+                nlb, nid = _frontier_refill(
+                    lb_sq_d, jnp.asarray(thr_lb),
+                    jnp.asarray(thr_id, jnp.int32), F)
+                fr_lb[need] = np.asarray(nlb)[need]
+                fr_id[need] = np.asarray(nid)[need]
+                fpos[need] = 0
+
+            rk = rank[:, None] + np.arange(v)[None, :]
+            in_range = (rk < max_rank) & active[:, None]
+            leaf = frontier_leaves(fpos)
             # full per-lane request list (dups included) so the cache's
             # per-request hit accounting credits lanes sharing a leaf
             needed = leaf[in_range]
@@ -301,7 +342,9 @@ def search_ooc(
             # prefetcher: callers use it to measure pure demand reads.
             if prefetch and cache.prefetcher is not None:
                 nxt_rank = np.minimum(rank + v, max_rank)
-                nxt_leaf, nxt_in = iteration_leaves(nxt_rank, active)
+                nxt_rk = nxt_rank[:, None] + np.arange(v)[None, :]
+                nxt_in = (nxt_rk < max_rank) & active[:, None]
+                nxt_leaf = frontier_leaves(fpos + v)
                 nxt = [int(lf) for lf in np.unique(nxt_leaf[nxt_in])
                        if int(lf) not in cache.slot_of]
                 if nxt:
@@ -321,10 +364,16 @@ def search_ooc(
                 flat_slot.reshape(b, v * m), jnp.int32)
             row_idx_j = jnp.asarray(row_idx.reshape(b, v * m), jnp.int32)
             valid_j = jnp.asarray(valid.reshape(b, v * m))
+            if share_gathers:
+                # same-iteration duplicate leaf copies leave the pool
+                # (per-lane visit accounting below still uses ``valid``)
+                dup = pool_dup_mask(leaf, in_range)
+                pool_valid_j = jnp.asarray(
+                    (valid & ~dup[:, :, None]).reshape(b, v * m))
             if pq and share_gathers:
                 top_d, top_i = _refine_step_pq_shared(
                     luts, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, valid_j)
+                    top_d, top_i, pool_valid_j)
             elif pq:
                 top_d, top_i = _refine_step_pq(
                     luts, cache.slots, flat_slot_j, row_idx_j,
@@ -332,11 +381,12 @@ def search_ooc(
             elif share_gathers:
                 top_d, top_i = _refine_step_shared(
                     qf, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, valid_j, res.ids)
+                    top_d, top_i, pool_valid_j, res.ids,
+                    res.row_norms)
             else:
                 top_d, top_i = _refine_step(
                     qf, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, valid_j, res.ids)
+                    top_d, top_i, valid_j, res.ids, res.row_norms)
 
             leaves_visited += np.where(active, in_range.sum(1), 0)
             rows_scanned += np.where(active, valid.sum((1, 2)), 0)
@@ -345,12 +395,17 @@ def search_ooc(
             exhausted = rank_next >= max_rank
             next_lb = np.where(
                 exhausted, np.float32(np.inf),
-                lb_sorted[np.arange(b), np.minimum(rank_next, L - 1)],
+                fr_lb[np.arange(b), np.minimum(fpos + v, F - 1)],
             ).astype(np.float32)
             bsf = np.asarray(top_d[:, k - 1])          # f32, sync point
             stop = (next_lb * eps_mult > bsf) \
                 | (bsf <= eps_mult * rd_sq) \
                 | exhausted
+            # refill threshold <- last rank consumed this iteration
+            last = np.minimum(fpos + v - 1, F - 1)
+            thr_lb = np.where(active, fr_lb[np.arange(b), last], thr_lb)
+            thr_id = np.where(active, fr_id[np.arange(b), last], thr_id)
+            fpos = fpos + v
             active = active & ~stop
             rank = rank_next
             iters += 1

@@ -1,0 +1,374 @@
+"""PR 3 partial-selection hot path: the selection-based merges must
+agree EXACTLY (ids and distances, ties included) with the retained
+full-sort oracles, the fused score+select kernel with its jnp oracle,
+and the lazy leaf-frontier must emit the stable-argsort visit order on
+adversarial lower-bound distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.indexes import dstree, vafile
+from repro.kernels import ops, ref
+from repro.store.ooc import _frontier_refill
+
+pytestmark = pytest.mark.tier1
+
+RNG = np.random.default_rng(7)
+INF = np.float32(np.inf)
+
+
+def _assert_pair_equal(got, want):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def _running_top(b, k, n_real, id_base=10**6):
+    """A legal running top-k: sorted distances, distinct ids, the last
+    k - n_real slots the (inf, -1) placeholder."""
+    d = np.sort(RNG.uniform(0.2, 0.8, (b, k)).astype(np.float32), axis=1)
+    i = id_base + np.arange(b * k).reshape(b, k)
+    d[:, n_real:] = INF
+    i = np.where(np.arange(k)[None, :] < n_real, i, -1)
+    return jnp.asarray(d), jnp.asarray(i, jnp.int32)
+
+
+def _candidates(b, m, tie_frac=0.0, invalid_frac=0.0, dup_running=None,
+                id_base=0):
+    """Candidate block honoring the call-site invariant: distinct real
+    ids per row (-1 placeholders repeat, paired with inf)."""
+    d = RNG.uniform(0.0, 1.0, (b, m)).astype(np.float32)
+    if tie_frac:
+        # quantize to force many exact distance ties
+        d = np.round(d * 8).astype(np.float32) / 8
+    ids = np.stack([RNG.permutation(4 * m)[:m] for _ in range(b)]) \
+        + id_base
+    if invalid_frac:
+        mask = RNG.uniform(size=(b, m)) < invalid_frac
+        d = np.where(mask, INF, d)
+        ids = np.where(mask, -1, ids)
+    if dup_running is not None:
+        # overwrite a few columns with ids already in the running top
+        # (the cross-iteration duplicate-leaf case), equal distances
+        top_d, top_i = dup_running
+        k = np.asarray(top_i).shape[1]
+        take = min(k, m) // 2 or 1
+        cols = RNG.choice(m, take, replace=False)
+        rows_i = np.asarray(top_i)[:, :take]
+        rows_d = np.asarray(top_d)[:, :take]
+        usable = rows_i >= 0
+        ids[:, cols] = np.where(usable, rows_i, ids[:, cols])
+        d[:, cols] = np.where(usable, rows_d, d[:, cols])
+    return jnp.asarray(d), jnp.asarray(ids, jnp.int32)
+
+
+# ------------------------------------------------------ topk_merge
+
+
+@pytest.mark.parametrize("m", [3, 7, 64, 300])  # includes widths < k
+@pytest.mark.parametrize("tie_frac,invalid_frac",
+                         [(0.0, 0.0), (1.0, 0.0), (0.0, 0.4),
+                          (1.0, 0.3)])
+def test_topk_merge_exact_vs_full_sort_oracle(m, tie_frac, invalid_frac):
+    k = 10
+    top = _running_top(4, k, n_real=6)
+    d, ids = _candidates(4, m, tie_frac, invalid_frac)
+    _assert_pair_equal(ops.topk_merge(d, ids, *top),
+                       ref.ref_topk_merge(d, ids, *top))
+
+
+def test_topk_merge_tie_order_matches_stable_sort():
+    """Distance ties must resolve exactly as the stable full sort:
+    running entries first, then candidates by column position."""
+    d = jnp.asarray([[0.5, 0.5, 0.25, 0.5]], jnp.float32)
+    ids = jnp.asarray([[11, 12, 13, 14]], jnp.int32)
+    top_d = jnp.asarray([[0.5, 0.5, jnp.inf]], jnp.float32)
+    top_i = jnp.asarray([[7, 8, -1]], jnp.int32)
+    got = ops.topk_merge(d, ids, top_d, top_i)
+    want = ref.ref_topk_merge(d, ids, top_d, top_i)
+    _assert_pair_equal(got, want)
+    assert np.asarray(got[1]).tolist() == [[13, 7, 8]]
+
+
+def test_bitonic_merge_is_the_stable_merge():
+    for ka, kb in [(1, 1), (5, 5), (8, 3), (10, 20)]:
+        da = jnp.sort(jnp.asarray(
+            np.round(RNG.uniform(size=(3, ka)) * 4) / 4, jnp.float32), 1)
+        db = jnp.sort(jnp.asarray(
+            np.round(RNG.uniform(size=(3, kb)) * 4) / 4, jnp.float32), 1)
+        ia = jnp.asarray(RNG.integers(0, 99, (3, ka)), jnp.int32)
+        ib = jnp.asarray(RNG.integers(100, 199, (3, kb)), jnp.int32)
+        md, mi = ops.bitonic_merge_sorted(da, ia, db, ib)
+        wd, wi = jax.lax.sort(
+            (jnp.concatenate([da, db], 1),
+             jnp.concatenate([ia, ib], 1)), num_keys=1)
+        _assert_pair_equal((md, mi), (wd, wi))
+
+
+# ----------------------------------------------- topk_merge_unique
+
+
+@pytest.mark.parametrize("m", [3, 7, 64, 500])
+@pytest.mark.parametrize("tie_frac,invalid_frac,dup",
+                         [(0.0, 0.0, False), (1.0, 0.0, False),
+                          (0.0, 0.5, False), (0.0, 0.0, True),
+                          (1.0, 0.3, True)])
+def test_topk_merge_unique_exact_vs_full_sort_oracle(
+        m, tie_frac, invalid_frac, dup):
+    k = 10
+    top = _running_top(4, k, n_real=7)
+    d, ids = _candidates(4, m, tie_frac, invalid_frac,
+                         dup_running=top if dup else None)
+    _assert_pair_equal(ops.topk_merge_unique(d, ids, *top),
+                       ref.ref_topk_merge_unique(d, ids, *top))
+
+
+def test_topk_merge_unique_shared_ids_path_exact():
+    """The 1-D (lane-invariant pool) fast path must equal both the 2-D
+    path and the oracle — including duplicate ids across the
+    k-boundary (same id on both sides of the selection cut)."""
+    k = 5
+    b, m = 3, 40
+    top_d, top_i = _running_top(b, k, n_real=5, id_base=0)
+    ids1 = jnp.asarray(RNG.permutation(m), jnp.int32)
+    d = np.round(RNG.uniform(size=(b, m)) * 6).astype(np.float32) / 6
+    # lane 0: place a running id among candidates at its running
+    # distance (cross-iteration duplicate)
+    ids1_np = np.asarray(ids1)
+    d[0, ids1_np == ids1_np[0]] = float(np.asarray(top_d)[0, 0])
+    d = jnp.asarray(d)
+    ids2 = jnp.broadcast_to(ids1[None], (b, m))
+    want = ref.ref_topk_merge_unique(d, ids2, top_d, top_i)
+    _assert_pair_equal(ops.topk_merge_unique(d, ids1, top_d, top_i),
+                       want)
+    _assert_pair_equal(ops.topk_merge_unique(d, ids2, top_d, top_i),
+                       want)
+
+
+def test_topk_merge_unique_all_invalid_candidates():
+    k = 4
+    top = _running_top(2, k, n_real=2)
+    d = jnp.full((2, 9), jnp.inf)
+    ids = jnp.full((2, 9), -1, jnp.int32)
+    _assert_pair_equal(ops.topk_merge_unique(d, ids, *top),
+                       ref.ref_topk_merge_unique(d, ids, *top))
+
+
+def test_topk_merge_unique_keeps_distinct_ids_invariant():
+    k = 6
+    top = _running_top(3, k, n_real=4)
+    for _ in range(5):
+        d, ids = _candidates(3, 64, tie_frac=1.0, invalid_frac=0.2,
+                             dup_running=top)
+        top = ops.topk_merge_unique(d, ids, *top)
+        for row in np.asarray(top[1]):
+            real = row[row >= 0]
+            assert len(np.unique(real)) == len(real)
+
+
+# ------------------------------------- fused cooperative score+select
+
+
+@pytest.mark.parametrize("b,r,n,kk", [(1, 32, 16, 3), (5, 96, 64, 9),
+                                      (8, 256, 100, 20)])
+def test_coop_score_select_jnp_matches_oracle(b, r, n, kk):
+    q = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    rows = jnp.asarray(RNG.normal(size=(r, n)), jnp.float32)
+    rn = ops.row_sq_norms(rows)
+    ids = jnp.asarray(
+        np.where(RNG.uniform(size=r) < 0.25, -1, np.arange(r)),
+        jnp.int32)
+    od, oi = ref.ref_coop_score_select(q, rows, rn, ids, kk)
+    jd, ji = ops.coop_score_select(q, rows, rn, ids, kk)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(ji))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(jd),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,r,n,kk,dtype",
+                         [(5, 96, 64, 9, jnp.float32),
+                          (3, 64, 32, 6, jnp.bfloat16)])
+def test_coop_score_select_pallas_matches_oracle(b, r, n, kk, dtype):
+    """Interpret-mode validation of the fused kernel (kernels/topk.py):
+    the [B, R] distance matrix never leaves VMEM on TPU, yet the
+    selected (d, id) pairs match the jnp oracle."""
+    q = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    rows = jnp.asarray(RNG.normal(size=(r, n)), dtype)
+    rn = ops.row_sq_norms(rows)
+    ids = jnp.asarray(
+        np.where(RNG.uniform(size=r) < 0.25, -1, np.arange(r)),
+        jnp.int32)
+    od, oi = ref.ref_coop_score_select(q, rows, rn, ids, kk)
+    pd, pi = ops.coop_score_select(q, rows, rn, ids, kk,
+                                   force_pallas=True, tile_b=8,
+                                   tile_r=32)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(pi))
+    tol = 2e-1 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(od), np.asarray(pd), atol=tol,
+                               rtol=tol)
+
+
+def test_coop_score_select_pallas_pads_to_tiles():
+    """Non-tile-multiple B and R must pad without contaminating real
+    lanes (padding ids are -1 -> masked to inf)."""
+    b, r, n, kk = 5, 70, 48, 7
+    q = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    rows = jnp.asarray(RNG.normal(size=(r, n)), jnp.float32)
+    rn = ops.row_sq_norms(rows)
+    ids = jnp.asarray(np.arange(r), jnp.int32)
+    od, oi = ref.ref_coop_score_select(q, rows, rn, ids, kk)
+    pd, pi = ops.coop_score_select(q, rows, rn, ids, kk,
+                                   force_pallas=True, tile_b=8,
+                                   tile_r=32)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(pi))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(pd),
+                               atol=1e-3)
+
+
+# ------------------------------------------------ lazy leaf frontier
+
+
+def _adversarial_lb(b, L):
+    """Heavily tied lower bounds: a handful of distinct values, long
+    runs of exact duplicates (the frontier's worst case: ties straddle
+    every refill boundary)."""
+    vals = np.asarray([0.0, 0.0, 1.0, 1.0, 1.0, 2.5], np.float32)
+    return RNG.choice(vals, size=(b, L)).astype(np.float32)
+
+
+@pytest.mark.parametrize("f", [2, 3, 7, 16])
+def test_frontier_refill_emits_stable_argsort_order(f):
+    """Chaining refills window by window must reproduce the FULL stable
+    argsort order exactly, for any frontier width."""
+    b, L = 4, 37
+    lb = _adversarial_lb(b, L)
+    lb_d = jnp.asarray(lb)
+    thr_lb = np.full(b, -1.0, np.float32)
+    thr_id = np.full(b, -1, np.int64)
+    emitted = []
+    steps = 0
+    while steps * f < L + f:
+        w_lb, w_id = _frontier_refill(
+            lb_d, jnp.asarray(thr_lb), jnp.asarray(thr_id, jnp.int32), f)
+        w_lb, w_id = np.asarray(w_lb), np.asarray(w_id)
+        emitted.append(w_id)
+        thr_lb = w_lb[:, -1]
+        thr_id = w_id[:, -1].astype(np.int64)
+        steps += 1
+    order = np.concatenate(emitted, axis=1)[:, :L]
+    want = np.argsort(lb, axis=1, kind="stable")
+    np.testing.assert_array_equal(order, want)
+    # and the lbs come out globally non-decreasing (Algorithm 2's
+    # correctness condition)
+    lb_seq = np.take_along_axis(lb, order, axis=1)
+    assert (np.diff(lb_seq, axis=1) >= 0).all()
+
+
+def test_search_results_invariant_to_frontier_width(walk_data,
+                                                    walk_queries):
+    """Any frontier width must yield identical results AND identical
+    visit counters — the window is an execution detail, not an
+    algorithm change."""
+    idx = dstree.build(walk_data, leaf_cap=32)
+    q = jnp.asarray(walk_queries)
+    base = S.search(idx, q, 5, frontier=idx.num_leaves)  # full window
+    for f in (2, 5, idx.num_leaves // 2):
+        got = S.search(idx, q, 5, frontier=f)
+        np.testing.assert_array_equal(np.asarray(base.ids),
+                                      np.asarray(got.ids))
+        np.testing.assert_array_equal(np.asarray(base.dists),
+                                      np.asarray(got.dists))
+        np.testing.assert_array_equal(np.asarray(base.leaves_visited),
+                                      np.asarray(got.leaves_visited))
+        np.testing.assert_array_equal(np.asarray(base.rows_scanned),
+                                      np.asarray(got.rows_scanned))
+
+
+def test_search_frontier_handles_tied_lower_bounds(walk_data,
+                                                   walk_queries):
+    """VA+file yields massively tied lbs (cell bounds); visit_batch
+    forces refills mid-tie-run. Exactness must survive."""
+    va = vafile.build(walk_data)
+    q = jnp.asarray(walk_queries)
+    bf = S.brute_force(q, jnp.asarray(walk_data), 5)
+    res = S.search(va, q, 5, visit_batch=64, frontier=70)
+    np.testing.assert_allclose(np.asarray(res.dists),
+                               np.asarray(bf.dists), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_ooc_frontier_width_parity(walk_data, walk_queries, tmp_path):
+    """search_ooc with a tiny frontier must stay bit-exact to the
+    in-memory search (which uses its own default width)."""
+    idx = dstree.build(walk_data, leaf_cap=32)
+    q = jnp.asarray(walk_queries)
+    store_dir = idx.save(str(tmp_path / "idx"))
+    from repro.core.index import FrozenIndex
+    store = FrozenIndex.load(store_dir, resident="summaries")
+    ref_res = S.search(idx, q, 5, epsilon=0.5)
+    ooc = S.search_ooc(store, q, 5, epsilon=0.5, cache_leaves=6,
+                       frontier=3)
+    np.testing.assert_array_equal(np.asarray(ref_res.ids),
+                                  np.asarray(ooc.result.ids))
+    np.testing.assert_array_equal(np.asarray(ref_res.dists),
+                                  np.asarray(ooc.result.dists))
+    np.testing.assert_array_equal(np.asarray(ref_res.leaves_visited),
+                                  np.asarray(ooc.result.leaves_visited))
+
+
+# ------------------------------------------------- cached row norms
+
+
+def test_row_norms_cached_at_freeze_and_in_sidecar(walk_data, tmp_path):
+    idx = dstree.build(walk_data, leaf_cap=32)
+    assert idx.row_norms is not None
+    np.testing.assert_array_equal(
+        np.asarray(idx.row_norms),
+        np.asarray(ops.row_sq_norms(idx.data)))
+    from repro.core.index import FrozenIndex
+    d = idx.save(str(tmp_path / "idx"))
+    full = FrozenIndex.load(d)
+    np.testing.assert_array_equal(np.asarray(full.row_norms),
+                                  np.asarray(idx.row_norms))
+    store = FrozenIndex.load(d, resident="summaries")
+    np.testing.assert_array_equal(np.asarray(store.resident.row_norms),
+                                  np.asarray(idx.row_norms))
+
+
+def test_row_norms_bf16_sidecar_matches_decoded_payload(walk_data,
+                                                        tmp_path):
+    """bf16 codec: the cached norms are the norms of the DECODED
+    (bfloat16) image, not of the f32 originals — anything else would
+    break bit-exact parity with in-memory search over the reloaded
+    index."""
+    idx = dstree.build(walk_data, leaf_cap=32)
+    from repro.core.index import FrozenIndex
+    d = idx.save(str(tmp_path / "bf16"), codec="bf16")
+    full = FrozenIndex.load(d)
+    np.testing.assert_array_equal(
+        np.asarray(full.row_norms),
+        np.asarray(ops.row_sq_norms(full.data)))
+
+
+def test_row_norms_absent_in_sidecar_recomputed(walk_data, walk_queries,
+                                                tmp_path):
+    """Pre-PR3 sidecars have no row_norms key: the open-time fallback
+    must recompute them bit-identically and search parity must hold."""
+    import os
+    idx = dstree.build(walk_data, leaf_cap=32)
+    d = idx.save(str(tmp_path / "old"))
+    side_path = os.path.join(d, "sidecar.npz")
+    side = dict(np.load(side_path))
+    side.pop("row_norms")
+    np.savez(side_path, **side)
+    from repro.core.index import FrozenIndex
+    store = FrozenIndex.load(d, resident="summaries")
+    np.testing.assert_array_equal(np.asarray(store.resident.row_norms),
+                                  np.asarray(idx.row_norms))
+    q = jnp.asarray(walk_queries)
+    ref_res = S.search(idx, q, 5)
+    ooc = S.search_ooc(store, q, 5, cache_leaves=6)
+    np.testing.assert_array_equal(np.asarray(ref_res.ids),
+                                  np.asarray(ooc.result.ids))
