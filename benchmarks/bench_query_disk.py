@@ -147,6 +147,49 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
                     f"vs_f32={ratio:.3f};"
                     f"hit={cold.stats['hit_rate']:.2f}"))
 
+        # ---- frontier-aware prefetch depth (ROADMAP follow-up) ----
+        # the host frontier hands the prefetcher the next
+        # depth x visit_batch windows instead of one; deeper lookahead
+        # converts demand misses into prefetch hits (the delta is the
+        # row-to-row prefetch_hit_rate change at identical bytes-read
+        # semantics — the visit order is depth-invariant)
+        idx, vb = built["dstree"]
+        store_dir = idx.save(os.path.join(tmp, "dstree_pfd"))
+        store = FrozenIndex.load(store_dir, resident="summaries")
+        cap = max(store.num_leaves // 8, qj.shape[0] * vb)
+        base_hit = None
+        for depth in (1, 2, 4):
+            cache = DeviceLeafCache(store, cap)
+            t0 = time.perf_counter()
+            out = S.search_ooc(store, qj, k, delta=0.99, epsilon=1.0,
+                               visit_batch=vb, cache=cache,
+                               prefetch_depth=depth)
+            jax.block_until_ready(out.result.dists)
+            t_cold = time.perf_counter() - t0
+            st = out.stats
+            pf_rate = st["prefetch_hits"] / max(st["misses"], 1)
+            if depth == 1:
+                base_hit = pf_rate
+            rows.append({
+                "bench": "query_disk", "method": "dstree",
+                "knob": f"prefetch_depth{depth}",
+                "prefetch_depth": depth,
+                "prefetch_hits": st["prefetch_hits"],
+                "misses": st["misses"],
+                "prefetch_hit_rate": pf_rate,
+                "prefetch_hit_rate_delta_vs_depth1":
+                    pf_rate - base_hit,
+                "bytes_read_cold": st["bytes_read"],
+                "prefetch_bytes_read":
+                    st.get("prefetch_bytes_read", 0),
+                "t_cold_s": t_cold,
+            })
+            print(csv_line(
+                f"qdisk/dstree/pfdepth{depth}", t_cold * 1e6,
+                f"pfhit={pf_rate:.3f};"
+                f"dvs1={pf_rate - base_hit:+.3f};"
+                f"MBread={st['bytes_read'] / 1e6:.2f}"))
+
     # IMI has no leaf store yet: keep the paper's proxy counters
     ii = imi.build(data, kc=16, m=16, kmeans_iters=10)
     for nprobe in (8, 64):

@@ -3,8 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--scale small|default|large]
                                             [--only fig3,fig8,...]
     PYTHONPATH=src python -m benchmarks.run --snapshot           # perf
-        trajectory: writes BENCH_pr3.json at the repo root (kernel µs,
-        bytes-read, queries/s at the default scale)
+        trajectory: writes the current snapshot (benchmarks/snapshot.py
+        SNAPSHOT_NAME, e.g. BENCH_pr4.json; override the path with
+        --out) at the repo root — kernel µs, bytes-read, queries/s and
+        the out-of-core serving rows at the default scale
     PYTHONPATH=src python -m benchmarks.run --snapshot --smoke   # the
         scripts/verify.sh gate: compile+run every snapshot path once at
         the small scale, write nothing
@@ -15,6 +17,7 @@ writes JSON rows under experiments/bench/."""
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -41,14 +44,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated suite keys (substring match)")
     ap.add_argument("--out", default=None,
-                    help="JSON output dir for the figure suites "
-                         "(default experiments/bench; not applicable "
-                         "to --snapshot, which writes BENCH_pr3.json "
-                         "at the repo root by contract)")
+                    help="figure suites: JSON output dir (default "
+                         "experiments/bench). --snapshot: the snapshot "
+                         "file path (default: snapshot.SNAPSHOT_NAME "
+                         "at the repo root, e.g. --out BENCH_pr4.json)")
     ap.add_argument("--snapshot", action="store_true",
-                    help="write the BENCH_pr3.json perf-trajectory "
-                         "snapshot at the repo root instead of running "
-                         "the figure suites")
+                    help="write the perf-trajectory snapshot "
+                         "(snapshot.SNAPSHOT_NAME or --out) at the "
+                         "repo root instead of running the figure "
+                         "suites")
     ap.add_argument("--smoke", action="store_true",
                     help="with --snapshot: compile+run once at the "
                          "small scale, write nothing (verify.sh gate)")
@@ -57,14 +61,20 @@ def main() -> None:
     if args.smoke and not args.snapshot:
         ap.error("--smoke only applies to --snapshot")
     if args.snapshot:
-        if args.only is not None or args.out is not None:
-            ap.error("--only/--out do not apply to --snapshot (it "
-                     "always writes BENCH_pr3.json at the repo root)")
+        if args.only is not None:
+            ap.error("--only does not apply to --snapshot")
+        if args.smoke and args.out is not None:
+            ap.error("--out does not apply to --smoke (writes nothing)")
         from . import snapshot
 
+        out_path = None
+        if args.out is not None:
+            out_path = args.out if os.path.dirname(args.out) \
+                else snapshot._repo_root_path(args.out)
         # explicit --scale is honored; --smoke shrinks the default
         scale = args.scale or ("small" if args.smoke else "default")
-        snapshot.run_snapshot(scale=scale, smoke=args.smoke)
+        snapshot.run_snapshot(scale=scale, smoke=args.smoke,
+                              out_path=out_path)
         return
 
     args.scale = args.scale or "small"

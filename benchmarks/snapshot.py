@@ -1,13 +1,16 @@
 """Perf-trajectory snapshot: one compact JSON at the repo root per PR.
 
-``python -m benchmarks.run --snapshot`` writes BENCH_pr3.json with the
-three currencies of the serving hot path at the default bench scale —
-kernel µs (selection merges vs their full-sort baselines), on-disk
-bytes-read, and in-memory queries/s — so later PRs can diff the perf
-trajectory without rerunning whole suites. ``--smoke`` compiles and
-runs every path once at the small scale without writing the file (the
-scripts/verify.sh regression gate: a snapshot that stops compiling
-fails verify before it rots).
+``python -m benchmarks.run --snapshot`` writes ``SNAPSHOT_NAME``
+(override with ``--out``) with the currencies of the serving hot path
+at the default bench scale — kernel µs (selection merges vs their
+full-sort baselines), on-disk bytes-read, in-memory queries/s, and
+since PR 4 the out-of-core serving rows: engine queries/s over
+spill-built shards and the Scheduler-driven deadline-mixed retrieval
+front — so later PRs can diff the perf trajectory without rerunning
+whole suites. ``--smoke`` compiles and runs every path once at the
+small scale without writing the file (the scripts/verify.sh
+regression gate: a snapshot that stops compiling fails verify before
+it rots).
 """
 
 from __future__ import annotations
@@ -20,21 +23,26 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import search as S
+from repro.core.engine import DistributedEngine
+from repro.core.guarantees import Guarantee
 from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree
+from repro.serve.batching import Request, Scheduler
 from repro.store import DeviceLeafCache
 
 from . import bench_kernels
 from .common import dataset, timeit
 
-SNAPSHOT_NAME = "BENCH_pr3.json"
+SNAPSHOT_NAME = "BENCH_pr4.json"
 
 
-def _repo_root_path() -> str:
+def _repo_root_path(name: str = None) -> str:
     return os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", SNAPSHOT_NAME))
+        os.path.join(os.path.dirname(__file__), "..",
+                     name or SNAPSHOT_NAME))
 
 
 def collect(scale: str = "default", smoke: bool = False) -> dict:
@@ -76,6 +84,44 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
             disk[f"t_cold_s_{tag}"] = round(time.perf_counter() - t0, 4)
         disk["dataset_bytes"] = out.stats["dataset_bytes"]
 
+    # --- out-of-core serving: engine over spilled shards + the
+    #     Scheduler-driven deadline-mixed retrieval front ---
+    engine_ooc = {}
+    serve = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        mesh = jax.make_mesh((1,), ("data",))
+        eng = DistributedEngine(mesh, method="dstree")
+        eng.build(data, leaf_cap=256, spill_dir=os.path.join(tmp, "sp"),
+                  codec="bf16", keep_resident=False)
+        g = Guarantee(epsilon=1.0)
+        eng.query(qj, k, g)  # warm caches + compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(eng.query(qj, k, g).dists)
+        dt = (time.perf_counter() - t0) / repeats
+        engine_ooc = {
+            "codec": "bf16", "epsilon": 1.0,
+            "queries_per_s": round(len(q) / dt, 1),
+            "bytes_read_warm": eng.last_ooc_stats["bytes_read"],
+            "shards": len(eng.shard_dirs),
+        }
+
+        deadlines = [None, 40.0, 20.0, 5.0] * (len(q) // 4 + 1)
+        reqs = [Request(uid=i, prompt=np.zeros(4, np.int32),
+                        deadline_ms=deadlines[i], series=q[i])
+                for i in range(len(q))]
+        sched = Scheduler()
+        sched.run_retrieval(eng, reqs, k)  # warm per-group shapes
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out_r = sched.run_retrieval(eng, reqs, k)
+        dt = (time.perf_counter() - t0) / repeats
+        kinds = sorted({v["kind"] for v in out_r.values()})
+        serve = {
+            "requests_per_s": round(len(reqs) / dt, 1),
+            "deadline_mix_kinds": kinds,
+        }
+
     return {
         "snapshot": SNAPSHOT_NAME,
         "scale": scale,
@@ -88,6 +134,8 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
             "us_per_query": round(sec / len(q) * 1e6, 1),
         },
         "query_disk": disk,
+        "engine_ooc": engine_ooc,
+        "serve": serve,
     }
 
 
@@ -98,6 +146,7 @@ def run_snapshot(scale: str = "default", smoke: bool = False,
         print("# snapshot smoke OK (nothing written)")
         return snap
     path = out_path or _repo_root_path()
+    snap["snapshot"] = os.path.basename(path)
     with open(path, "w") as f:
         json.dump(snap, f, indent=1)
     print(f"# snapshot written to {path}")

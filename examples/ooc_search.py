@@ -74,7 +74,20 @@ with tempfile.TemporaryDirectory() as tmp:
               f"hit_rate={s['hit_rate']:.2f}  "
               f"prefetch_staged={s['prefetch_hits']}/{s['misses']}")
 
-    print("5. leaf codecs (store format v2) x cooperative scoring: "
+    print("5. frontier-aware prefetch depth: the host frontier hands "
+          "the prefetcher the next depth x visit_batch windows")
+    for depth in (1, 4):
+        dcache = DeviceLeafCache(store, cap)
+        out = S.search_ooc(store, qj, K, epsilon=1.0, cache=dcache,
+                           prefetch_depth=depth)
+        jax.block_until_ready(out.result.dists)
+        s = out.stats
+        print(f"   depth={depth}: "
+              f"prefetch_staged={s['prefetch_hits']}/{s['misses']}  "
+              f"disk={s['bytes_read'] / 1e6:6.2f} MB (speculation "
+              f"past a lane's stop is bounded by depth windows)")
+
+    print("6. leaf codecs (store format v2) x cooperative scoring: "
           "the two bytes-read levers")
     f32_read = None
     for codec in ("f32", "bf16", "pq"):

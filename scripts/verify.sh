@@ -27,6 +27,8 @@ run_fast() {
   python -m pytest -q -m tier1 "${WFLAGS[@]}"
   echo "== verify: bench snapshot smoke (compile-only, small scale) =="
   python -m benchmarks.run --snapshot --smoke
+  echo "== verify: serve smoke (Scheduler -> engine.query, spilled store) =="
+  python scripts/serve_smoke.py
 }
 
 run_full() {

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.kernels import ops
 
 from .guarantees import Guarantee
 from .histogram import DistanceHistogram, build_histogram
@@ -59,7 +60,7 @@ def _pad_to(arr: np.ndarray, target: int, fill) -> np.ndarray:
 
 @dataclasses.dataclass
 class DistributedEngine:
-    mesh: Mesh
+    mesh: Optional[Mesh]  # None for an OOC-only engine (open_spill)
     axes: Tuple[str, ...] = ("data",)
     method: str = "dstree"
     stacked: Optional[FrozenIndex] = None  # leading shard axis on arrays
@@ -69,6 +70,15 @@ class DistributedEngine:
     # call would defeat jit's compile cache
     _query_fns: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # out-of-core serving state: per-shard LeafStore handles + warm
+    # device leaf caches, opened lazily on the first OOC query and
+    # reused across queries (the serving regime)
+    _stores: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _shard_caches: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    last_ooc_stats: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_shards(self) -> int:
@@ -78,24 +88,48 @@ class DistributedEngine:
             out *= shape[a]
         return out
 
+    @classmethod
+    def open_spill(cls, spill_dir: str, *, mesh: Optional[Mesh] = None,
+                   axes: Tuple[str, ...] = ("data",),
+                   method: str = "dstree") -> "DistributedEngine":
+        """Open an engine over an existing ``build(spill_dir=...)``
+        artifact WITHOUT loading any shard into HBM — the serving path
+        for collections larger than device memory (multi-host: each
+        host opens the shards it owns). ``query`` auto-detects the
+        missing resident index and serves out-of-core."""
+        shard_dirs = tuple(sorted(
+            os.path.join(spill_dir, d) for d in os.listdir(spill_dir)
+            if d.startswith("shard_")))
+        if not shard_dirs:
+            raise ValueError(f"no shard_* stores under {spill_dir!r}")
+        eng = cls(mesh=mesh, axes=tuple(axes), method=method)
+        eng.shard_dirs = shard_dirs
+        return eng
+
     # ------------------------------------------------------------------
     def build(self, data: np.ndarray, key=None,
               spill_dir: Optional[str] = None, codec: str = "f32",
-              **params):
+              keep_resident: bool = True, **params):
         """Shard rows, build per-shard indexes (embarrassingly parallel
         on hosts), stack and device_put with the shard axis mapped onto
         the mesh axes.
 
         ``spill_dir`` additionally persists every shard as an on-disk
         store artifact (spill_dir/shard_NNNN, global ids and global
-        n_total preserved) so shards can later be served out-of-core
-        via FrozenIndex.load(..., resident="summaries") + search_ooc —
-        the path toward collections larger than pod HBM. ``codec``
-        selects each shard's leaf payload encoding ("f32"/"bf16"/"pq",
-        store format v2) — compressed spill shrinks every shard's
-        bytes-read in the out-of-core serving path."""
+        n_total preserved) so shards can be served out-of-core — since
+        PR 4 directly by :meth:`query` (auto-detected, or forced with
+        ``ooc=True``), the path toward collections larger than pod
+        HBM. ``codec`` selects each shard's leaf payload encoding
+        ("f32"/"bf16"/"pq", store format v2) — compressed spill shrinks
+        every shard's bytes-read in the out-of-core serving path.
+        ``keep_resident=False`` (requires ``spill_dir``) skips stacking
+        the shards into HBM entirely: the engine holds only the spilled
+        stores and every query runs the OOC path."""
+        if not keep_resident and spill_dir is None:
+            raise ValueError("keep_resident=False requires spill_dir")
         key = key if key is not None else jax.random.PRNGKey(0)
         self._query_fns.clear()  # compiled against the previous index
+        self.close()             # OOC state from the previous build
         n = data.shape[0]
         s = self.n_shards
         bounds = np.linspace(0, n, s + 1).astype(np.int64)
@@ -117,8 +151,12 @@ class DistributedEngine:
             if spill_dir is not None:
                 d = os.path.join(spill_dir, f"shard_{si:04d}")
                 spill_dirs.append(idx.save(d, codec=codec))
-            shards.append(idx)
+            if keep_resident:
+                shards.append(idx)  # else: spilled, drop the HBM copy
         self.shard_dirs = tuple(spill_dirs) if spill_dirs else None
+        if not keep_resident:
+            self.stacked = None
+            return self
 
         # uniform static metadata + padded array shapes across shards
         max_leafL = max(sh.num_leaves for sh in shards)
@@ -180,8 +218,24 @@ class DistributedEngine:
     def query(
         self, queries, k: int, g: Guarantee = Guarantee(),
         visit_batch: int = 1, sync_bsf: bool = False,
+        ooc: Optional[bool] = None, ooc_opts: Optional[dict] = None,
     ) -> SearchResult:
-        """Batched distributed k-NN with the requested guarantee."""
+        """Batched distributed k-NN with the requested guarantee.
+
+        Spill-built shards are first class: when the engine has no
+        HBM-resident index (``build(keep_resident=False)`` or
+        :meth:`open_spill`) the query runs the out-of-core path —
+        detected automatically, or forced with ``ooc=True`` on an
+        engine that holds both. ``ooc_opts`` forwards out-of-core
+        knobs (share_gathers / cache_leaves / prefetch /
+        prefetch_depth / rerank / frontier) to search_ooc; per-shard
+        caches stay warm across queries. Aggregate per-shard stats
+        land in ``self.last_ooc_stats``."""
+        if ooc is None:
+            ooc = self.stacked is None and self.shard_dirs is not None
+        if ooc:
+            return self._query_ooc(queries, k, g, visit_batch,
+                                   dict(ooc_opts or {}))
         assert self.stacked is not None, "build() first"
         idx = self.stacked
         b = queries.shape[0]
@@ -252,3 +306,124 @@ class DistributedEngine:
         )
         self._query_fns[cache_key] = fn
         return fn(idx, queries)
+
+    # ------------------------------------------------------------------
+    def _shard_cache(self, d: str, store, need_leaves: int,
+                     cache_leaves: Optional[int], *,
+                     prefetch_depth: int, prefetch: bool):
+        """The shard's persistent warm cache + prefetcher, re-validated
+        per query: a cache whose capacity cannot pin this query's
+        per-iteration working set (b * visit_batch leaves — batch
+        sizes vary per guarantee group in the serving front) is
+        retired and rebuilt larger, and the prefetcher thread persists
+        with the cache instead of being spawned and joined per query
+        (its staging depth grows with the requested lookahead)."""
+        from repro.store import DeviceLeafCache, LeafPrefetcher
+
+        need = max(int(need_leaves), 1)
+        cache = self._shard_caches.get(d)
+        if cache is not None \
+                and cache.capacity < min(need, max(store.num_leaves, 1)):
+            if cache.prefetcher is not None:
+                cache.prefetcher.close()
+                cache.prefetcher = None
+            cache = None
+        if cache is None:
+            cap = cache_leaves if cache_leaves is not None \
+                else max(store.num_leaves // 8, 1)
+            cap = min(max(cap, need), max(store.num_leaves, 1))
+            cache = DeviceLeafCache(store, cap)
+            self._shard_caches[d] = cache
+        else:
+            # warm CONTENTS persist across queries (the serving
+            # regime); counters reset so last_ooc_stats reports this
+            # query's bytes, not the cache's lifetime
+            cache.reset_counters()
+        if prefetch:
+            depth = max(2, prefetch_depth + 1)
+            if cache.prefetcher is not None \
+                    and cache.prefetcher.depth < depth:
+                cache.prefetcher.close()
+                cache.prefetcher = None
+            if cache.prefetcher is None:
+                cache.prefetcher = LeafPrefetcher(store, depth=depth)
+        return cache
+
+    def close(self) -> None:
+        """Release out-of-core serving state: stop every per-shard
+        prefetcher thread and drop the warm caches/stores. build()
+        calls this before rebuilding; harmless on a resident-only
+        engine."""
+        for cache in self._shard_caches.values():
+            if cache.prefetcher is not None:
+                cache.prefetcher.close()
+                cache.prefetcher = None
+        self._shard_caches.clear()
+        self._stores.clear()
+
+    def _query_ooc(self, queries, k: int, g: Guarantee,
+                   visit_batch: int, opts: dict) -> SearchResult:
+        """Serve the query batch from the spilled shard stores: a
+        host-driven refinement loop per shard (the SAME shared core
+        search_impl traces — core/refine.py), then a cross-shard
+        ``ops.topk_merge_unique`` fold. Parity with the resident
+        shard_map path: per-shard results are bit-exact to the
+        resident per-shard search for lossless codecs
+        (tests/test_store.py), shard ids are globally disjoint, and
+        both merges select the k smallest distances — so ids AND dists
+        match the resident engine answer bit-for-bit (modulo
+        cross-shard ties, which (d, id)-lex ordering resolves
+        deterministically). Guarantee preservation is the same
+        argument as the shard_map path (module docstring): every
+        shard's answer satisfies the local guarantee against the
+        GLOBAL histogram/n_total persisted in its store, and the merge
+        only improves each rank."""
+        from repro.store import load_index
+        from repro.store.ooc import search_ooc
+
+        if not self.shard_dirs:
+            raise ValueError(
+                "no spilled shards: build(spill_dir=...) or "
+                "open_spill() first")
+        g.validate()
+        qj = jnp.asarray(queries)
+        b = qj.shape[0]
+        cache_leaves = opts.pop("cache_leaves", None)
+        top_d = jnp.full((b, k), jnp.inf, jnp.float32)
+        top_i = jnp.full((b, k), -1, jnp.int32)
+        leaves = np.zeros(b, np.int64)
+        rows = np.zeros(b, np.int64)
+        lbs = 0
+        stats = {"bytes_read": 0, "shards": []}
+        for d in self.shard_dirs:
+            store = self._stores.get(d)
+            if store is None:
+                store = load_index(d, resident="summaries")
+                self._stores[d] = store
+            cache = self._shard_cache(
+                d, store, b * visit_batch, cache_leaves,
+                prefetch_depth=int(opts.get("prefetch_depth", 1)),
+                prefetch=bool(opts.get("prefetch", True)))
+            out = search_ooc(
+                store, qj, k, delta=g.delta, epsilon=g.epsilon,
+                nprobe=g.nprobe, visit_batch=visit_batch, cache=cache,
+                **opts)
+            r = out.result
+            # shard dists are already sqrt'd like the resident merge
+            # operands; ids are globally disjoint across shards, so the
+            # unique-merge's dedup is a no-op — it is used for its
+            # (d, id)-lex selection and its explicit precondition
+            top_d, top_i = ops.topk_merge_unique(
+                r.dists, r.ids, top_d, top_i)
+            leaves += np.asarray(r.leaves_visited, np.int64)
+            rows += np.asarray(r.rows_scanned, np.int64)
+            lbs += int(r.lb_computed)
+            stats["bytes_read"] += out.stats["bytes_read"]
+            stats["shards"].append(out.stats)
+        self.last_ooc_stats = stats
+        return SearchResult(
+            dists=top_d, ids=top_i,
+            leaves_visited=jnp.asarray(leaves, jnp.int32),
+            rows_scanned=jnp.asarray(rows, jnp.int32),
+            lb_computed=jnp.int32(lbs),
+        )

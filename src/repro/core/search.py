@@ -24,6 +24,15 @@ adaptation (docs/PERF.md):
        | exhausted                        [scanned everything]
      where bsf is the kth-best true distance (k-NN generalization [42]).
 
+Since PR 4 the loop BODY is not defined here: every parity-critical
+piece — frontier tick/advance, candidate layout, duplicate-leaf
+masking, the codec-dispatched score+merge step, and the stopping
+predicates — lives once in core/refine.py, and this while_loop simply
+traces those shared functions over a :class:`refine.ResidentSource`
+(the HBM residency). store/ooc.py drives the SAME functions from its
+host loop over the cached-store sources, so in-memory/out-of-core
+parity holds by construction.
+
 Guarantees: with nprobe=None this is exact for (delta=1, eps=0),
 epsilon-approximate for (1, eps), delta-epsilon otherwise — identical to
 Algorithm 2 because leaves are visited in non-decreasing lb order and the
@@ -42,13 +51,17 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
-
+from . import refine
 from .guarantees import Guarantee
 from .histogram import r_delta
 from .index import FrozenIndex
 
-INF = jnp.float32(jnp.inf)
+# re-exported: the shared refinement-core primitives historically lived
+# here (store/ooc.py and tests import some through this module)
+INF = refine.INF
+default_frontier = refine.default_frontier
+frontier_select = refine.frontier_select
+dup_leaf_mask = refine.dup_leaf_mask
 
 
 class SearchResult(NamedTuple):
@@ -57,70 +70,6 @@ class SearchResult(NamedTuple):
     leaves_visited: jax.Array  # [B] int32
     rows_scanned: jax.Array    # [B] int32 raw series touched
     lb_computed: jax.Array     # scalar int32 (= L, the filter pass size)
-
-
-def default_frontier(num_leaves: int, visit_batch: int) -> int:
-    """Default lazy-frontier width: a few refill-free batches of
-    lookahead (covering this iteration's visits, the next_lb probe and
-    the prefetch window) without approaching the full leaf count."""
-    return min(num_leaves, max(64, 4 * visit_batch))
-
-
-def frontier_select(lb_sq: jax.Array, thr_lb: jax.Array,
-                    thr_id: jax.Array, f: int) -> tuple:
-    """Partially select each lane's next ``f`` visit ranks: the
-    lexicographic (lb, leaf-id) successors of the lane's threshold
-    pair (thr = (-1, -1) selects the first window). lax.top_k breaks
-    lb ties by lower leaf id — the stable argsort tie order — so
-    chaining selections reproduces the full sorted visit order exactly
-    (Algorithm 2's non-decreasing-lb condition; docs/PERF.md §2).
-
-    THE visit-order primitive: search_impl's in-loop refill and
-    store.ooc's host refill both call this one function, so the
-    bit-exact in-memory/OOC parity of the visit order holds by
-    construction."""
-    L = lb_sq.shape[1]
-    iota = jnp.arange(L, dtype=jnp.int32)
-    remaining = jnp.where(
-        (lb_sq > thr_lb[:, None])
-        | ((lb_sq == thr_lb[:, None])
-           & (iota[None, :] > thr_id[:, None])),
-        lb_sq, INF)
-    nv, ni = jax.lax.top_k(-remaining, f)
-    return -nv, ni
-
-
-def dup_leaf_mask(leaf: jax.Array, ok: jax.Array) -> jax.Array:
-    """[B, V] leaf ids + slot-usable mask -> [B, V] True where the slot
-    repeats a leaf already pooled by an EARLIER usable slot this
-    iteration. The cooperative paths mask those copies out before
-    scoring, which (a) keeps ops.topk_merge_unique's distinct-id
-    precondition and (b) changes nothing semantically — the copies
-    carry bit-identical (d, id) pairs.
-
-    Shared by search_impl (device) and search_ooc's host loop (tiny
-    [B, V] operands) so both cooperative pools stay identical by
-    construction. dup[i] = exists j < i with leaf_j == leaf_i and
-    ok[j]; computed in O(BV log BV): sort slots by (leaf, ok-first
-    rank), find each leaf group's leader (its minimal-position usable
-    slot), and a slot is a duplicate iff that leader is usable and
-    strictly earlier."""
-    bv = leaf.shape[0] * leaf.shape[1]
-    fl = jnp.asarray(leaf, jnp.int32).reshape(bv)
-    fo = jnp.asarray(ok).reshape(bv)
-    posv = jnp.arange(bv, dtype=jnp.int32)
-    rank = jnp.where(fo, posv, posv + bv)  # usable slots sort first
-    leaf_s, _, pos_s, ok_s = jax.lax.sort(
-        (fl, rank, posv, fo.astype(jnp.int32)), num_keys=2)
-    t = jnp.arange(bv, dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), leaf_s[1:] != leaf_s[:-1]])
-    start_idx = jax.lax.cummax(jnp.where(is_start, t, 0))
-    leader_ok = ok_s[start_idx] > 0
-    leader_pos = pos_s[start_idx]
-    dup_s = leader_ok & (leader_pos < pos_s)
-    dup = jnp.zeros((bv,), bool).at[pos_s].set(dup_s)
-    return dup.reshape(leaf.shape)
 
 
 def search_impl(
@@ -164,33 +113,24 @@ def search_impl(
     each refill materializes."""
     b, n = queries.shape
     L = index.num_leaves
-    m = index.max_leaf
     v = visit_batch
-    npad = index.data.shape[0]
+
+    src = refine.ResidentSource(index, force_pallas=force_pallas)
+    ctx = src.query_ctx(queries)
 
     # ---- filter: lower bound to every leaf ----
-    q_sum = index.summarize_queries(queries)
-    lb_sq = ops.box_mindist(
-        q_sum, index.box_lo, index.box_hi, index.weights,
-        force_pallas=force_pallas,
-    )  # [B, L] squared
+    lb_sq = refine.leaf_lower_bounds(index, queries,
+                                     force_pallas=force_pallas)  # [B, L]
 
-    # lazy frontier: the first F ranks of the visit order, refilled in
-    # the loop body when a lane runs low (never a full [B, L] argsort)
+    # lazy frontier: refilled window by window inside the loop body
+    # (never a full [B, L] argsort)
     F = default_frontier(L, v) if frontier is None \
         else min(max(int(frontier), v + 1), L)
-    fr_lb0, fr_id0 = frontier_select(
-        lb_sq, jnp.full((b,), -1.0, jnp.float32),
-        jnp.full((b,), -1, jnp.int32), F)
 
     eps_mult = jnp.float32((1.0 + epsilon) ** 2)
     rd = r_delta(index.hist, delta, index.n_total)
     rd_sq = (rd * rd).astype(jnp.float32)
     max_rank = L if nprobe is None else min(nprobe, L)
-
-    qf = queries.astype(jnp.float32)
-    norms = index.row_norms if index.row_norms is not None \
-        else ops.row_sq_norms(index.data)
 
     class State(NamedTuple):
         rank: jax.Array       # [B] next visit rank
@@ -200,11 +140,7 @@ def search_impl(
         leaves: jax.Array     # [B]
         rows: jax.Array       # [B]
         go: jax.Array         # scalar bool: any shard still active
-        fr_lb: jax.Array      # [B, F] frontier lbs (rank window)
-        fr_id: jax.Array      # [B, F] frontier leaf ids
-        fpos: jax.Array       # [B] next unconsumed frontier position
-        thr_lb: jax.Array     # [B] last consumed lb (refill threshold)
-        thr_id: jax.Array     # [B] last consumed leaf id
+        fr: refine.FrontierState
 
     init = State(
         rank=jnp.zeros((b,), jnp.int32),
@@ -214,113 +150,52 @@ def search_impl(
         leaves=jnp.zeros((b,), jnp.int32),
         rows=jnp.zeros((b,), jnp.int32),
         go=jnp.asarray(True),
-        fr_lb=fr_lb0,
-        fr_id=fr_id0,
-        fpos=jnp.zeros((b,), jnp.int32),
-        thr_lb=jnp.full((b,), -1.0, jnp.float32),
-        thr_id=jnp.full((b,), -1, jnp.int32),
+        fr=refine.frontier_init(b, F),
     )
-
-    lane = jnp.arange(b)
 
     def cond(s: State):
         return s.go
 
-    def refill_frontier(fr_lb, fr_id, fpos, thr_lb, thr_id, need):
-        """Refilling lanes get the F lexicographic (lb, leaf-id)
-        successors of their threshold — exactly ranks [rank, rank+F)
-        of the stable argsort order (frontier_select)."""
-        nv, ni = frontier_select(lb_sq, thr_lb, thr_id, F)
-        sel = need[:, None]
-        return (jnp.where(sel, nv, fr_lb),
-                jnp.where(sel, ni, fr_id),
-                jnp.where(need, 0, fpos))
-
     def body(s: State) -> State:
-        # refill exhausted frontiers first (rare: amortized once per
-        # floor(F/v) iterations per lane; skipped entirely via cond
-        # when no lane needs it)
-        need = s.active & (s.fpos > F - 1 - v)
-        fr_lb, fr_id, fpos = jax.lax.cond(
-            jnp.any(need),
-            lambda a: refill_frontier(*a),
-            lambda a: a[:3],
-            (s.fr_lb, s.fr_id, s.fpos, s.thr_lb, s.thr_id, need),
-        )
+        fr, leaf = refine.frontier_tick(s.fr, lb_sq, s.active,
+                                        v=v, lookahead=v)
 
         # ranks to visit this iteration: [B, V]
         rk = s.rank[:, None] + jnp.arange(v)[None, :]
         in_range = rk < max_rank
-        ppos = jnp.minimum(fpos[:, None] + jnp.arange(v)[None, :], F - 1)
-        leaf = jnp.take_along_axis(fr_id, ppos, axis=1)  # [B, V]
-        start = index.offsets[leaf]          # [B, V]
-        end = index.offsets[leaf + 1]
-        pos = jnp.arange(m)[None, None, :]
-        idx = start[:, :, None] + pos        # [B, V, M]
-        valid = (idx < end[:, :, None]) & in_range[:, :, None] \
-            & s.active[:, None, None]
-        idx = jnp.minimum(idx, npad - 1).reshape(b, v * m)
+        ok = in_range & s.active[:, None]
+        g = src.gather(leaf, ok)
         if share_gathers:
             # all lanes' rows pooled; every query scores every row.
             # Copies of a leaf pooled twice THIS iteration are masked
-            # (dup_leaf_mask) so pool ids stay distinct — the
+            # (coop_mask) so pool ids stay distinct — the
             # topk_merge_unique/coop_score_select precondition; dedup
             # across ITERATIONS happens in the merge.
-            flat = idx.reshape(b * v * m)
-            rows = index.data[flat]          # [B*V*M, n]
-            slot_ok = in_range & s.active[:, None]
-            dup = dup_leaf_mask(leaf, slot_ok)
-            fvalid = (valid & ~dup[:, :, None]).reshape(b * v * m)
-            cand_ids = jnp.where(fvalid, index.ids[flat], -1)
-            # fused score+select: candidates for the dedup merge are
-            # chosen per lane without materializing [B, B*V*M] on TPU
-            sel_d, sel_i = ops.coop_score_select(
-                qf, rows, norms[flat], cand_ids,
-                min(2 * k, b * v * m), force_pallas=force_pallas)
-            top_d, top_i = ops.dedup_merge_topk(
-                sel_d, sel_i, s.top_d, s.top_i)
+            pool_valid = refine.coop_mask(leaf, ok, g.valid)
+            top_d, top_i = src.score(ctx, g, pool_valid,
+                                     s.top_d, s.top_i, share=True)
         else:
-            rows = index.data[idx]           # [B, V*M, n]
-            cand_ids = jnp.where(valid.reshape(b, v * m),
-                                 index.ids[idx], -1)
-            d = ops.sq_l2(qf, rows, norms[idx])
-            d = jnp.where(valid.reshape(b, v * m), d, INF)
-            top_d, top_i = ops.topk_merge(d, cand_ids, s.top_d, s.top_i)
+            top_d, top_i = src.score(ctx, g, g.valid,
+                                     s.top_d, s.top_i, share=False)
 
         visited = jnp.sum(in_range, axis=1).astype(jnp.int32)
         leaves = s.leaves + jnp.where(s.active, visited, 0)
         rows_c = s.rows + jnp.where(
-            s.active, jnp.sum(valid, axis=(1, 2)).astype(jnp.int32), 0)
+            s.active, jnp.sum(g.valid, axis=1).astype(jnp.int32), 0)
 
+        fr, next_lb = refine.frontier_advance(fr, s.active, v=v)
         rank_next = jnp.minimum(s.rank + v, max_rank)
         exhausted = rank_next >= max_rank
-        next_lb = jnp.where(
-            exhausted, INF,
-            jnp.take_along_axis(
-                fr_lb, jnp.minimum(fpos + v, F - 1)[:, None], axis=1,
-            )[:, 0],
-        )
         bsf = top_d[:, k - 1]
         if sync_axes:
             bsf = jax.lax.pmin(bsf, sync_axes)  # global kth-best
-        stop = (next_lb * eps_mult > bsf) \
-            | (bsf <= eps_mult * rd_sq) \
-            | exhausted
+        stop = refine.stop_mask(next_lb, exhausted, bsf, eps_mult, rd_sq)
         active = s.active & ~stop
         go = jnp.any(active)
         if sync_axes:
             go = jax.lax.pmax(go.astype(jnp.int32), sync_axes) > 0
-
-        # refill threshold <- last rank consumed this iteration
-        last = jnp.minimum(fpos + v - 1, F - 1)[:, None]
-        thr_lb = jnp.where(
-            s.active, jnp.take_along_axis(fr_lb, last, axis=1)[:, 0],
-            s.thr_lb)
-        thr_id = jnp.where(
-            s.active, jnp.take_along_axis(fr_id, last, axis=1)[:, 0],
-            s.thr_id)
         return State(rank_next, top_d, top_i, active, leaves, rows_c,
-                     go, fr_lb, fr_id, fpos + v, thr_lb, thr_id)
+                     go, fr)
 
     final = jax.lax.while_loop(cond, body, init)
     return SearchResult(
@@ -352,8 +227,9 @@ def search_ooc(store, queries: jax.Array, k: int, **kw):
     warns if asked). Accepts
     delta/epsilon/nprobe/visit_batch plus cache/cache_leaves/prefetch,
     share_gathers (cooperative scoring, as in :func:`search_impl`),
-    frontier (lazy visit-order window width, as in :func:`search_impl`)
-    and rerank (codec="pq" exact re-rank pool multiplier); returns
+    frontier (lazy visit-order window width, as in :func:`search_impl`),
+    prefetch_depth (speculative lookahead in visit windows) and rerank
+    (codec="pq" exact re-rank pool multiplier); returns
     OocResult(result=SearchResult, stats={bytes_read, hit_rate,
     codec, ...})."""
     from repro.store.ooc import search_ooc as impl
@@ -372,6 +248,8 @@ def search_with_guarantee(
 def brute_force(queries: jax.Array, data: jax.Array, k: int,
                 **kw) -> SearchResult:
     """Exact linear-scan yardstick (fused L2 + top-k)."""
+    from repro.kernels import ops
+
     d, i = ops.l2_topk(queries, data, k, **kw)
     b = queries.shape[0]
     n = data.shape[0]

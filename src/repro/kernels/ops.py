@@ -317,12 +317,15 @@ def topk_merge_unique(dists, ids, top_d, top_i):
     select 2k candidates by (d, id) — k fresh winners can hide behind
     at most k duplicates of running entries — then dedup among the
     <=3k survivors only. ``ids`` may be [M] (lane-invariant pool, the
-    cooperative call sites: fast single-TopK path) or [B, M].
-    PRECONDITION (call-site invariant, enforced by the per-iteration
-    leaf dedup in search_impl/search_ooc): each real id appears at most
-    once among the candidate columns; only the -1 placeholder repeats.
-    Candidate ids duplicating RUNNING entries are fine at any
-    distance."""
+    cooperative call sites: fast single-TopK path) or [B, M] (per-lane
+    ids — the engine's cross-shard fold, where each shard's sorted
+    top-k merges into the global answer and shard ids are globally
+    disjoint). PRECONDITION (call-site invariant, enforced by the
+    per-iteration leaf dedup in the shared refinement core
+    core/refine.py, and by disjoint shard ranges in the engine fold):
+    each real id appears at most once among the candidate columns;
+    only the -1 placeholder repeats. Candidate ids duplicating RUNNING
+    entries are fine at any distance."""
     k = top_d.shape[1]
     kk = min(2 * k, dists.shape[1])
     if ids.ndim == 1:

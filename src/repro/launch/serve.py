@@ -1,9 +1,15 @@
 """Serving driver: bucketed batch decode + retrieval-augmented answers.
 
-Drives serve/batching.Scheduler over serve/serve_step.generate, with an
-optional retrieval hook: the prompt's last hidden state queries the
-paper's search engine (guarantee chosen per request deadline —
-graceful degradation per DESIGN.md §5.3).
+Drives serve/batching.Scheduler over serve/serve_step.generate, with a
+retrieval engine as a first-class feature: each request may carry a
+``series`` query in the engine's series space, and the scheduler's
+retrieval front partitions every drained batch by its deadline-mapped
+guarantee (epsilon -> delta-epsilon -> ng(nprobe) graceful
+degradation, serve/batching.guarantee_for_deadline) and issues one
+``engine.query`` per group. The engine decides residency per shard —
+HBM-resident shard_map search or the host-driven out-of-core loop
+over spilled stores (core/engine.DistributedEngine.query) — so the
+same serving front covers collections far larger than device memory.
 """
 
 from __future__ import annotations
@@ -11,7 +17,6 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,10 +33,17 @@ def serve_requests(
     engine=None,
     retrieval_k: int = 5,
     max_batch: int = 8,
+    guarantee_kw: Optional[dict] = None,
 ) -> Dict[int, Dict[str, Any]]:
+    """Serve a request list to completion. With ``engine`` set, every
+    request carrying a ``series`` query gets a ``retrieval`` entry
+    ({ids, dists, kind}) answered under the guarantee its deadline
+    affords; ``guarantee_kw`` tunes the deadline->guarantee mapping
+    (budgets, degraded tiers — see guarantee_for_deadline)."""
     sched = Scheduler(max_batch=max_batch)
     for r in requests:
         sched.submit(r)
+    gkw = dict(guarantee_kw or {})
     results: Dict[int, Dict[str, Any]] = {}
     while True:
         nb = sched.next_batch()
@@ -42,17 +54,26 @@ def serve_requests(
         n_new = max(r.max_new_tokens for r in reqs)
         t0 = time.perf_counter()
         toks, aux = generate(params, cfg, prompts, n_new)
-        latency = (time.perf_counter() - t0) * 1e3
-        retrieved = {}
+        retrieved: Dict[int, Dict[str, Any]] = {}
         if engine is not None:
-            # embed the prompt (mean of final hidden states proxy: use
-            # the engine's own series space — callers supply series)
-            pass
+            # the retrieval front: one engine.query per deadline-
+            # mapped guarantee group, overlapping nothing — retrieval
+            # latency is part of the request's budget
+            retrieved = sched.run_retrieval(
+                engine, reqs, retrieval_k, **gkw)
+        latency = (time.perf_counter() - t0) * 1e3
         for i, r in enumerate(reqs):
-            results[r.uid] = {
+            entry: Dict[str, Any] = {
                 "tokens": np.asarray(toks[i, : r.max_new_tokens]),
                 "latency_ms": latency,
-                "guarantee": str(
-                    guarantee_for_deadline(r.deadline_ms).kind),
+                "guarantee": guarantee_for_deadline(
+                    r.deadline_ms, **gkw).kind,
             }
+            if r.uid in retrieved:
+                hit = retrieved[r.uid]
+                entry["retrieval"] = {
+                    "ids": hit["ids"], "dists": hit["dists"],
+                    "kind": hit["kind"],
+                }
+            results[r.uid] = entry
     return results

@@ -28,12 +28,15 @@ workload instead of a hardware-neutral proxy. Design (one screen):
 
   Search (ooc.search_ooc).  The filter stage runs on device over the
   resident summaries EXACTLY as core.search.search; the refinement
-  loop moves to the host so it can perform I/O, but visits leaves in
-  the same order, scores the same candidate layout with the same
-  kernels, and evaluates the same f32 stopping predicates — so the
-  exact / epsilon-approximate / delta-epsilon guarantees of
-  Algorithm 2 are preserved verbatim (tests/test_store.py asserts
-  top-k parity with the in-memory path under tiny caches).
+  loop moves to the host so it can perform I/O, but it is not a
+  mirror — it DRIVES the same shared core (core/refine.py: frontier,
+  candidate layout, refine_step, stop predicates) through the
+  CachedStoreSource/PQSource LeafSource implementations (ooc.py), so
+  the exact / epsilon-approximate / delta-epsilon guarantees of
+  Algorithm 2 are preserved by construction (tests/test_store.py
+  asserts bit-exact top-k parity with the in-memory path under tiny
+  caches; tests/test_refine.py holds every source to the same
+  conformance contract).
 
   Leaf codecs (store format v2, layout.py).  data.bin's payload is
   pluggable: "f32" (native dtype, bit-exact), "bf16" (half the
@@ -49,21 +52,32 @@ workload instead of a hardware-neutral proxy. Design (one screen):
   MXU matmul, mirroring search_impl's in-memory branch — per-query
   bytes-read drops as the batch grows.
 
+  Out-of-core serving (core/engine.DistributedEngine.query, PR 4).
+  Spill-built shards (``build(spill_dir=..., codec=...,
+  keep_resident=False)`` or ``DistributedEngine.open_spill``) are
+  served directly: a host-driven refinement loop per shard over warm
+  per-shard caches, merged across shards with ops.topk_merge_unique —
+  bit-exact to the HBM-resident shard_map path for lossless codecs.
+  The deadline-aware front (serve/batching.Scheduler.run_retrieval)
+  drives it per guarantee group; docs/ARCHITECTURE.md diagrams the
+  whole stack.
+
 Follow-ups tracked in ROADMAP "Open items": zstd-compressed leaves,
-NUMA-aware read scheduling, and multi-host spill for DistributedEngine
-(today each shard spills to its own store directory via
-``build(spill_dir=..., codec=...)``).
+NUMA-aware read scheduling, true multi-HOST spill (shards opened on
+the host that owns them + a collective merge).
 """
 
 from .cache import DeviceLeafCache
 from .layout import (FORMAT_VERSION, LeafStore,
                      StoreFormatDeprecationWarning, load_index,
                      save_index)
-from .ooc import OocResult, search_ooc
+from .ooc import (CachedStoreSource, OocResult, PQSource, make_source,
+                  search_ooc)
 from .prefetch import LeafPrefetcher
 
 __all__ = [
-    "DeviceLeafCache", "FORMAT_VERSION", "LeafStore", "LeafPrefetcher",
-    "OocResult", "StoreFormatDeprecationWarning", "load_index",
+    "CachedStoreSource", "DeviceLeafCache", "FORMAT_VERSION",
+    "LeafStore", "LeafPrefetcher", "OocResult", "PQSource",
+    "StoreFormatDeprecationWarning", "load_index", "make_source",
     "save_index", "search_ooc",
 ]

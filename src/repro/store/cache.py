@@ -74,6 +74,13 @@ class DeviceLeafCache:
         self.prefetch_hits = 0   # misses served from the prefetcher
 
     # ------------------------------------------------------------------
+    def contains(self, leaf: int) -> bool:
+        """True if the leaf is slot-resident right now (no side
+        effects — unlike get_slots this neither touches the CLOCK
+        reference bit nor counts a hit). The prefetch scheduler uses
+        it to skip staging leaves that could never miss."""
+        return int(leaf) in self.slot_of
+
     def _evict_one(self, pinned: set) -> int:
         """CLOCK: advance the hand, clearing reference bits, until an
         unpinned slot with refbit=0 comes up."""

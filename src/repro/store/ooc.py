@@ -1,55 +1,53 @@
 """Out-of-core Algorithm 2: device filter, streamed refinement.
 
-Semantics are IDENTICAL to core.search.search — same lower-bound
-kernel, same lazy-frontier visit order (bit-equal to the stable argsort
-order; the refill threshold proof is shared with search_impl, see
-docs/PERF.md), same candidate layout per iteration ([V leaves x
-max_leaf positions] per lane, invalid positions masked to inf), same
-partial-selection topk merges over the same cached row norms, same
-stopping predicates evaluated in f32 — so the exact / epsilon /
-delta-epsilon guarantees transfer untouched; the ONLY difference is
-residency: payload rows are gathered from the DeviceLeafCache slot
-pool (fed from disk) instead of an HBM-resident data array.
+Semantics are IDENTICAL to core.search.search — this module does not
+mirror the refinement loop, it DRIVES the same one: frontier
+tick/advance, candidate layout, duplicate-leaf masking, the
+codec-dispatched score+merge step and the stopping predicates are all
+the shared core/refine.py functions (search_impl traces them inside
+its lax.while_loop; this host loop calls them jitted), so the exact /
+epsilon / delta-epsilon guarantees transfer untouched. The ONLY
+difference is residency, supplied by two LeafSource implementations:
+
+  CachedStoreSource   f32/bf16 leaves gathered from the
+                      DeviceLeafCache slot pool (fed from disk through
+                      the prefetcher); fused-L2 scoring over the
+                      ENCODED slots (bf16 upcasts inside the kernel —
+                      bit-exact to in-memory search over the bfloat16
+                      index).
+  PQSource            uint8 PQ codes ADC-scored on device (the
+                      kernels/pq_adc one-hot MXU trick); the loop
+                      tracks padded row POSITIONS and ``finalize`` runs
+                      the exact re-rank against ``exact.bin`` so the
+                      epsilon/delta-epsilon guarantee checks survive
+                      the lossy payload. Carve-out: the EXACT
+                      (epsilon=0) guarantee does NOT survive pq — the
+                      stop predicate's kth-best is an ADC approximation
+                      that can prune the true neighbor's leaf early;
+                      search_ooc warns if asked for it.
 
 Control flow moves from lax.while_loop to a host loop because each
 iteration performs I/O. The host loop:
 
-  1. computes this iteration's leaf batch from the (host) visit order;
+  1. ticks the (shared) frontier for this iteration's leaf window;
   2. makes those leaves cache-resident (one batched h2d upload);
-  3. schedules NEXT iteration's predicted leaves on the prefetcher, so
-     the disk reads overlap the device scoring it is about to launch;
-  4. runs the jitted refine step (gather from slots -> decode/score ->
-     topk merge) on device;
-  5. pulls back the per-lane kth-best and evaluates the paper's
+  3. schedules the next ``prefetch_depth`` visit windows on the
+     prefetcher, so the disk reads overlap the device scoring it is
+     about to launch;
+  4. runs the jitted shared refine step (gather from slots ->
+     decode/score -> topk merge) on device;
+  5. pulls back the per-lane kth-best and evaluates the shared
      stopping predicates in numpy f32 (bit-identical arithmetic to the
      device f32 ops of the in-memory loop).
 
-Codecs (store format v2).  The refine step decodes-then-scores the
-ENCODED slots: f32 slots score directly, bf16 slots upcast inside the
-fused L2 (bit-exact to in-memory search over the bfloat16 index), and
-codec="pq" slots hold uint8 codes that are ADC-scored on device via the
-kernels/pq_adc one-hot MXU trick — the loop then tracks padded row
-POSITIONS and finishes with an exact re-rank: the final candidate pool
-(``rerank``*k per lane) is re-scored in f32 against raw rows read from
-``exact.bin``, so the reported distances are exact for the returned
-neighbors and the epsilon/delta-epsilon guarantee checks survive the
-lossy payload. Carve-out: the EXACT (epsilon=0) guarantee does NOT
-survive pq — the stop predicate's kth-best is an ADC approximation
-that can prune the true neighbor's leaf early; search_ooc warns if
-asked for it.
-
-Cooperative scoring (``share_gathers=True``) mirrors search_impl's
-in-memory branch: every iteration's gathered slots are scored against
-ALL query lanes in one MXU matmul instead of only the lane that
-requested them. Extra candidates can only improve a lane's top-k, so
-every guarantee is preserved, while each lane's best-so-far tightens
-from the whole batch's I/O — per-query bytes-read drops as the batch
-grows (for pq this is ONE [B, m*K] x [m*K, rows] matmul per iteration).
+Cooperative scoring (``share_gathers=True``) is search_impl's
+cooperative branch verbatim — the same refine_step corner with the
+cache slot pool as the gather pool (for pq this is ONE [B, m*K] x
+[m*K, rows] matmul per iteration).
 """
 
 from __future__ import annotations
 
-import functools
 import warnings
 from typing import NamedTuple, Optional
 
@@ -57,11 +55,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import refine
 from repro.core.histogram import r_delta
-from repro.core.search import (INF, SearchResult, default_frontier,
-                               dup_leaf_mask, frontier_select)
+from repro.core.refine import INF, Gathered, ScoreCtx, default_frontier
+from repro.core.search import SearchResult
 from repro.core.summaries.pq import adc_lut_batch
-from repro.kernels import ops
 
 from .cache import DeviceLeafCache
 from .layout import LeafStore
@@ -75,89 +73,127 @@ class OocResult(NamedTuple):
 
 @jax.jit
 def _filter_stage(resident, q):
-    """Lower bound every leaf (device). The visit order is NOT fully
-    argsorted here any more — the lazy frontier partially selects it
-    rank window by rank window (_frontier_refill)."""
-    q_sum = resident.summarize_queries(q)
-    return ops.box_mindist(
-        q_sum, resident.box_lo, resident.box_hi, resident.weights)
+    """Lower bound every leaf (device) — the shared filter pass; the
+    visit order is partially selected from it window by window."""
+    return refine.leaf_lower_bounds(resident, q)
 
 
-# the SAME visit-order primitive search_impl refills with (bit-exact
-# in-memory/OOC parity by construction), jitted for the host loop
-_frontier_refill = jax.jit(frontier_select, static_argnames=("f",))
+# jitted host-loop entry points over the SHARED core primitives (the
+# in-memory while_loop traces the same functions inline — bit-exact
+# visit order / scoring / stopping parity by construction)
+_frontier_refill = jax.jit(refine.frontier_select,
+                           static_argnames=("f",))
+_frontier_tick = jax.jit(refine.frontier_tick,
+                         static_argnames=("v", "lookahead"))
+_frontier_advance = jax.jit(refine.frontier_advance,
+                            static_argnames=("v",))
+_frontier_window = jax.jit(refine.frontier_window,
+                           static_argnames=("offset", "v"))
+_refine_step = jax.jit(refine.refine_step,
+                       static_argnames=("share", "pq", "force_pallas"))
+_coop_mask = jax.jit(refine.coop_mask)
 
 
-@jax.jit
-def _refine_step(qf, slots, flat_slot_idx, row_idx, top_d, top_i,
-                 valid, ids, row_norms):
-    """One iteration's scoring: gather rows from the slot pool, fused
-    L2 (cached row norms) against every lane, O(k) merge into the
-    running top-k. Mirrors the non-share_gathers branch of
-    core.search.search_impl exactly."""
-    n = qf.shape[1]
-    rows = slots.reshape(-1, n)[flat_slot_idx]       # [B, V*M, n]
-    cand_ids = jnp.where(valid, ids[row_idx], -1)
-    d = ops.sq_l2(qf, rows, row_norms[row_idx])
-    d = jnp.where(valid, d, INF)
-    top_d, top_i = ops.topk_merge(d, cand_ids, top_d, top_i)
-    return top_d, top_i
+class CachedStoreSource:
+    """LeafSource over a LeafStore: leaves reach the device through a
+    DeviceLeafCache (disk -> host buffer -> one batched h2d scatter),
+    ``gather`` maps this iteration's window to cache slots, and
+    ``prefetch`` hands the next windows to the attached prefetcher.
+    Scoring is the shared refine_step with the slot pool as the gather
+    pool (raw codecs: fused L2 over encoded slots)."""
+
+    pq = False
+
+    def __init__(self, store: LeafStore, cache: DeviceLeafCache, *,
+                 prefetch: bool = True):
+        self.store = store
+        self.cache = cache
+        self.prefetch_enabled = prefetch
+
+    @property
+    def resident(self):
+        return self.store.resident
+
+    def query_ctx(self, queries: jax.Array) -> ScoreCtx:
+        res = self.store.resident
+        return ScoreCtx(qf=jnp.asarray(queries, jnp.float32),
+                        ids=res.ids, norms=res.row_norms, luts=None)
+
+    def track_width(self, k: int) -> int:
+        return k
+
+    def gather(self, leaf: np.ndarray, ok: np.ndarray) -> Gathered:
+        """Make the [B, V] window cache-resident and expose it as a
+        refine_step gather pool. The full per-lane request list (dups
+        included) feeds the cache so its per-request hit accounting
+        credits lanes sharing a leaf."""
+        m = self.store.max_leaf
+        b, v = leaf.shape
+        needed = leaf[ok]
+        slots = self.cache.get_slots(needed.tolist())
+        slot_of = dict(zip(needed.tolist(), slots.tolist()))
+        slot_arr = np.zeros_like(leaf)
+        for lf, s in slot_of.items():
+            slot_arr[leaf == lf] = s
+        gi = (slot_arr[:, :, None] * m
+              + np.arange(m)[None, None, :]).reshape(b, v * m)
+        row_idx, valid = refine.candidate_layout(
+            self.resident.offsets, jnp.asarray(leaf, jnp.int32),
+            jnp.asarray(ok), m, self.store.mmap.shape[0] - 1)
+        pool = self.cache.slots.reshape(-1, self.store.payload_cols)
+        return Gathered(pool=pool,
+                        gather_idx=jnp.asarray(gi, jnp.int32),
+                        row_idx=row_idx, valid=valid)
+
+    def prefetch(self, windows) -> None:
+        """Stage future visit windows ([(leaf [B, V], ok [B, V])],
+        nearest first) on the attached prefetcher, skipping leaves
+        already cache-resident — a warm cache must not touch the disk.
+        ``prefetch=False`` disables scheduling even on an attached
+        prefetcher: callers use it to measure pure demand reads."""
+        pf = self.cache.prefetcher
+        if not self.prefetch_enabled or pf is None:
+            return
+        for leaf_w, ok_w in windows:
+            nxt = [int(lf) for lf in np.unique(leaf_w[ok_w])
+                   if not self.cache.contains(int(lf))]
+            if nxt:
+                pf.schedule(nxt)
+
+    def score(self, ctx, g, valid, top_d, top_i, *, share):
+        return _refine_step(ctx, g.pool, g.gather_idx, g.row_idx,
+                            valid, top_d, top_i, share=share,
+                            pq=self.pq)
+
+    def finalize(self, ctx, top_d, top_i, k: int):
+        return top_d, top_i, 0
 
 
-@jax.jit
-def _refine_step_shared(qf, slots, flat_slot_idx, row_idx, top_d,
-                        top_i, pool_valid, ids, row_norms):
-    """Cooperative scoring: pool the iteration's gathered slots and
-    score every row against ALL query lanes, selecting each lane's
-    2k candidates fused with the scoring (ops.coop_score_select — on
-    TPU the [B, B*V*M] distance matrix never reaches HBM), then dedup
-    merge. Mirrors the share_gathers branch of
-    core.search.search_impl exactly (same op sequence -> bit-exact
-    parity). ``pool_valid`` already excludes same-iteration duplicate
-    leaf copies (the distinct-id precondition)."""
-    n = qf.shape[1]
-    k = top_d.shape[1]
-    flat = flat_slot_idx.reshape(-1)
-    rows = slots.reshape(-1, n)[flat]                # [B*V*M, n]
-    fvalid = pool_valid.reshape(-1)
-    flat_rows = row_idx.reshape(-1)
-    cand_ids = jnp.where(fvalid, ids[flat_rows], -1)
-    sel_d, sel_i = ops.coop_score_select(
-        qf, rows, row_norms[flat_rows], cand_ids,
-        min(2 * k, cand_ids.shape[0]))
-    return ops.dedup_merge_topk(sel_d, sel_i, top_d, top_i)
+class PQSource(CachedStoreSource):
+    """CachedStoreSource whose slots hold uint8 PQ codes: scoring is
+    the refine_step pq corner (ADC LUTs in the query ctx, padded row
+    positions as candidates) and ``finalize`` is the exact re-rank
+    against raw exact.bin rows."""
 
+    pq = True
 
-@jax.jit
-def _refine_step_pq(luts, slots, flat_slot_idx, row_idx, top_d, top_i,
-                    valid):
-    """PQ decode-and-score: gather uint8 codes from the slot pool, ADC
-    against each lane's LUT (one-hot MXU trick in ops.pq_adc_batch),
-    merge padded row POSITIONS (exact re-rank maps them to ids)."""
-    mcols = slots.shape[-1]
-    codes = slots.reshape(-1, mcols)[flat_slot_idx]  # [B, V*M, m]
-    cand_pos = jnp.where(valid, row_idx, -1)
-    d = ops.pq_adc_batch(codes, luts)
-    d = jnp.where(valid, d, INF)
-    return ops.topk_merge(d, cand_pos, top_d, top_i)
+    def __init__(self, store: LeafStore, cache: DeviceLeafCache, *,
+                 rerank: int = 4, **kw):
+        super().__init__(store, cache, **kw)
+        if store.codebook is None:
+            raise ValueError("codec='pq' store has no codebook")
+        self.rerank = max(1, int(rerank))
 
+    def query_ctx(self, queries: jax.Array) -> ScoreCtx:
+        return ScoreCtx(qf=jnp.asarray(queries, jnp.float32),
+                        ids=self.resident.ids, norms=None,
+                        luts=adc_lut_batch(self.store.codebook, queries))
 
-@jax.jit
-def _refine_step_pq_shared(luts, slots, flat_slot_idx, row_idx, top_d,
-                           top_i, pool_valid):
-    """Cooperative PQ scoring: ONE [B, m*K] x [m*K, rows] matmul scores
-    every gathered code row against all query lanes; selection-based
-    dedup merge keeps per-iteration merge cost O(k). ``pool_valid``
-    already excludes same-iteration duplicate leaf copies."""
-    mcols = slots.shape[-1]
-    flat = flat_slot_idx.reshape(-1)
-    codes = slots.reshape(-1, mcols)[flat]           # [B*V*M, m]
-    fvalid = pool_valid.reshape(-1)
-    cand_pos = jnp.where(fvalid, row_idx.reshape(-1), -1)
-    d = ops.pq_adc_batch(codes, luts)                # [B, B*V*M]
-    d = jnp.where(fvalid[None, :], d, INF)
-    # cand_pos is lane-invariant -> topk_merge_unique's fast 1-D path
-    return ops.topk_merge_unique(d, cand_pos, top_d, top_i)
+    def track_width(self, k: int) -> int:
+        return k * self.rerank
+
+    def finalize(self, ctx, top_d, top_i, k: int):
+        return _exact_rerank(self.store, ctx.qf, top_d, top_i, k)
 
 
 def _exact_rerank(store: LeafStore, qf, top_d, top_i, k: int):
@@ -193,6 +229,115 @@ def _exact_rerank(store: LeafStore, qf, top_d, top_i, k: int):
     return sd[:, :k], si[:, :k], rerank_bytes
 
 
+def _host_refine(
+    src, queries: jax.Array, k: int, *, delta: float, epsilon: float,
+    nprobe: Optional[int], visit_batch: int, share_gathers: bool,
+    frontier: Optional[int], prefetch_depth: int,
+):
+    """The host-driven refinement loop over a LeafSource — the same
+    Algorithm 2 iteration search_impl runs under lax.while_loop,
+    executed step by step so each iteration can perform I/O. Returns
+    (SearchResult with SQUARED final pool pre-finalize sqrt applied,
+    iterations, rerank_bytes)."""
+    res = src.resident
+    b, n = queries.shape
+    L = res.num_leaves
+    v = int(visit_batch)
+    depth = max(1, int(prefetch_depth))
+
+    ctx = src.query_ctx(queries)
+    lb_sq = _filter_stage(res, queries)  # [B, L], stays on device
+
+    # frontier width F covers this iteration's visits, the next_lb
+    # probe AND the prefetch lookahead (depth extra windows); ANY
+    # width emits the same visit order (core/refine.py)
+    la_want = (1 + depth) * v
+    F = min(max(default_frontier(L, v), la_want), L) if frontier is None \
+        else min(max(int(frontier), min(la_want, L)), L)
+    lookahead = min(la_want, F)
+    fr = refine.frontier_init(b, F)
+
+    eps_mult = np.float32((1.0 + epsilon) ** 2)
+    rd = float(r_delta(res.hist, delta, res.n_total))
+    rd_sq = np.float32(rd) * np.float32(rd)
+    max_rank = L if nprobe is None else min(nprobe, L)
+
+    kk = src.track_width(k)
+    top_d = jnp.full((b, kk), INF)
+    top_i = jnp.full((b, kk), -1, jnp.int32)
+    rank = np.zeros(b, np.int64)
+    active = np.ones(b, bool)
+    leaves_visited = np.zeros(b, np.int64)
+    rows_scanned = np.zeros(b, np.int64)
+    iters = 0
+
+    while active.any():
+        active_j = jnp.asarray(active)
+        fr, leaf_j = _frontier_tick(fr, lb_sq, active_j,
+                                    v=v, lookahead=lookahead)
+        leaf = np.asarray(leaf_j)
+
+        rk = rank[:, None] + np.arange(v)[None, :]
+        in_range = rk < max_rank
+        ok = in_range & active[:, None]
+        g = src.gather(leaf, ok)
+
+        # overlap: stage the next `depth` visit windows while the
+        # device scores this one (nearest window first — it is read
+        # first)
+        windows = []
+        for d in range(1, depth + 1):
+            base = np.minimum(rank + d * v, max_rank)
+            ok_d = ((base[:, None] + np.arange(v)[None, :]) < max_rank) \
+                & active[:, None]
+            if ok_d.any():
+                windows.append(
+                    (np.asarray(_frontier_window(fr, d * v, v)), ok_d))
+        src.prefetch(windows)
+
+        if share_gathers:
+            pool_valid = _coop_mask(leaf_j, jnp.asarray(ok), g.valid)
+            top_d, top_i = src.score(ctx, g, pool_valid, top_d, top_i,
+                                     share=True)
+        else:
+            top_d, top_i = src.score(ctx, g, g.valid, top_d, top_i,
+                                     share=False)
+
+        valid_np = np.asarray(g.valid)
+        leaves_visited += np.where(active, in_range.sum(1), 0)
+        rows_scanned += np.where(active, valid_np.sum(1), 0)
+
+        fr, next_lb_j = _frontier_advance(fr, active_j, v=v)
+        rank_next = np.minimum(rank + v, max_rank)
+        exhausted = rank_next >= max_rank
+        next_lb = np.asarray(next_lb_j).astype(np.float32)
+        bsf = np.asarray(top_d[:, k - 1])          # f32, sync point
+        stop = refine.stop_mask(next_lb, exhausted, bsf,
+                                eps_mult, rd_sq)
+        active = active & ~stop
+        rank = rank_next
+        iters += 1
+
+    top_d, top_i, rerank_bytes = src.finalize(ctx, top_d, top_i, k)
+    result = SearchResult(
+        dists=jnp.sqrt(top_d),
+        ids=top_i,
+        leaves_visited=jnp.asarray(leaves_visited, jnp.int32),
+        rows_scanned=jnp.asarray(rows_scanned, jnp.int32),
+        lb_computed=jnp.int32(L),
+    )
+    return result, iters, rerank_bytes
+
+
+def make_source(store: LeafStore, cache: DeviceLeafCache, *,
+                prefetch: bool = True, rerank: int = 4):
+    """Codec-dispatched LeafSource over an opened store + device
+    cache: PQSource for codec="pq", CachedStoreSource otherwise."""
+    if store.codec == "pq":
+        return PQSource(store, cache, prefetch=prefetch, rerank=rerank)
+    return CachedStoreSource(store, cache, prefetch=prefetch)
+
+
 def search_ooc(
     store: LeafStore,
     queries: jax.Array,  # [B, n]
@@ -208,6 +353,7 @@ def search_ooc(
     share_gathers: bool = False,
     rerank: int = 4,
     frontier: Optional[int] = None,
+    prefetch_depth: int = 1,
 ) -> OocResult:
     """k-NN over an on-disk index without device-resident raw data.
 
@@ -216,21 +362,26 @@ def search_ooc(
     (clamped to at least one iteration's working set).
     ``prefetch=False`` disables speculative scheduling for this call —
     including on a prefetcher already attached to a supplied cache —
-    so stats measure pure demand-path reads.
+    so stats measure pure demand-path reads. ``prefetch_depth`` is the
+    frontier-aware lookahead in visit windows: the host frontier hands
+    the prefetcher the next ``depth x visit_batch`` leaf ids instead
+    of one window (deeper lookahead hides more disk latency on
+    sequential visit runs; a lane that stops early wastes at most
+    ``depth`` windows of reads).
     ``share_gathers=True`` scores every gathered slot against all query
     lanes (cooperative batching — module docstring). For codec="pq"
     stores, ``rerank``*k candidates per lane are kept through the ADC
     loop and exactly re-ranked against raw rows at the end.
     ``frontier`` tunes the lazy visit-order window width (None ->
-    core.search.default_frontier, widened to cover the prefetch
+    core.refine.default_frontier, widened to cover the prefetch
     lookahead); any width emits the same visit order.
     """
     res = store.resident
     b, n = queries.shape
     L = res.num_leaves
-    m = res.max_leaf
     v = int(visit_batch)
     per_iter = b * v  # worst-case distinct leaves one iteration pins
+    depth = max(1, int(prefetch_depth))
 
     own_prefetcher = None
     if cache is None:
@@ -239,198 +390,42 @@ def search_ooc(
         cache_leaves = min(max(cache_leaves, per_iter), max(L, 1))
         cache = DeviceLeafCache(store, cache_leaves)
     if prefetch and cache.prefetcher is None:
-        own_prefetcher = LeafPrefetcher(store)
+        # staging bound covers every speculative window in flight
+        own_prefetcher = LeafPrefetcher(store, depth=depth + 1)
         cache.prefetcher = own_prefetcher
     pf_used = cache.prefetcher
 
-    pq = store.codec == "pq"
-    kk = k * max(1, int(rerank)) if pq else k
-    luts = None
-    if pq:
-        if store.codebook is None:
-            raise ValueError("codec='pq' store has no codebook")
-        if epsilon == 0.0 and nprobe is None:
-            # the stopping predicate compares EXACT leaf lower bounds
-            # against the ADC (approximate) kth-best, which can
-            # underestimate and prune the true NN's leaf before it is
-            # visited; the re-rank only rescores pooled candidates and
-            # cannot recover it — so epsilon=0 is NOT exact under pq.
-            warnings.warn(
-                "codec='pq' cannot honor the exact (epsilon=0) "
-                "guarantee: ADC-scored stopping may prune the true "
-                "neighbor's leaf. Use epsilon>0 (the epsilon/"
-                "delta-epsilon checks hold after the exact re-rank), "
-                "nprobe, or a lossless codec.", UserWarning,
-                stacklevel=2)
-        luts = adc_lut_batch(store.codebook, queries)
+    if store.codec == "pq" and epsilon == 0.0 and nprobe is None:
+        # the stopping predicate compares EXACT leaf lower bounds
+        # against the ADC (approximate) kth-best, which can
+        # underestimate and prune the true NN's leaf before it is
+        # visited; the re-rank only rescores pooled candidates and
+        # cannot recover it — so epsilon=0 is NOT exact under pq.
+        warnings.warn(
+            "codec='pq' cannot honor the exact (epsilon=0) "
+            "guarantee: ADC-scored stopping may prune the true "
+            "neighbor's leaf. Use epsilon>0 (the epsilon/"
+            "delta-epsilon checks hold after the exact re-rank), "
+            "nprobe, or a lossless codec.", UserWarning,
+            stacklevel=2)
 
-    lb_sq_d = _filter_stage(res, queries)  # [B, L], stays on device
-
-    # lazy frontier (host mirror of search_impl's): F covers this
-    # iteration's visits, the next_lb probe AND the prefetch lookahead
-    F = min(max(default_frontier(L, v), 2 * v), L) if frontier is None \
-        else min(max(int(frontier), min(2 * v, L)), L)
-    lane2 = np.arange(b)[:, None]
-    fr_lb = np.full((b, F), np.inf, np.float32)
-    fr_id = np.zeros((b, F), np.int64)
-    fpos = np.full(b, F, np.int64)           # empty -> fill on entry
-    thr_lb = np.full(b, -1.0, np.float32)
-    thr_id = np.full(b, -1, np.int64)
-
-    eps_mult = np.float32((1.0 + epsilon) ** 2)
-    rd = float(r_delta(res.hist, delta, res.n_total))
-    rd_sq = np.float32(rd) * np.float32(rd)
-    max_rank = L if nprobe is None else min(nprobe, L)
-
-    qf = jnp.asarray(queries, jnp.float32)
-    top_d = jnp.full((b, kk), INF)
-    top_i = jnp.full((b, kk), -1, jnp.int32)
-    rank = np.zeros(b, np.int64)
-    active = np.ones(b, bool)
-    leaves_visited = np.zeros(b, np.int64)
-    rows_scanned = np.zeros(b, np.int64)
-
-    offs = store.offsets_h
-    sizes = offs[1:] - offs[:-1]
-    pos = np.arange(m)[None, None, :]
-    iters = 0
-
-    def frontier_leaves(first):
-        """[B, V] leaf ids from frontier positions ``first`` (clamped
-        to the window; callers mask out-of-rank slots via in_range,
-        like the device body's clamped reads)."""
-        ppos = np.minimum(first[:, None] + np.arange(v)[None, :], F - 1)
-        return fr_id[lane2, ppos]
-
-    def pool_dup_mask(leaf, in_range):
-        """[B, V] True where the slot repeats a leaf already pooled by
-        an earlier in-range slot this iteration — the SAME
-        core.search.dup_leaf_mask the in-memory cooperative branch
-        uses, so both pools are identical by construction (the [B, V]
-        operands are tiny, the device round-trip is noise next to the
-        scoring step)."""
-        return np.asarray(dup_leaf_mask(jnp.asarray(leaf),
-                                        jnp.asarray(in_range)))
-
+    src = make_source(store, cache, prefetch=prefetch, rerank=rerank)
     try:
-        while active.any():
-            # refill frontiers running too low to cover this
-            # iteration + the prefetch lookahead (amortized: once per
-            # floor(F/v) iterations per lane)
-            need = active & (fpos > F - 2 * v)
-            if need.any():
-                nlb, nid = _frontier_refill(
-                    lb_sq_d, jnp.asarray(thr_lb),
-                    jnp.asarray(thr_id, jnp.int32), F)
-                fr_lb[need] = np.asarray(nlb)[need]
-                fr_id[need] = np.asarray(nid)[need]
-                fpos[need] = 0
-
-            rk = rank[:, None] + np.arange(v)[None, :]
-            in_range = (rk < max_rank) & active[:, None]
-            leaf = frontier_leaves(fpos)
-            # full per-lane request list (dups included) so the cache's
-            # per-request hit accounting credits lanes sharing a leaf
-            needed = leaf[in_range]
-            slots = cache.get_slots(needed.tolist())
-            slot_of = dict(zip(needed.tolist(), slots.tolist()))
-
-            # overlap: stage the leaves the NEXT iteration will want
-            # while the device scores this one (skip leaves already
-            # cache-resident — a warm cache must not touch the disk).
-            # prefetch=False disables scheduling even on an attached
-            # prefetcher: callers use it to measure pure demand reads.
-            if prefetch and cache.prefetcher is not None:
-                nxt_rank = np.minimum(rank + v, max_rank)
-                nxt_rk = nxt_rank[:, None] + np.arange(v)[None, :]
-                nxt_in = (nxt_rk < max_rank) & active[:, None]
-                nxt_leaf = frontier_leaves(fpos + v)
-                nxt = [int(lf) for lf in np.unique(nxt_leaf[nxt_in])
-                       if int(lf) not in cache.slot_of]
-                if nxt:
-                    cache.prefetcher.schedule(nxt)
-
-            # candidate layout mirrors search_impl: [B, V, M] -> [B, V*M]
-            slot_arr = np.zeros_like(leaf)
-            for lf, s in slot_of.items():
-                slot_arr[leaf == lf] = s
-            start = offs[leaf]                         # [B, V]
-            valid = (pos < sizes[leaf][:, :, None]) & in_range[:, :, None]
-            row_idx = np.minimum(start[:, :, None] + pos,
-                                 offs[-1] - 1 if offs[-1] else 0)
-            flat_slot = slot_arr[:, :, None] * m + pos
-
-            flat_slot_j = jnp.asarray(
-                flat_slot.reshape(b, v * m), jnp.int32)
-            row_idx_j = jnp.asarray(row_idx.reshape(b, v * m), jnp.int32)
-            valid_j = jnp.asarray(valid.reshape(b, v * m))
-            if share_gathers:
-                # same-iteration duplicate leaf copies leave the pool
-                # (per-lane visit accounting below still uses ``valid``)
-                dup = pool_dup_mask(leaf, in_range)
-                pool_valid_j = jnp.asarray(
-                    (valid & ~dup[:, :, None]).reshape(b, v * m))
-            if pq and share_gathers:
-                top_d, top_i = _refine_step_pq_shared(
-                    luts, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, pool_valid_j)
-            elif pq:
-                top_d, top_i = _refine_step_pq(
-                    luts, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, valid_j)
-            elif share_gathers:
-                top_d, top_i = _refine_step_shared(
-                    qf, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, pool_valid_j, res.ids,
-                    res.row_norms)
-            else:
-                top_d, top_i = _refine_step(
-                    qf, cache.slots, flat_slot_j, row_idx_j,
-                    top_d, top_i, valid_j, res.ids, res.row_norms)
-
-            leaves_visited += np.where(active, in_range.sum(1), 0)
-            rows_scanned += np.where(active, valid.sum((1, 2)), 0)
-
-            rank_next = np.minimum(rank + v, max_rank)
-            exhausted = rank_next >= max_rank
-            next_lb = np.where(
-                exhausted, np.float32(np.inf),
-                fr_lb[np.arange(b), np.minimum(fpos + v, F - 1)],
-            ).astype(np.float32)
-            bsf = np.asarray(top_d[:, k - 1])          # f32, sync point
-            stop = (next_lb * eps_mult > bsf) \
-                | (bsf <= eps_mult * rd_sq) \
-                | exhausted
-            # refill threshold <- last rank consumed this iteration
-            last = np.minimum(fpos + v - 1, F - 1)
-            thr_lb = np.where(active, fr_lb[np.arange(b), last], thr_lb)
-            thr_id = np.where(active, fr_id[np.arange(b), last], thr_id)
-            fpos = fpos + v
-            active = active & ~stop
-            rank = rank_next
-            iters += 1
+        result, iters, rerank_bytes = _host_refine(
+            src, queries, k, delta=delta, epsilon=epsilon,
+            nprobe=nprobe, visit_batch=v, share_gathers=share_gathers,
+            frontier=frontier, prefetch_depth=depth)
     finally:
         if own_prefetcher is not None:
             own_prefetcher.close()
             if cache.prefetcher is own_prefetcher:
                 cache.prefetcher = None
 
-    rerank_bytes = 0
-    if pq:
-        top_d, top_i, rerank_bytes = _exact_rerank(
-            store, qf, top_d, top_i, k)
-
-    result = SearchResult(
-        dists=jnp.sqrt(top_d),
-        ids=top_i,
-        leaves_visited=jnp.asarray(leaves_visited, jnp.int32),
-        rows_scanned=jnp.asarray(rows_scanned, jnp.int32),
-        lb_computed=jnp.int32(L),
-    )
     stats = dict(cache.stats())
     stats["iterations"] = iters
     stats["codec"] = store.codec
     stats["share_gathers"] = bool(share_gathers)
+    stats["prefetch_depth"] = depth
     stats["dataset_bytes"] = store.dataset_nbytes
     stats["bytes_read_rerank"] = rerank_bytes
     stats["bytes_read"] += rerank_bytes

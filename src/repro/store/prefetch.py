@@ -55,23 +55,31 @@ class LeafPrefetcher:
 
     # ------------------------------------------------------------------
     def schedule(self, leaves: Sequence[int]) -> None:
-        """Stage a predicted next-iteration leaf batch (speculative)."""
+        """Stage a predicted future leaf batch (speculative). Callers
+        with frontier lookahead schedule several batches per iteration
+        (nearest window first — it is read first)."""
         batch = list(dict.fromkeys(int(x) for x in leaves))
         with self._lock:
             # bound the staging area: drop the oldest whole batch(es)
             while len(self._batches_staged) >= self.depth:
-                old = self._batches_staged.popleft()
-                for lf in old:
-                    self._staged.pop(lf, None)
+                self._batches_staged.popleft()
             todo = [lf for lf in batch
                     if lf not in self._staged and lf not in self._inflight]
             self._batches_staged.append(batch)
-            # keep every structure bounded to the live batches: a leaf
-            # no longer in any tracked batch is dropped from the read
-            # queue and (if mid-read) its completion is discarded
+            # keep every structure bounded to the LIVE batches: a leaf
+            # no longer in any tracked batch is dropped from the
+            # staging dict and the read queue and (if mid-read) its
+            # completion is discarded. Membership is tested against
+            # the UNION of live batches, never per dropped batch —
+            # overlapping windows (the frontier-lookahead regime
+            # re-schedules next iteration's window every iteration)
+            # must not have their staged buffers destroyed by an old
+            # batch's eviction, which would force a duplicate read.
             self._wanted = set()
             for bt in self._batches_staged:
                 self._wanted.update(bt)
+            for lf in [s for s in self._staged if s not in self._wanted]:
+                del self._staged[lf]
             self._queue = collections.deque(
                 lf for lf in self._queue if lf in self._wanted)
             self._inflight &= self._wanted

@@ -10,7 +10,8 @@ from repro.data import pipeline, randomwalk, tokens
 from repro.models import model as M
 from repro.models.params import initialize
 from repro.serve.batching import (Request, Scheduler, bucket_of,
-                                  guarantee_for_deadline)
+                                  guarantee_for_deadline,
+                                  retrieval_groups)
 from repro.serve.serve_step import generate
 
 KEY = jax.random.PRNGKey(0)
@@ -84,12 +85,76 @@ def test_scheduler_buckets_and_padding():
 
 
 def test_deadline_maps_to_guarantee():
+    """The full taxonomy ladder: relaxed -> epsilon, moderate ->
+    delta-epsilon (probabilistic), tight -> ng(nprobe) with nprobe
+    shrinking as the budget does."""
     g = guarantee_for_deadline(None)
     assert g.kind in ("epsilon", "exact")
-    tight = guarantee_for_deadline(2.0, full_budget_ms=50.0)
+    assert guarantee_for_deadline(60.0, full_budget_ms=50.0).kind \
+        == g.kind
+    mid = guarantee_for_deadline(40.0, full_budget_ms=50.0)
+    assert mid.kind == "delta-epsilon" and mid.delta < 1.0
+    tight = guarantee_for_deadline(12.0, full_budget_ms=50.0)
     assert tight.kind == "ng" and tight.nprobe >= 1
-    loose = guarantee_for_deadline(40.0, full_budget_ms=50.0)
-    assert loose.kind == "ng" and loose.nprobe > tight.nprobe
+    tighter = guarantee_for_deadline(2.0, full_budget_ms=50.0)
+    assert tighter.kind == "ng" and tighter.nprobe <= tight.nprobe
+
+
+def test_retrieval_groups_mixed_deadlines():
+    """A drained batch with mixed deadlines partitions into one group
+    per mapped guarantee, order-deterministic, every request placed
+    exactly once."""
+    reqs = [Request(uid=u, prompt=np.arange(4, dtype=np.int32),
+                    deadline_ms=dl, series=np.zeros(8, np.float32))
+            for u, dl in enumerate([None, 40.0, 2.0, 60.0, 40.0, 2.0])]
+    groups = retrieval_groups(reqs, full_budget_ms=50.0, epsilon=0.1)
+    kinds = [g.kind for g, _ in groups]
+    assert kinds == ["epsilon", "delta-epsilon", "ng"]
+    placed = sorted(r.uid for _, rs in groups for r in rs)
+    assert placed == list(range(6))
+    by_kind = {g.kind: sorted(r.uid for r in rs) for g, rs in groups}
+    assert by_kind["epsilon"] == [0, 3]
+    assert by_kind["delta-epsilon"] == [1, 4]
+    assert by_kind["ng"] == [2, 5]
+    # identical deadlines must land in the SAME group (hashable
+    # Guarantee), not fragment into duplicates
+    assert len(groups) == 3
+
+
+def test_run_retrieval_mixed_batch_drives_engine_per_group():
+    """Scheduler.run_retrieval: one engine.query per guarantee group,
+    padded to a pow-2 lane bucket, results scattered back per uid."""
+    from repro.core.search import SearchResult
+
+    calls = []
+
+    class FakeEngine:
+        def query(self, q, k, g):
+            calls.append((int(q.shape[0]), g))
+            b = q.shape[0]
+            return SearchResult(
+                dists=jnp.zeros((b, k), jnp.float32),
+                ids=jnp.tile(jnp.arange(k, dtype=jnp.int32), (b, 1)),
+                leaves_visited=jnp.zeros((b,), jnp.int32),
+                rows_scanned=jnp.zeros((b,), jnp.int32),
+                lb_computed=jnp.int32(0),
+            )
+
+    reqs = [Request(uid=u, prompt=np.arange(4, dtype=np.int32),
+                    deadline_ms=dl, series=np.full(8, u, np.float32))
+            for u, dl in enumerate([None, 2.0, 40.0, None, None])]
+    # one request opts out of retrieval entirely
+    reqs.append(Request(uid=9, prompt=np.arange(4, dtype=np.int32)))
+    out = Scheduler().run_retrieval(FakeEngine(), reqs, k=3,
+                                    full_budget_ms=50.0, epsilon=0.1)
+    assert sorted(out) == [0, 1, 2, 3, 4]        # uid 9 skipped
+    assert len(calls) == 3                        # one per group
+    # epsilon group has 3 requests -> padded to 4 lanes
+    sizes = {g.kind: b for b, g in calls}
+    assert sizes["epsilon"] == 4 and sizes["ng"] == 1
+    assert sizes["delta-epsilon"] == 1
+    assert out[1]["kind"] == "ng" and out[2]["kind"] == "delta-epsilon"
+    assert out[0]["ids"].shape == (3,)
 
 
 def test_bucket_of_powers():

@@ -52,6 +52,43 @@ def test_engine_matches_brute_force_across_shards():
     assert "RESULT True True True" in stdout
 
 
+def test_engine_spilled_shards_parity_multishard():
+    """Out-of-core serving over 4 spilled shards is bit-exact vs the
+    resident shard_map path (ids AND dists) across guarantees, and
+    open_spill serves the same answers with no resident index at all."""
+    stdout = run_sub("""
+        import tempfile, numpy as np, jax, jax.numpy as jnp
+        from repro.core.engine import DistributedEngine
+        from repro.core.guarantees import Guarantee
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        data = np.cumsum(rng.normal(size=(2048, 64)), axis=1)
+        data = ((data - data.mean(1, keepdims=True))
+                / (data.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+        Q = jnp.asarray(data[rng.choice(2048, 4)]
+                        + 0.05 * rng.normal(size=(4, 64)).astype(np.float32))
+        ok = True
+        with tempfile.TemporaryDirectory() as tmp:
+            eng = DistributedEngine(mesh, axes=("data",), method="dstree")
+            eng.build(data, leaf_cap=32, spill_dir=tmp, codec="f32")
+            assert len(eng.shard_dirs) == 4
+            for g in (Guarantee(), Guarantee(epsilon=1.0),
+                      Guarantee(delta=0.99, epsilon=0.5),
+                      Guarantee(nprobe=4)):
+                res = eng.query(Q, 5, g)
+                ooc = eng.query(Q, 5, g, ooc=True)
+                ok &= bool((res.ids == ooc.ids).all())
+                ok &= bool((res.dists == ooc.dists).all())
+            opened = DistributedEngine.open_spill(tmp)
+            o = opened.query(Q, 5, Guarantee(epsilon=1.0))
+            r = eng.query(Q, 5, Guarantee(epsilon=1.0))
+            ok &= bool((o.ids == r.ids).all())
+            ok &= bool((o.dists == r.dists).all())
+        print("RESULT", ok)
+    """, timeout=900)
+    assert "RESULT True" in stdout
+
+
 def test_multipod_engine_axes():
     stdout = run_sub("""
         import numpy as np, jax, jax.numpy as jnp

@@ -1,0 +1,377 @@
+"""LeafSource conformance suite + engine out-of-core serving parity.
+
+The refinement core (core/refine.py) is ONE loop body parameterized by
+a LeafSource; this suite holds every implementation — ResidentSource
+(HBM), CachedStoreSource (memmap + device leaf cache, f32/bf16) and
+PQSource (ADC codes + exact re-rank) — to the same contract:
+
+  gather      pool[gather_idx] decodes to the index's rows at row_idx
+              wherever valid; validity matches the leaf extents.
+  score       refine_step folds candidates into the running top-k
+              exactly like the full-sort oracle.
+  finalize    identity for lossless sources; the PQ re-rank reports
+              exact distances for the returned ids.
+
+Plus: the shared frontier emits the stable-argsort visit order through
+tick/advance (the host-loop entry points), and DistributedEngine.query
+over spill-built shards is bit-exact vs the resident engine path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import refine
+from repro.core import search as S
+from repro.core.engine import DistributedEngine
+from repro.core.guarantees import Guarantee
+from repro.core.index import FrozenIndex
+from repro.core.indexes import dstree
+from repro.store import DeviceLeafCache
+from repro.store.ooc import make_source
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def built(walk_data):
+    return dstree.build(walk_data, leaf_cap=32)
+
+
+@pytest.fixture(scope="module")
+def built_bf16(walk_data):
+    return dstree.build(walk_data, leaf_cap=32,
+                        data_dtype=jnp.bfloat16)
+
+
+@pytest.fixture(scope="module")
+def queries_mod(walk_queries):
+    return jnp.asarray(walk_queries)
+
+
+def _store_source(idx, tmp_path_factory, codec):
+    d = idx.save(str(tmp_path_factory.mktemp(f"src_{codec}")),
+                 codec=codec)
+    store = FrozenIndex.load(d, resident="summaries")
+    cache = DeviceLeafCache(store, max(store.num_leaves, 8))
+    return make_source(store, cache)
+
+
+@pytest.fixture(scope="module")
+def sources(built, built_bf16, tmp_path_factory):
+    return {
+        "resident": refine.ResidentSource(built),
+        "store_f32": _store_source(built, tmp_path_factory, "f32"),
+        "store_bf16": _store_source(built_bf16, tmp_path_factory,
+                                    "bf16"),
+        "store_pq": _store_source(built, tmp_path_factory, "pq"),
+    }
+
+
+def _index_of(name, src):
+    return src.index if name == "resident" else src.store.resident
+
+
+def _window(idx, b, v=3):
+    """A deterministic [B, V] leaf window + ok mask with one masked
+    slot and one duplicated leaf (the awkward cases)."""
+    L = idx.num_leaves
+    rng = np.random.default_rng(0)
+    leaf = rng.integers(0, L, size=(b, v)).astype(np.int64)
+    leaf[0, 1] = leaf[0, 0]          # duplicate within a lane
+    if b > 1:
+        leaf[1, 0] = leaf[0, 0]      # duplicate across lanes
+    ok = np.ones((b, v), bool)
+    ok[-1, -1] = False
+    return leaf, ok
+
+
+@pytest.mark.parametrize("name", ["resident", "store_f32",
+                                  "store_bf16", "store_pq"])
+def test_source_protocol_conformance(name, sources, queries_mod):
+    src = sources[name]
+    assert isinstance(src, refine.LeafSource)
+    assert src.pq == (name == "store_pq")
+    k = 5
+    assert src.track_width(k) == (k * src.rerank if src.pq else k)
+    ctx = src.query_ctx(queries_mod)
+    assert ctx.qf.dtype == jnp.float32
+    assert (ctx.luts is None) == (not src.pq)
+    assert (ctx.norms is None) == src.pq
+
+
+@pytest.mark.parametrize("name", ["resident", "store_f32",
+                                  "store_bf16", "store_pq"])
+def test_gather_contract(name, sources, queries_mod):
+    """pool[gather_idx] == the leaf rows at row_idx (in the source's
+    encoding) wherever valid; validity == leaf extents & ok."""
+    src = sources[name]
+    idx = _index_of(name, src)
+    b = queries_mod.shape[0]
+    leaf, ok = _window(idx, b)
+    if name == "resident":
+        g = src.gather(jnp.asarray(leaf, jnp.int32), jnp.asarray(ok))
+    else:
+        g = src.gather(leaf, ok)
+    rows = np.asarray(g.pool)[np.asarray(g.gather_idx)]
+    row_idx = np.asarray(g.row_idx)
+    valid = np.asarray(g.valid)
+    offs = np.asarray(idx.offsets)
+    m = idx.max_leaf
+    # validity: position inside the leaf extent AND slot usable
+    sizes = (offs[leaf + 1] - offs[leaf])          # [B, V]
+    pos = np.arange(m)[None, None, :]
+    want_valid = ((pos < sizes[:, :, None]) & ok[:, :, None]) \
+        .reshape(b, -1)
+    np.testing.assert_array_equal(valid, want_valid)
+    # row positions: the leaf-contiguous extent offsets
+    want_idx = (offs[leaf][:, :, None] + pos).reshape(b, -1)
+    np.testing.assert_array_equal(row_idx[valid], want_idx[valid])
+    # encoded content: what the residency actually holds at those rows
+    # (HBM data array, or the store's encoded payload — codes for pq)
+    want_rows = np.asarray(src.index.data if name == "resident"
+                           else src.store.mmap)
+    np.testing.assert_array_equal(rows[valid],
+                                  want_rows[row_idx[valid]])
+
+
+@pytest.mark.parametrize("name", ["resident", "store_f32",
+                                  "store_bf16"])
+@pytest.mark.parametrize("share", [False, True])
+def test_score_matches_full_sort_oracle(name, share, sources,
+                                        queries_mod):
+    """refine_step (both residencies, both scoring modes) == merge of
+    exhaustively computed f32 distances over the same candidates."""
+    src = sources[name]
+    idx = _index_of(name, src)
+    b = queries_mod.shape[0]
+    k = 5
+    leaf, ok = _window(idx, b)
+    leaf_j, ok_j = jnp.asarray(leaf, jnp.int32), jnp.asarray(ok)
+    g = src.gather(leaf_j if name == "resident" else leaf,
+                   ok_j if name == "resident" else ok)
+    ctx = src.query_ctx(queries_mod)
+    top_d = jnp.full((b, k), jnp.inf)
+    top_i = jnp.full((b, k), -1, jnp.int32)
+    use_valid = refine.coop_mask(leaf_j, ok_j, g.valid) if share \
+        else g.valid
+    got_d, got_i = src.score(ctx, g, use_valid, top_d, top_i,
+                             share=share)
+    # oracle: exhaustive f32 distances + per-lane sort by (d, id)
+    data = np.asarray(idx.data if name == "resident"
+                      else src.store.mmap)
+    ids_h = np.asarray(_index_of(name, src).ids
+                       if name == "resident" else
+                       src.store.resident.ids)
+    row_idx = np.asarray(g.row_idx)
+    valid = np.asarray(use_valid)
+    qf = np.asarray(ctx.qf, np.float32)
+    for lane in range(b):
+        if share:
+            rs = row_idx.reshape(-1)
+            vs = valid.reshape(-1)
+        else:
+            rs = row_idx[lane]
+            vs = valid[lane]
+        cand = data[rs].astype(np.float32)
+        d = ((cand - qf[lane]) ** 2).sum(1)
+        d = np.where(vs, d, np.inf)
+        cid = np.where(vs, ids_h[rs], -1)
+        order = np.lexsort((cid, d))
+        sel_d, sel_i = d[order[:k]], cid[order[:k]]
+        gd = np.asarray(got_d[lane])
+        gi = np.asarray(got_i[lane])
+        finite = np.isfinite(sel_d)
+        np.testing.assert_array_equal(gi[finite], sel_i[finite])
+        # fused |q|^2-2qx+|x|^2 vs the oracle's direct difference form
+        np.testing.assert_allclose(gd[finite], sel_d[finite],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_pq_finalize_reports_exact_distances(sources, queries_mod):
+    """PQSource.finalize re-ranks the pooled positions against raw
+    exact.bin rows: reported distances equal brute-force distances to
+    the returned ids."""
+    src = sources["store_pq"]
+    store = src.store
+    b = queries_mod.shape[0]
+    k = 4
+    ctx = src.query_ctx(queries_mod)
+    # hand it a synthetic pool of real padded positions
+    rng = np.random.default_rng(1)
+    npad = store.mmap.shape[0]
+    ids_h = np.asarray(store.resident.ids)
+    real = np.where(ids_h >= 0)[0]
+    pool = rng.choice(real, size=(b, 3 * k), replace=False)
+    top_i = jnp.asarray(pool, jnp.int32)
+    top_d = jnp.zeros((b, 3 * k), jnp.float32)
+    fd, fi, rbytes = src.finalize(ctx, top_d, top_i, k)
+    assert rbytes > 0
+    exact = np.asarray(store.exact_mmap, np.float32)
+    qf = np.asarray(ctx.qf, np.float32)
+    for lane in range(b):
+        cand = exact[pool[lane]]
+        d = ((cand - qf[lane]) ** 2).sum(1)
+        cid = ids_h[pool[lane]]
+        order = np.lexsort((cid, d))
+        np.testing.assert_array_equal(np.asarray(fi[lane]),
+                                      cid[order[:k]])
+        np.testing.assert_allclose(np.asarray(fd[lane]), d[order[:k]],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_identity_finalize_for_lossless_sources(sources, queries_mod):
+    for name in ("resident", "store_f32", "store_bf16"):
+        src = sources[name]
+        ctx = src.query_ctx(queries_mod)
+        td = jnp.zeros((2, 3))
+        ti = jnp.zeros((2, 3), jnp.int32)
+        fd, fi, extra = src.finalize(ctx, td, ti, 3)
+        assert fd is td and fi is ti and extra == 0
+
+
+def test_frontier_tick_advance_emit_stable_argsort_order():
+    """Driving the shared tick/advance pair (exactly like the host
+    loop) emits every lane's (lb, id)-stable argsort order, for any
+    width/lookahead, including adversarial all-tied lbs."""
+    rng = np.random.default_rng(2)
+    b, L, v = 3, 37, 2
+    lb = rng.choice([0.0, 1.0, 1.0, 2.5, 7.0], size=(b, L)) \
+        .astype(np.float32)
+    lb_sq = jnp.asarray(lb)
+    want = np.argsort(lb, axis=1, kind="stable")
+    for F in (5, 8, 64):
+        F = min(F, L)
+        fr = refine.frontier_init(b, F)
+        active = jnp.ones((b,), bool)
+        got = []
+        for _ in range(0, L + v, v):
+            fr, leaf = refine.frontier_tick(fr, lb_sq, active,
+                                            v=v, lookahead=2 * v)
+            got.append(np.asarray(leaf))
+            fr, _ = refine.frontier_advance(fr, active, v=v)
+        got = np.concatenate(got, axis=1)[:, :L]
+        np.testing.assert_array_equal(got, want, err_msg=f"F={F}")
+
+
+# --------------------------------------- engine over spilled shards
+@pytest.mark.parametrize("codec", ["f32", "bf16", "pq"])
+def test_engine_spilled_shard_serving_parity(codec, walk_data,
+                                             queries_mod, tmp_path):
+    """DistributedEngine.query over spill-built shards vs the resident
+    shard_map path: bit-exact ids AND dists for lossless codecs across
+    the guarantee taxonomy; pq passes the epsilon guarantee check
+    after its exact re-rank."""
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = DistributedEngine(mesh, method="dstree")
+    kw = {"data_dtype": jnp.bfloat16} if codec == "bf16" else {}
+    eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
+              codec=codec, **kw)
+    k = 5
+    guarantees = [Guarantee(epsilon=1.0),
+                  Guarantee(delta=0.99, epsilon=0.5),
+                  Guarantee(nprobe=4)]
+    if codec != "pq":
+        guarantees.insert(0, Guarantee())  # exact (pq warns: lossy)
+    for g in guarantees:
+        res = eng.query(queries_mod, k, g)
+        ooc = eng.query(queries_mod, k, g, ooc=True)
+        if codec == "pq":
+            # lossy payload: held to the guarantee checks post re-rank
+            # (the deterministic epsilon bound where one applies)
+            assert bool(np.isfinite(np.asarray(ooc.dists)).all()), g
+            assert bool((np.asarray(ooc.ids) >= 0).all()), g
+            if g.delta == 1.0 and g.nprobe is None:
+                bf = S.brute_force(queries_mod,
+                                   jnp.asarray(walk_data), k)
+                assert bool((np.asarray(ooc.dists)
+                             <= (1 + g.epsilon)
+                             * np.asarray(bf.dists) * (1 + 1e-4)
+                             + 1e-4).all()), g
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(res.ids), np.asarray(ooc.ids), err_msg=str(g))
+            np.testing.assert_array_equal(
+                np.asarray(res.dists), np.asarray(ooc.dists),
+                err_msg=str(g))
+        assert eng.last_ooc_stats["bytes_read"] > 0
+
+
+def test_engine_open_spill_serves_without_resident(walk_data,
+                                                   queries_mod,
+                                                   tmp_path):
+    """open_spill: an engine with NO resident index (and no mesh)
+    auto-detects and serves the OOC path; per-shard caches stay warm
+    across queries."""
+    mesh = jax.make_mesh((1,), ("data",))
+    built_eng = DistributedEngine(mesh, method="dstree")
+    built_eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
+                    codec="bf16", data_dtype=jnp.bfloat16)
+    ref = built_eng.query(queries_mod, 5, Guarantee(epsilon=1.0))
+
+    eng = DistributedEngine.open_spill(str(tmp_path))
+    assert eng.mesh is None and eng.stacked is None
+    opts = {"cache_leaves": 10_000}  # hold every leaf: pure warm reuse
+    got = eng.query(queries_mod, 5, Guarantee(epsilon=1.0),
+                    ooc_opts=opts)
+    np.testing.assert_array_equal(np.asarray(ref.ids),
+                                  np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(ref.dists),
+                                  np.asarray(got.dists))
+    cold = eng.last_ooc_stats["bytes_read"]
+    got2 = eng.query(queries_mod, 5, Guarantee(epsilon=1.0),
+                     ooc_opts=opts)
+    np.testing.assert_array_equal(np.asarray(got.ids),
+                                  np.asarray(got2.ids))
+    warm = eng.last_ooc_stats["bytes_read"]
+    assert cold > 0 and warm == 0  # caches stay warm across queries
+
+
+def test_engine_ooc_cache_grows_with_batch(walk_data, tmp_path):
+    """The serving front issues variable group sizes: a shard cache
+    sized by the FIRST query's batch must be rebuilt, not crash with
+    'cache thrash', when a larger batch arrives; the prefetcher thread
+    persists with the cache across queries."""
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = DistributedEngine(mesh, method="dstree")
+    eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
+              keep_resident=False)
+    small = jnp.asarray(walk_data[:1])
+    big = jnp.asarray(walk_data[:16] + 0.01)
+    eng.query(small, 5, Guarantee(epsilon=1.0),
+              ooc_opts={"cache_leaves": 1})
+    (d,) = eng.shard_dirs
+    pf_first = eng._shard_caches[d].prefetcher
+    assert pf_first is not None
+    eng.query(small, 5, Guarantee(epsilon=1.0),
+              ooc_opts={"cache_leaves": 1})
+    assert eng._shard_caches[d].prefetcher is pf_first  # persists
+    res = eng.query(big, 5, Guarantee(epsilon=1.0), visit_batch=2,
+                    ooc_opts={"cache_leaves": 1})  # must not thrash
+    bf = S.brute_force(big, jnp.asarray(walk_data), 5)
+    assert bool((np.asarray(res.dists[:, 0])
+                 <= 2.0 * np.asarray(bf.dists[:, 0]) * (1 + 1e-4)
+                 + 1e-4).all())
+    # grown to the batch working set (clamped to the shard's leaves)
+    store = eng._stores[d]
+    assert eng._shard_caches[d].capacity >= min(32, store.num_leaves)
+    assert eng._shard_caches[d].capacity > 1
+    eng.close()
+    assert not eng._shard_caches and pf_first._stop
+
+
+def test_engine_build_keep_resident_false(walk_data, queries_mod,
+                                          tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = DistributedEngine(mesh, method="dstree")
+    eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
+              keep_resident=False)
+    assert eng.stacked is None and eng.shard_dirs
+    bf = S.brute_force(queries_mod, jnp.asarray(walk_data), 5)
+    res = eng.query(queries_mod, 5, Guarantee())  # auto-OOC
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  np.asarray(bf.ids))
+    with pytest.raises(ValueError):
+        DistributedEngine(mesh).build(walk_data, leaf_cap=32,
+                                      keep_resident=False)
