@@ -6,7 +6,6 @@ import time
 from typing import List
 
 import jax
-import numpy as np
 
 from repro.core.indexes import dstree, graph, imi, isax, srs, vafile
 from repro.data import randomwalk

@@ -30,7 +30,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import search as S
 from repro.core.index import FrozenIndex

@@ -1,0 +1,221 @@
+"""Bench-regression gate: diff a fresh snapshot against the committed
+baseline (the CI ``bench-compare`` job).
+
+    PYTHONPATH=src python -m benchmarks.compare                  # run a
+        fresh --snapshot-style collection at the baseline's scale and
+        diff it against the newest BENCH_pr*.json at the repo root
+    PYTHONPATH=src python -m benchmarks.compare --smoke          # small
+        scale (CI default: minutes, not tens of minutes)
+    PYTHONPATH=src python -m benchmarks.compare --fresh f.json   # diff
+        an already-collected snapshot instead of collecting one
+    PYTHONPATH=src python -m benchmarks.compare --write-fresh out.json
+        # also save the fresh snapshot (CI uploads it as an artifact)
+
+Exit status: 0 when every checked metric is within tolerance, 1 on any
+regression, 2 on usage/baseline errors.
+
+Tolerance policy (docs/CI.md): CI machines are noisy and differ from
+the container that wrote the baseline, so ABSOLUTE timings are held
+only to loose order-of-magnitude bounds, while RATIO and STRUCTURAL
+metrics — the ones a code regression actually moves — are held tight:
+
+  ratio metrics    merge/selection speedups vs their retained
+                   full-sort baselines: must keep >= RATIO_KEEP of the
+                   baseline speedup (a fused kernel silently falling
+                   back to the materializing path shows up here).
+  structural       bytes-read, dataset bytes, shard counts, the
+                   pq_fused_memory no-materialization flag: byte-exact
+                   scale-independent invariants -> tight relative tol
+                   (bytes move only when the access pattern changes).
+  timings          us_per_call / queries_per_s / requests_per_s: must
+                   not degrade by more than TIME_FACTOR x.
+
+``--smoke`` collects at the small scale, where absolute values differ
+from the (default-scale) baseline by construction — so scale-dependent
+metrics are SKIPPED and only scale-free ratios + flags are enforced.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+RATIO_KEEP = 0.5     # keep >= 50% of the baseline speedup
+TIME_FACTOR = 3.0    # absolute timings may degrade <= 3x
+BYTES_TOL = 0.05     # structural byte counts move <= 5%
+
+
+def newest_baseline(root: str) -> str:
+    """The committed BENCH_pr<N>.json with the highest N."""
+    paths = glob.glob(os.path.join(root, "BENCH_pr*.json"))
+    if not paths:
+        raise FileNotFoundError(f"no BENCH_pr*.json under {root}")
+
+    def prnum(p):
+        m = re.search(r"BENCH_pr(\d+)\.json$", p)
+        return int(m.group(1)) if m else -1
+
+    return max(paths, key=prnum)
+
+
+def _check(name, ok, detail, failures, lines):
+    mark = "ok  " if ok else "FAIL"
+    lines.append(f"  [{mark}] {name}: {detail}")
+    if not ok:
+        failures.append(name)
+
+
+def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
+    """Diff fresh against base under the tolerance policy. Returns
+    (failures, report_lines)."""
+    failures: list = []
+    lines: list = []
+
+    lines.append(f"baseline={base.get('snapshot')} "
+                 f"scale={base.get('scale')} | fresh scale="
+                 f"{fresh.get('scale')} (same_scale={same_scale})")
+
+    # --- ratio metrics: scale-free, enforced always ---
+    bs = base.get("merge_speedup_vs_full_sort") or {}
+    fs = fresh.get("merge_speedup_vs_full_sort") or {}
+    for key, bval in sorted(bs.items()):
+        fval = fs.get(key)
+        if fval is None:
+            _check(f"speedup/{key}", False, "missing in fresh run",
+                   failures, lines)
+            continue
+        need = RATIO_KEEP * bval
+        _check(f"speedup/{key}", fval >= need,
+               f"{fval:.2f}x vs baseline {bval:.2f}x "
+               f"(floor {need:.2f}x)", failures, lines)
+
+    # --- structural flags: enforced always ---
+    bmem = base.get("pq_fused_memory")
+    fmem = fresh.get("pq_fused_memory")
+    if bmem is not None:
+        if fmem is None:
+            _check("pq_fused_memory", False, "missing in fresh run",
+                   failures, lines)
+        else:
+            _check("pq_fused_memory/materializes_full_matrix",
+                   fmem.get("materializes_full_matrix") is False,
+                   str(fmem.get("materializes_full_matrix")),
+                   failures, lines)
+
+    if not same_scale:
+        lines.append("  (scale differs: scale-dependent metrics "
+                     "skipped)")
+        return failures, lines
+
+    # --- structural bytes: tight, same scale only ---
+    for sec, key in (("query_disk", "bytes_read_cold_solo"),
+                     ("query_disk", "bytes_read_cold_coop"),
+                     ("query_disk", "dataset_bytes"),
+                     ("engine_ooc", "bytes_read_warm"),
+                     ("engine_ooc", "shards")):
+        bval = (base.get(sec) or {}).get(key)
+        fval = (fresh.get(sec) or {}).get(key)
+        if bval is None:
+            continue
+        if fval is None:
+            _check(f"{sec}/{key}", False, "missing in fresh run",
+                   failures, lines)
+            continue
+        hi = bval * (1 + BYTES_TOL)
+        _check(f"{sec}/{key}", fval <= hi,
+               f"{fval} vs baseline {bval} (ceiling {hi:.0f})",
+               failures, lines)
+
+    # --- absolute timings: loose, same scale only ---
+    bk = base.get("kernels_us") or {}
+    fk = fresh.get("kernels_us") or {}
+    for key, bval in sorted(bk.items()):
+        fval = fk.get(key)
+        if fval is None:
+            _check(f"kernels_us/{key}", False, "missing in fresh run",
+                   failures, lines)
+            continue
+        hi = bval * TIME_FACTOR
+        _check(f"kernels_us/{key}", fval <= hi,
+               f"{fval:.1f}us vs baseline {bval:.1f}us "
+               f"(ceiling {hi:.1f}us)", failures, lines)
+    for sec, key in (("query_memory", "queries_per_s"),
+                     ("engine_ooc", "queries_per_s"),
+                     ("serve", "requests_per_s")):
+        bval = (base.get(sec) or {}).get(key)
+        fval = (fresh.get(sec) or {}).get(key)
+        if bval is None:
+            continue
+        if fval is None:
+            _check(f"{sec}/{key}", False, "missing in fresh run",
+                   failures, lines)
+            continue
+        lo = bval / TIME_FACTOR
+        _check(f"{sec}/{key}", fval >= lo,
+               f"{fval:.1f}/s vs baseline {bval:.1f}/s "
+               f"(floor {lo:.1f}/s)", failures, lines)
+    return failures, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=None,
+                    help="baseline snapshot JSON (default: newest "
+                         "BENCH_pr*.json at the repo root)")
+    ap.add_argument("--fresh", default=None,
+                    help="pre-collected fresh snapshot JSON; omit to "
+                         "collect one now")
+    ap.add_argument("--smoke", action="store_true",
+                    help="collect the fresh snapshot at the small "
+                         "scale (scale-dependent metrics skipped)")
+    ap.add_argument("--write-fresh", default=None,
+                    help="also write the fresh snapshot JSON here "
+                         "(CI artifact)")
+    args = ap.parse_args()
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        ".."))
+    try:
+        base_path = args.baseline or newest_baseline(root)
+        with open(base_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"compare: cannot load baseline: {e}", file=sys.stderr)
+        sys.exit(2)
+
+    if args.fresh:
+        try:
+            with open(args.fresh) as f:
+                fresh = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"compare: cannot load fresh snapshot: {e}",
+                  file=sys.stderr)
+            sys.exit(2)
+    else:
+        from . import snapshot
+        scale = "small" if args.smoke else base.get("scale", "default")
+        fresh = snapshot.collect(scale=scale, smoke=args.smoke)
+        fresh["scale"] = scale
+    if args.write_fresh:
+        with open(args.write_fresh, "w") as f:
+            json.dump(fresh, f, indent=1)
+        print(f"# fresh snapshot written to {args.write_fresh}")
+
+    same_scale = fresh.get("scale") == base.get("scale")
+    failures, lines = compare(base, fresh, same_scale=same_scale)
+    print(f"# bench-compare vs {os.path.basename(base_path)}")
+    for ln in lines:
+        print(ln)
+    if failures:
+        print(f"# REGRESSION: {len(failures)} metric(s) out of "
+              f"tolerance: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
+    print("# bench-compare OK")
+
+
+if __name__ == "__main__":
+    main()

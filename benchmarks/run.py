@@ -4,7 +4,7 @@
                                             [--only fig3,fig8,...]
     PYTHONPATH=src python -m benchmarks.run --snapshot           # perf
         trajectory: writes the current snapshot (benchmarks/snapshot.py
-        SNAPSHOT_NAME, e.g. BENCH_pr4.json; override the path with
+        SNAPSHOT_NAME, e.g. BENCH_pr5.json; override the path with
         --out) at the repo root — kernel µs, bytes-read, queries/s and
         the out-of-core serving rows at the default scale
     PYTHONPATH=src python -m benchmarks.run --snapshot --smoke   # the
@@ -47,7 +47,7 @@ def main() -> None:
                     help="figure suites: JSON output dir (default "
                          "experiments/bench). --snapshot: the snapshot "
                          "file path (default: snapshot.SNAPSHOT_NAME "
-                         "at the repo root, e.g. --out BENCH_pr4.json)")
+                         "at the repo root, e.g. --out BENCH_pr5.json)")
     ap.add_argument("--snapshot", action="store_true",
                     help="write the perf-trajectory snapshot "
                          "(snapshot.SNAPSHOT_NAME or --out) at the "

@@ -3,14 +3,18 @@
 ``python -m benchmarks.run --snapshot`` writes ``SNAPSHOT_NAME``
 (override with ``--out``) with the currencies of the serving hot path
 at the default bench scale — kernel µs (selection merges vs their
-full-sort baselines), on-disk bytes-read, in-memory queries/s, and
-since PR 4 the out-of-core serving rows: engine queries/s over
-spill-built shards and the Scheduler-driven deadline-mixed retrieval
-front — so later PRs can diff the perf trajectory without rerunning
-whole suites. ``--smoke`` compiles and runs every path once at the
-small scale without writing the file (the scripts/verify.sh
-regression gate: a snapshot that stops compiling fails verify before
-it rots).
+full-sort baselines, and since PR 5 the fused pq_adc_select vs its
+materializing oracle plus the [B, R]-never-materialized memory
+check), on-disk bytes-read, in-memory queries/s, and since PR 4 the
+out-of-core serving rows: engine queries/s over spill-built shards
+and the Scheduler-driven deadline-mixed retrieval front — so later
+PRs can diff the perf trajectory without rerunning whole suites.
+``--smoke`` compiles and runs every path once at the small scale
+without writing the file (the scripts/verify.sh regression gate: a
+snapshot that stops compiling fails verify before it rots).
+``benchmarks/compare.py`` diffs a fresh snapshot against the
+committed baseline with per-metric tolerances (the CI bench-compare
+job).
 """
 
 from __future__ import annotations
@@ -36,7 +40,7 @@ from repro.store import DeviceLeafCache
 from . import bench_kernels
 from .common import dataset, timeit
 
-SNAPSHOT_NAME = "BENCH_pr4.json"
+SNAPSHOT_NAME = "BENCH_pr5.json"
 
 
 def _repo_root_path(name: str = None) -> str:
@@ -57,6 +61,11 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
                   for r in krows if "us_per_call" in r}
     speedups = {r["kernel"]: round(r["speedup_vs_full_sort"], 2)
                 for r in krows if "speedup_vs_full_sort" in r}
+    pq_mem = next(
+        ({k: v for k, v in r.items()
+          if k not in ("bench", "kernel")}
+         for r in krows if r.get("kernel") == "pq_adc_select_memory"),
+        None)
 
     # --- in-memory queries/s (the paper's best tree, eps=1) ---
     idx = dstree.build(data, leaf_cap=256)
@@ -128,6 +137,7 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         "backend": jax.default_backend(),
         "kernels_us": kernels_us,
         "merge_speedup_vs_full_sort": speedups,
+        "pq_fused_memory": pq_mem,
         "query_memory": {
             "method": "dstree", "epsilon": 1.0, "delta": 0.99,
             "queries_per_s": round(qps, 1),

@@ -14,7 +14,6 @@ guarantees transfer (DESIGN.md §5.3).
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
 from repro.core import search as S  # noqa: E402
 from repro.core.engine import DistributedEngine  # noqa: E402

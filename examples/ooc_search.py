@@ -35,8 +35,8 @@ print(f"   {idx.num_leaves} leaves, raw payload "
 
 with tempfile.TemporaryDirectory() as tmp:
     store_dir = os.path.join(tmp, "dstree_store")
-    print(f"2. save: FrozenIndex.save -> leaf-contiguous data.bin + "
-          f"sidecar")
+    print("2. save: FrozenIndex.save -> leaf-contiguous data.bin + "
+          "sidecar")
     idx.save(store_dir)
     for f in sorted(os.listdir(store_dir)):
         sz = os.path.getsize(os.path.join(store_dir, f))
@@ -44,7 +44,7 @@ with tempfile.TemporaryDirectory() as tmp:
 
     print("3. load resident='summaries': raw data STAYS on disk")
     store = FrozenIndex.load(store_dir, resident="summaries")
-    print(f"   device-resident placeholder rows: "
+    print("   device-resident placeholder rows: "
           f"{store.resident.data.shape[0]} (filter state only)")
 
     cap = max(store.num_leaves // 4, 16)
@@ -85,7 +85,7 @@ with tempfile.TemporaryDirectory() as tmp:
         print(f"   depth={depth}: "
               f"prefetch_staged={s['prefetch_hits']}/{s['misses']}  "
               f"disk={s['bytes_read'] / 1e6:6.2f} MB (speculation "
-              f"past a lane's stop is bounded by depth windows)")
+              "past a lane's stop is bounded by depth windows)")
 
     print("6. leaf codecs (store format v2) x cooperative scoring: "
           "the two bytes-read levers")

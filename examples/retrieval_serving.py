@@ -108,6 +108,6 @@ with tempfile.TemporaryDirectory() as tmp:
     mb = engine.last_ooc_stats["bytes_read"] / 1e6
     print(f"\nserved {len(results)} requests out-of-core (last batch "
           f"read {mb:.2f} MB from disk) — tight deadlines degraded "
-          f"through delta-epsilon to ng(nprobe) retrieval instead of "
-          f"dropping (paper Fig. 8: the first bsf is already "
-          f"near-exact).")
+          "through delta-epsilon to ng(nprobe) retrieval instead of "
+          "dropping (paper Fig. 8: the first bsf is already "
+          "near-exact).")

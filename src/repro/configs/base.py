@@ -140,7 +140,6 @@ class ModelConfig:
             nonlocal total
             if not is_spec(leaf):
                 return
-            names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
             if "experts" in str(leaf.logical):
                 total += int(leaf.size * active_frac)
             else:

@@ -24,9 +24,9 @@ Fig. 8 shows the first bsf is already near-exact).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import os
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -234,6 +234,18 @@ class DistributedEngine:
         if ooc is None:
             ooc = self.stacked is None and self.shard_dirs is not None
         if ooc:
+            if sync_bsf:
+                # the sequential per-shard host loops do not exchange
+                # a running best-so-far yet (each shard prunes against
+                # its own) — seeding shard i+1's pool from the fold of
+                # shards 0..i is the ROADMAP follow-up; until then the
+                # flag must not be silently swallowed
+                warnings.warn(
+                    "sync_bsf is not supported on the out-of-core "
+                    "path: shards are searched without cross-shard "
+                    "best-so-far exchange (results are identical, "
+                    "bytes-read/leaves-visited are not tightened).",
+                    UserWarning, stacklevel=2)
             return self._query_ooc(queries, k, g, visit_batch,
                                    dict(ooc_opts or {}))
         assert self.stacked is not None, "build() first"

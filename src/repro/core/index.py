@@ -16,7 +16,7 @@ shard), and checkpoints like any other model state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
 
 from ..histogram import DistanceHistogram, build_histogram
 from ..index import FrozenIndex, freeze_from_leaves

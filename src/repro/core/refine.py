@@ -261,13 +261,16 @@ def refine_step(ctx: ScoreCtx, pool: jax.Array, gather_idx: jax.Array,
       solo pq     ADC against each lane's LUT (one-hot MXU trick),
                   merge padded row POSITIONS (exact re-rank maps them
                   to ids).
-      coop pq     ONE [B, m*K] x [m*K, rows] matmul scores every code
-                  row against all lanes; (d, id)-lex selection + dedup
-                  merge (ops.topk_merge_unique's fast 1-D path).
+      coop pq     fused ADC score+select per lane
+                  (ops.pq_adc_select — on TPU the codes stream
+                  through the one-hot MXU contraction tile by tile
+                  and the [B, B*V*M] ADC distance matrix never
+                  reaches HBM), dedup merge.
 
     For share=True the caller passes the coop_mask'ed validity (the
     distinct-id precondition); candidates are ids for raw codecs and
-    padded row positions for pq."""
+    padded row positions for pq — masked slots are -1 in both, which
+    is the fused kernels' masking convention."""
     k = top_d.shape[1]
     if pq:
         cand = jnp.where(valid, row_idx, -1)
@@ -278,9 +281,10 @@ def refine_step(ctx: ScoreCtx, pool: jax.Array, gather_idx: jax.Array,
         rows = pool[flat]                          # [B*V*M, cols]
         candf = cand.reshape(-1)                   # lane-invariant
         if pq:
-            d = ops.pq_adc_batch(rows, ctx.luts)   # [B, B*V*M]
-            d = jnp.where(valid.reshape(-1)[None, :], d, INF)
-            return ops.topk_merge_unique(d, candf, top_d, top_i)
+            sel_d, sel_i = ops.pq_adc_select(
+                rows, ctx.luts, candf, min(2 * k, candf.shape[0]),
+                force_pallas=force_pallas)
+            return ops.dedup_merge_topk(sel_d, sel_i, top_d, top_i)
         sel_d, sel_i = ops.coop_score_select(
             ctx.qf, rows, ctx.norms[row_idx.reshape(-1)], candf,
             min(2 * k, candf.shape[0]), force_pallas=force_pallas)

@@ -56,12 +56,7 @@ from .guarantees import Guarantee
 from .histogram import r_delta
 from .index import FrozenIndex
 
-# re-exported: the shared refinement-core primitives historically lived
-# here (store/ooc.py and tests import some through this module)
-INF = refine.INF
 default_frontier = refine.default_frontier
-frontier_select = refine.frontier_select
-dup_leaf_mask = refine.dup_leaf_mask
 
 
 class SearchResult(NamedTuple):
@@ -144,7 +139,7 @@ def search_impl(
 
     init = State(
         rank=jnp.zeros((b,), jnp.int32),
-        top_d=jnp.full((b, k), INF),
+        top_d=jnp.full((b, k), refine.INF),
         top_i=jnp.full((b, k), -1, jnp.int32),
         active=jnp.ones((b,), bool),
         leaves=jnp.zeros((b,), jnp.int32),

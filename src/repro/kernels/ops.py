@@ -8,8 +8,7 @@ calls these ops exclusively, so the TPU/CPU split lives in one place.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +18,7 @@ from .box_mindist import box_mindist_pallas
 from .l2_dist import l2_pallas
 from .paa import paa_pallas
 from .pq_adc import pq_adc_pallas
+from .pq_adc_select import pq_adc_select_pallas
 from .topk import coop_score_select_pallas
 
 
@@ -335,6 +335,43 @@ def topk_merge_unique(dists, ids, top_d, top_i):
     return dedup_merge_topk(sel_d, sel_i, top_d, top_i)
 
 
+def pq_adc_select(
+    codes: jax.Array,  # [R, m] pooled code rows (shared across lanes)
+    luts: jax.Array,   # [B, m, K] f32 per-lane ADC tables
+    ids: jax.Array,    # [R] int32, -1 = masked slot
+    kk: int,
+    *,
+    force_pallas: bool = False,
+    tile_b: int = 128,
+    tile_r: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused cooperative PQ-ADC score+select: per lane, the kk best
+    (d, id) candidates from the pooled code rows, without
+    materializing the [B, R] ADC distance matrix in HBM on TPU
+    (kernels/pq_adc_select.py streams the uint8 codes through the
+    one-hot MXU contraction tile by tile and keeps the running
+    selection in VMEM). CPU path is the jnp oracle formulation
+    (ref_pq_adc_batch + the shared-pool partial selection) — bit-exact
+    to the pre-fusion pq_adc_batch + topk_merge_unique corner. Output
+    feeds dedup_merge_topk."""
+    # kk > R would diverge across backends (the padded Pallas path
+    # emits placeholder columns, the oracle's top_k raises) — callers
+    # clamp (min(2k, R)); make the contract explicit at trace time
+    assert kk <= codes.shape[0], (kk, codes.shape)
+    if force_pallas or on_tpu():
+        b = luts.shape[0]
+        lp = _pad_rows(luts, tile_b)
+        cp = _pad_rows(codes.astype(jnp.int32), tile_r)
+        ip = _pad_rows(ids.astype(jnp.int32)[:, None], tile_r, value=-1)
+        od, oi = pq_adc_select_pallas(
+            cp, lp, ip, kk, tile_b=tile_b, tile_r=tile_r,
+            interpret=not on_tpu())
+        return od[:b], oi[:b]
+    d = ref.ref_pq_adc_batch(codes, luts)
+    d = jnp.where(ids[None, :] < 0, jnp.float32(jnp.inf), d)
+    return _select_k_by_d_id_shared(d, ids, kk)
+
+
 def coop_score_select(
     q: jax.Array,          # [B, n] f32 queries
     rows: jax.Array,       # [R, n] pooled rows (index/payload dtype)
@@ -351,6 +388,9 @@ def coop_score_select(
     distance matrix in HBM on TPU (kernels/topk.py tiles R and keeps
     the running selection in VMEM). CPU path is the jnp oracle
     (sq_l2 + partial selection). Output feeds dedup_merge_topk."""
+    # same kk <= R contract as pq_adc_select (backend divergence
+    # otherwise); all call sites clamp kk = min(2k, R)
+    assert kk <= rows.shape[0], (kk, rows.shape)
     if force_pallas or on_tpu():
         b = q.shape[0]
         qp = _pad_rows(q, tile_b)

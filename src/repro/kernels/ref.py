@@ -92,6 +92,31 @@ def ref_pq_adc_batch(codes: jax.Array, luts: jax.Array) -> jax.Array:
     return g[..., 0].sum(-1)
 
 
+def ref_pq_adc_select(
+    codes: jax.Array,  # [R, m] pooled code rows (shared across lanes)
+    luts: jax.Array,   # [B, m, K] per-lane ADC tables
+    ids: jax.Array,    # [R] int32 candidate ids, -1 = masked slot
+    kk: int,
+) -> tuple:
+    """Oracle for the fused PQ-ADC score+select kernel — the
+    FULL-MATERIALIZATION formulation: ADC-score every pooled code row
+    against every lane's table into a [B, R] matrix (masked slots at
+    +inf), then return per lane the ``kk`` lexicographically-smallest
+    (d, id) pairs sorted by (d, id) — the candidate half of
+    ``ops.topk_merge_unique``'s selection stage, exactly what the
+    pre-fusion cooperative pq path computed. Precondition (call-site
+    invariant): real ids are distinct within the pool; only the -1
+    placeholder repeats.
+    """
+    d = ref_pq_adc_batch(codes, luts)                      # [B, R]
+    d = jnp.where(ids[None, :] < 0, jnp.float32(jnp.inf), d)
+    b = luts.shape[0]
+    idm = jnp.broadcast_to(ids.astype(jnp.int32)[None, :],
+                           (b, ids.shape[0]))
+    sd, si = jax.lax.sort((d, idm), num_keys=2)
+    return sd[:, :kk], si[:, :kk]
+
+
 def ref_topk_merge(
     dists: jax.Array,  # [B, M] candidate distances
     ids: jax.Array,    # [B, M] candidate ids

@@ -29,6 +29,28 @@ from jax.experimental import pallas as pl
 _I32_MAX = 2**31 - 1
 
 
+def lex_min_select(cur_d: jax.Array, cur_i: jax.Array, kk: int) -> tuple:
+    """kk rounds of lexicographic (d, id) min-extraction over a
+    [TB, W] candidate block — the in-VMEM selection stage shared by
+    every fused score+select kernel (this module's raw-L2 kernel and
+    kernels/pq_adc_select.py's ADC kernel). VPU reductions +
+    where-masks only: no sort network, no gathers. Extracted slots are
+    remasked to the (inf, -1) placeholder, so exhausted blocks emit
+    exactly the placeholder the jnp oracles emit."""
+    out_d, out_i = [], []
+    for _ in range(kk):
+        bd = jnp.min(cur_d, axis=1, keepdims=True)        # [TB, 1]
+        tie = jnp.where(cur_d == bd, cur_i, jnp.int32(_I32_MAX))
+        bi = jnp.min(tie, axis=1, keepdims=True)          # [TB, 1]
+        out_d.append(bd)
+        out_i.append(bi)
+        hit = (cur_d == bd) & (cur_i == bi)
+        cur_d = jnp.where(hit, jnp.inf, cur_d)
+        cur_i = jnp.where(hit, -1, cur_i)
+    return (jnp.concatenate(out_d, axis=1),
+            jnp.concatenate(out_i, axis=1))
+
+
 def _coop_topk_kernel(q_ref, rows_ref, rn_ref, ids_ref, outd_ref,
                       outi_ref, *, kk: int):
     rstep = pl.program_id(1)
@@ -55,18 +77,7 @@ def _coop_topk_kernel(q_ref, rows_ref, rn_ref, ids_ref, outd_ref,
     # running selection ++ tile, then kk lex-min extractions
     cur_d = jnp.concatenate([outd_ref[...], d], axis=1)
     cur_i = jnp.concatenate([outi_ref[...], idm], axis=1)
-    out_d, out_i = [], []
-    for _ in range(kk):
-        bd = jnp.min(cur_d, axis=1, keepdims=True)        # [TB, 1]
-        tie = jnp.where(cur_d == bd, cur_i, jnp.int32(_I32_MAX))
-        bi = jnp.min(tie, axis=1, keepdims=True)          # [TB, 1]
-        out_d.append(bd)
-        out_i.append(bi)
-        hit = (cur_d == bd) & (cur_i == bi)
-        cur_d = jnp.where(hit, jnp.inf, cur_d)
-        cur_i = jnp.where(hit, -1, cur_i)
-    outd_ref[...] = jnp.concatenate(out_d, axis=1)
-    outi_ref[...] = jnp.concatenate(out_i, axis=1)
+    outd_ref[...], outi_ref[...] = lex_min_select(cur_d, cur_i, kk)
 
 
 @functools.partial(jax.jit,

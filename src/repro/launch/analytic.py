@@ -20,7 +20,6 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs.base import LayerDesc, ModelConfig, ShapeSpec

@@ -9,7 +9,7 @@ and why the roofline separates its bytes.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

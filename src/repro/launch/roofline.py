@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 # --- target hardware constants (TPU v5e-class, per chip) ---
 PEAK_FLOPS = 197e12   # bf16

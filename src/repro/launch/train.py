@@ -8,13 +8,10 @@ train_step (jit, sharded) -> Supervisor (checkpoint/restart/stragglers).
 
 from __future__ import annotations
 
-import dataclasses
 import os
-import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.data import tokens as tokens_mod

@@ -9,7 +9,7 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig, ShapeSpec
 from . import encdec as encdec_mod
 from . import transformer as tfm
 from .layers import (cross_entropy, embed_apply, embed_specs, logits_apply,
-                     rmsnorm_apply, rmsnorm_specs, softcap)
+                     rmsnorm_apply, rmsnorm_specs)
 from .params import ParamSpec
 
 

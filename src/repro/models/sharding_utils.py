@@ -13,7 +13,7 @@ no-ops when there is none, so the same model code runs in smoke tests
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Set, Tuple
+from typing import Optional, Set, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -271,7 +271,6 @@ def ssm_cache_shape(cfg: SSMConfig, batch: int):
 
 def _conv_step(state, xnew, kernel):
     """state [B,W-1,C], xnew [B,C] -> (new_state, y [B,C])."""
-    w = kernel.shape[0]
     full = jnp.concatenate([state, xnew[:, None, :]], axis=1)  # [B,W,C]
     y = jnp.einsum("bwc,wc->bc", full, kernel)
     return full[:, 1:, :], y

@@ -15,7 +15,6 @@ structurally identical, so stacking is well-formed for every architecture
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -27,7 +26,7 @@ from . import attention as attn_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
 from .layers import mlp_apply, mlp_specs, rmsnorm_apply, rmsnorm_specs
-from .params import ParamSpec, is_spec, tree_map_specs
+from .params import ParamSpec, tree_map_specs
 from .sharding_utils import constrain
 
 

@@ -9,7 +9,6 @@ allocated up front and prefill writes the prefix.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -17,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
-from repro.models.params import initialize
 
 
 def build_decode_step(cfg: ModelConfig, *, sample: str = "greedy",

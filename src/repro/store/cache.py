@@ -98,8 +98,8 @@ class DeviceLeafCache:
             return s
         raise RuntimeError(
             f"cache thrash: all {self.capacity} slots pinned by one "
-            f"iteration; raise capacity_leaves above the per-iteration "
-            f"working set")
+            "iteration; raise capacity_leaves above the per-iteration "
+            "working set")
 
     def get_slots(self, leaves: Sequence[int]) -> np.ndarray:
         """Make every leaf resident; returns their slot numbers.

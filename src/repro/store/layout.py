@@ -284,7 +284,7 @@ def load_index(
         warnings.warn(
             f"store format {ver} at {directory!r} is deprecated "
             f"(current: {FORMAT_VERSION}); re-save with save_index to "
-            f"upgrade", StoreFormatDeprecationWarning, stacklevel=2)
+            "upgrade", StoreFormatDeprecationWarning, stacklevel=2)
     codec = meta.get("codec", "f32")
     side = np.load(os.path.join(directory, SIDECAR_NAME))
     dtype = jnp.dtype(meta["data_dtype"])
@@ -351,7 +351,7 @@ def load_index(
             **statics,
         )
     if resident != "summaries":
-        raise ValueError(f"resident must be 'full' or 'summaries', "
+        raise ValueError("resident must be 'full' or 'summaries', "
                          f"got {resident!r}")
     placeholder = jnp.zeros((0, meta["series_len"]), dtype)
     res = FrozenIndex(

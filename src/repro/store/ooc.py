@@ -42,8 +42,10 @@ iteration performs I/O. The host loop:
 
 Cooperative scoring (``share_gathers=True``) is search_impl's
 cooperative branch verbatim — the same refine_step corner with the
-cache slot pool as the gather pool (for pq this is ONE [B, m*K] x
-[m*K, rows] matmul per iteration).
+cache slot pool as the gather pool (for pq: the fused
+ops.pq_adc_select kernel, which on TPU streams the uint8 codes
+through the one-hot MXU contraction tile by tile so the [B, B*V*M]
+ADC matrix never reaches HBM — docs/PERF.md §4).
 """
 
 from __future__ import annotations
@@ -250,10 +252,15 @@ def _host_refine(
 
     # frontier width F covers this iteration's visits, the next_lb
     # probe AND the prefetch lookahead (depth extra windows); ANY
-    # width emits the same visit order (core/refine.py)
+    # width emits the same visit order (core/refine.py). F must
+    # exceed the lookahead by at least one window — at F == lookahead
+    # the refill condition (pos > F-1-lookahead) holds every
+    # iteration and the amortized refill degenerates to one full
+    # frontier_select per step
     la_want = (1 + depth) * v
-    F = min(max(default_frontier(L, v), la_want), L) if frontier is None \
-        else min(max(int(frontier), min(la_want, L)), L)
+    F = min(max(default_frontier(L, v), la_want + v), L) \
+        if frontier is None \
+        else min(max(int(frontier), min(la_want + v, L)), L)
     lookahead = min(la_want, F)
     fr = refine.frontier_init(b, F)
 

@@ -14,7 +14,7 @@ convergence impact on CPU).
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

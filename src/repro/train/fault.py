@@ -16,8 +16,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import numpy as np
 
 from .checkpoint import Checkpointer
 

@@ -11,8 +11,7 @@ also the straggler-tolerant step shape (uniform microbatch work).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,15 +1,21 @@
 """Multi-device tests (subprocess with forced host device count — the
 main test process must keep seeing 1 device, per the dry-run contract).
 Covers: distributed engine correctness, multi-pod-shaped lower+compile
-for a reduced arch, roofline collective accounting, compressed psum."""
+for a reduced arch, roofline collective accounting, compressed psum.
 
-import json
+Every test here spawns an 8-device subprocess (minutes each), so the
+whole module is slow-marked: excluded from the tier1/verify-fast
+subset, run by verify-full (the merge gate) and re-run by the nightly
+CI job (docs/CI.md)."""
+
 import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

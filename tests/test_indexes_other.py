@@ -1,7 +1,6 @@
 """IMI / graph (HNSW-style) / SRS behavior tests."""
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import search as S

@@ -4,7 +4,6 @@ experts, identity-expert sanity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import moe
 from repro.models.params import initialize

@@ -44,7 +44,7 @@ def test_ring_cache_matches_full_cache_decode():
     b, steps = 2, 14
 
     def roll(cfg):
-        from repro.models.params import abstract, initialize as init_p
+        from repro.models.params import initialize as init_p
 
         cache = init_p(M.decode_cache_specs(cfg, b, steps), KEY)
         cache = jax.tree_util.tree_map(jnp.zeros_like, cache)

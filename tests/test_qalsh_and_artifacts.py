@@ -3,7 +3,6 @@ bf16 data variant)."""
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -189,6 +189,110 @@ def test_score_matches_full_sort_oracle(name, share, sources,
                                    rtol=1e-4, atol=1e-4)
 
 
+def test_coop_pq_score_matches_pre_fusion_step(sources, queries_mod):
+    """refine_step's cooperative pq corner (now the fused
+    ops.pq_adc_select selection + dedup merge) must stay bit-exact to
+    the pre-fusion formulation — the full [B, R] pq_adc_batch matrix
+    folded through topk_merge_unique — at the real PQSource call
+    site, ids AND distances, placeholders included."""
+    src = sources["store_pq"]
+    store_res = src.store.resident
+    b = queries_mod.shape[0]
+    k = src.track_width(4)
+    leaf, ok = _window(store_res, b)
+    g = src.gather(leaf, ok)
+    ctx = src.query_ctx(queries_mod)
+    top_d = jnp.full((b, k), jnp.inf)
+    top_i = jnp.full((b, k), -1, jnp.int32)
+    use_valid = refine.coop_mask(jnp.asarray(leaf, jnp.int32),
+                                 jnp.asarray(ok), g.valid)
+    got_d, got_i = src.score(ctx, g, use_valid, top_d, top_i,
+                             share=True)
+    from repro.kernels import ops
+    rows = g.pool[g.gather_idx.reshape(-1)]
+    cand = jnp.where(use_valid, g.row_idx, -1).reshape(-1)
+    d = ops.pq_adc_batch(rows, ctx.luts)
+    d = jnp.where(use_valid.reshape(-1)[None, :], d, jnp.inf)
+    want_d, want_i = ops.topk_merge_unique(d, cand, top_d, top_i)
+    np.testing.assert_array_equal(np.asarray(got_i),
+                                  np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d),
+                                  np.asarray(want_d))
+
+
+def test_coop_pq_score_matches_adc_numpy_oracle(sources, queries_mod):
+    """Semantic ground truth for the fused corner: per-lane ADC
+    distances computed by plain numpy LUT gather-sum over the gathered
+    codes, (d, position)-lex sorted — the selected ids must agree
+    exactly and the distances to float tolerance."""
+    src = sources["store_pq"]
+    store_res = src.store.resident
+    b = queries_mod.shape[0]
+    k = src.track_width(4)
+    leaf, ok = _window(store_res, b)
+    g = src.gather(leaf, ok)
+    ctx = src.query_ctx(queries_mod)
+    top_d = jnp.full((b, k), jnp.inf)
+    top_i = jnp.full((b, k), -1, jnp.int32)
+    use_valid = refine.coop_mask(jnp.asarray(leaf, jnp.int32),
+                                 jnp.asarray(ok), g.valid)
+    got_d, got_i = src.score(ctx, g, use_valid, top_d, top_i,
+                             share=True)
+    codes = np.asarray(g.pool)[np.asarray(g.gather_idx).reshape(-1)]
+    luts = np.asarray(ctx.luts)                      # [B, m, K]
+    valid = np.asarray(use_valid).reshape(-1)
+    pos = np.where(valid, np.asarray(g.row_idx).reshape(-1), -1)
+    for lane in range(b):
+        d = luts[lane][np.arange(codes.shape[1])[None, :],
+                       codes].sum(1)
+        d = np.where(valid, d, np.inf)
+        order = np.lexsort((pos, d))
+        finite = np.isfinite(d[order[:k]])
+        np.testing.assert_array_equal(
+            np.asarray(got_i[lane])[finite], pos[order[:k]][finite])
+        np.testing.assert_allclose(
+            np.asarray(got_d[lane])[finite], d[order[:k]][finite],
+            rtol=1e-4, atol=1e-4)
+
+
+def test_coop_pq_refine_step_never_materializes_full_matrix():
+    """ISSUE 5 acceptance: with the fused kernel forced (interpret on
+    CPU — the same lowering path CI exercises), the jitted coop-pq
+    refine_step must not hold the [B, R] = [B, B*V*M] ADC distance
+    matrix in any on-chip buffer: no f32[B, R] (nor a padded-lane
+    variant) appears in the optimized HLO. The full-materialization
+    oracle lowered over identical operands DOES contain it, so the
+    assertion has teeth."""
+    import functools
+
+    from repro.kernels import ref as kref
+    b, vm, m, K = 8, 96, 8, 16
+    r = b * vm                                       # 768: distinctive
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.integers(0, K, size=(1024, m)), jnp.int32)
+    gi = jnp.asarray(rng.integers(0, 1024, size=(b, vm)), jnp.int32)
+    valid = jnp.asarray(np.ones((b, vm), bool))
+    ctx = refine.ScoreCtx(
+        qf=jnp.zeros((b, 4), jnp.float32), ids=jnp.arange(1024),
+        norms=None,
+        luts=jnp.asarray(rng.uniform(size=(b, m, K)), jnp.float32))
+    top_d = jnp.full((b, 8), jnp.inf)
+    top_i = jnp.full((b, 8), -1, jnp.int32)
+    fused = jax.jit(functools.partial(refine.refine_step, share=True,
+                                      pq=True, force_pallas=True))
+    txt = fused.lower(ctx, pool, gi, gi, valid, top_d,
+                      top_i).compile().as_text()
+    padded_b = -(-b // 128) * 128  # ops pads lanes to the lane tile
+    assert f"f32[{b},{r}]" not in txt
+    assert f"f32[{padded_b},{r}]" not in txt
+
+    cand = jnp.arange(r, dtype=jnp.int32)
+    mat_txt = jax.jit(lambda c, l, i: kref.ref_pq_adc_select(
+        c, l, i, 16)).lower(pool[gi.reshape(-1)], ctx.luts,
+                            cand).compile().as_text()
+    assert f"f32[{b},{r}]" in mat_txt
+
+
 def test_pq_finalize_reports_exact_distances(sources, queries_mod):
     """PQSource.finalize re-ranks the pooled positions against raw
     exact.bin rows: reported distances equal brute-force distances to
@@ -200,7 +304,6 @@ def test_pq_finalize_reports_exact_distances(sources, queries_mod):
     ctx = src.query_ctx(queries_mod)
     # hand it a synthetic pool of real padded positions
     rng = np.random.default_rng(1)
-    npad = store.mmap.shape[0]
     ids_h = np.asarray(store.resident.ids)
     real = np.where(ids_h >= 0)[0]
     pool = rng.choice(real, size=(b, 3 * k), replace=False)

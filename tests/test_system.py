@@ -4,11 +4,9 @@ taxonomy -> evaluate with the paper's measures -> reproduce headline
 findings at reduced scale."""
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import search as S
-from repro.core.guarantees import Guarantee
 from repro.core.histogram import build_histogram, f_of, r_delta
 from repro.core.indexes import dstree, isax
 from repro.core.metrics import workload_metrics

@@ -227,6 +227,105 @@ def test_coop_score_select_pallas_pads_to_tiles():
                                atol=1e-3)
 
 
+# ---------------------------------------- fused PQ-ADC score+select
+
+
+def _pq_pool(b, r, m=8, K=16, masked_frac=0.25):
+    codes = jnp.asarray(RNG.integers(0, K, size=(r, m)), jnp.int32)
+    luts = jnp.asarray(RNG.uniform(size=(b, m, K)), jnp.float32)
+    ids = jnp.asarray(
+        np.where(RNG.uniform(size=r) < masked_frac, -1, np.arange(r)),
+        jnp.int32)
+    return codes, luts, ids
+
+
+@pytest.mark.parametrize("b,r,kk", [(1, 32, 3), (5, 96, 9),
+                                    (8, 256, 20)])
+def test_pq_adc_select_jnp_matches_oracle(b, r, kk):
+    codes, luts, ids = _pq_pool(b, r)
+    od, oi = ref.ref_pq_adc_select(codes, luts, ids, kk)
+    jd, ji = ops.pq_adc_select(codes, luts, ids, kk)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(ji))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(jd),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,r,m,K,kk", [(5, 96, 8, 16, 9),
+                                        (8, 128, 16, 32, 12)])
+def test_pq_adc_select_pallas_matches_oracle(b, r, m, K, kk):
+    """Interpret-mode validation of the fused PQ kernel
+    (kernels/pq_adc_select.py): codes stream through the one-hot MXU
+    contraction tile by tile, the [B, R] ADC matrix never leaves VMEM
+    on TPU, yet the selected (d, id) pairs match the
+    full-materialization jnp oracle."""
+    codes, luts, ids = _pq_pool(b, r, m=m, K=K)
+    od, oi = ref.ref_pq_adc_select(codes, luts, ids, kk)
+    pd, pi = ops.pq_adc_select(codes, luts, ids, kk,
+                               force_pallas=True, tile_b=8, tile_r=32)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(pi))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(pd),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pq_adc_select_pallas_pads_to_tiles():
+    """Non-tile-multiple B and R must pad without contaminating real
+    lanes (padding ids are -1 -> masked to inf; padded lanes are
+    sliced off)."""
+    b, r, kk = 5, 70, 7
+    codes, luts, _ = _pq_pool(b, r, masked_frac=0.0)
+    ids = jnp.asarray(np.arange(r), jnp.int32)
+    od, oi = ref.ref_pq_adc_select(codes, luts, ids, kk)
+    pd, pi = ops.pq_adc_select(codes, luts, ids, kk,
+                               force_pallas=True, tile_b=8, tile_r=32)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(pi))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(pd),
+                               atol=1e-4)
+
+
+def test_pq_adc_select_adversarial_ties():
+    """Duplicated code rows under distinct ids produce EXACTLY tied
+    ADC distances (identical summands in both formulations); the
+    kernel's tie-break must come out id-ascending, matching the
+    oracle's lex sort, across every tile boundary."""
+    b, r, kk = 4, 96, 16
+    base, luts, _ = _pq_pool(b, 8, masked_frac=0.0)
+    codes = jnp.asarray(
+        np.tile(np.asarray(base), (r // 8, 1)), jnp.int32)  # 12x dups
+    ids = jnp.asarray(np.arange(r), jnp.int32)
+    od, oi = ref.ref_pq_adc_select(codes, luts, ids, kk)
+    jd, ji = ops.pq_adc_select(codes, luts, ids, kk)
+    pd, pi = ops.pq_adc_select(codes, luts, ids, kk,
+                               force_pallas=True, tile_b=4, tile_r=16)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(ji))
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(pi))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(pd),
+                               atol=1e-4)
+    # every distance is a 12-way tie run -> the emitted order must be
+    # (d, id)-lexicographic: ids strictly ascend wherever d ties
+    for lane in range(b):
+        dl, il = np.asarray(pd[lane]), np.asarray(pi[lane])
+        tied = dl[1:] == dl[:-1]
+        assert tied.any()  # the construction really does tie
+        assert (il[1:][tied] > il[:-1][tied]).all()
+
+
+def test_pq_adc_select_matches_pre_fusion_corner():
+    """selection + dedup_merge_topk == the pre-fusion cooperative pq
+    corner (full pq_adc_batch matrix + topk_merge_unique), bit-exact
+    on CPU — ids AND distances, placeholders included."""
+    b, r, k = 6, 128, 10
+    codes, luts, ids = _pq_pool(b, r)
+    top_d = jnp.full((b, k), jnp.inf)
+    top_i = jnp.full((b, k), -1, jnp.int32)
+    d = ref.ref_pq_adc_batch(codes, luts)
+    d = jnp.where(ids[None, :] < 0, INF, d)
+    want = ops.topk_merge_unique(d, ids, top_d, top_i)
+    sel_d, sel_i = ops.pq_adc_select(codes, luts, ids,
+                                     min(2 * k, r))
+    got = ops.dedup_merge_topk(sel_d, sel_i, top_d, top_i)
+    _assert_pair_equal(got, want)
+
+
 # ------------------------------------------------ lazy leaf frontier
 
 

@@ -150,8 +150,8 @@ def test_elastic_restore_via_fit(tmp_path):
     from repro.launch.train import fit
 
     cfg = get_smoke_config("minitron-8b")
-    out1 = fit(cfg, steps=10, batch=2, seq=16,
-               ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
+    fit(cfg, steps=10, batch=2, seq=16,
+        ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
     out2 = fit(cfg, steps=14, batch=2, seq=16,
                ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
     assert out2["final_step"] == 14
