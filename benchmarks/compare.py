@@ -48,6 +48,15 @@ RATIO_KEEP = 0.5     # keep >= 50% of the baseline speedup
 TIME_FACTOR = 3.0    # absolute timings may degrade <= 3x
 BYTES_TOL = 0.05     # structural byte counts move <= 5%
 
+# sections this gate knows how to diff; anything else found in either
+# snapshot is SKIPPED with a log line, never a crash — future PRs add
+# sections without breaking older baselines (and vice versa)
+KNOWN_SECTIONS = {
+    "snapshot", "scale", "backend", "kernels_us",
+    "merge_speedup_vs_full_sort", "pq_fused_memory", "query_memory",
+    "query_disk", "engine_ooc", "serve", "obs_overhead",
+}
+
 
 def newest_baseline(root: str) -> str:
     """The committed BENCH_pr<N>.json with the highest N."""
@@ -78,6 +87,13 @@ def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
     lines.append(f"baseline={base.get('snapshot')} "
                  f"scale={base.get('scale')} | fresh scale="
                  f"{fresh.get('scale')} (same_scale={same_scale})")
+
+    # unknown sections: log and move on (tolerate snapshots from
+    # newer/older PRs on either side)
+    for which, snap in (("baseline", base), ("fresh", fresh)):
+        for sec in sorted(set(snap) - KNOWN_SECTIONS):
+            lines.append(f"  [skip] unknown section {sec!r} in "
+                         f"{which} snapshot: not compared")
 
     # --- ratio metrics: scale-free, enforced always ---
     bs = base.get("merge_speedup_vs_full_sort") or {}
@@ -158,6 +174,26 @@ def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
         _check(f"{sec}/{key}", fval >= lo,
                f"{fval:.1f}/s vs baseline {bval:.1f}/s "
                f"(floor {lo:.1f}/s)", failures, lines)
+
+    # --- serve latency quantiles: absolute timings, loose, same
+    #     scale only. p50 and p99 are gated (p95 informational: it
+    #     adds no signal between the two and doubles the flake
+    #     surface on a noisy CI box) ---
+    blat = (base.get("serve") or {}).get("latency_ms") or {}
+    flat = (fresh.get("serve") or {}).get("latency_ms") or {}
+    for qk in ("p50", "p99"):
+        bval = blat.get(qk)
+        if bval is None:
+            continue
+        fval = flat.get(qk)
+        if fval is None:
+            _check(f"serve/latency_ms/{qk}", False,
+                   "missing in fresh run", failures, lines)
+            continue
+        hi = bval * TIME_FACTOR
+        _check(f"serve/latency_ms/{qk}", fval <= hi,
+               f"{fval:.2f}ms vs baseline {bval:.2f}ms "
+               f"(ceiling {hi:.2f}ms)", failures, lines)
     return failures, lines
 
 

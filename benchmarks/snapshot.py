@@ -7,8 +7,11 @@ full-sort baselines, and since PR 5 the fused pq_adc_select vs its
 materializing oracle plus the [B, R]-never-materialized memory
 check), on-disk bytes-read, in-memory queries/s, and since PR 4 the
 out-of-core serving rows: engine queries/s over spill-built shards
-and the Scheduler-driven deadline-mixed retrieval front — so later
-PRs can diff the perf trajectory without rerunning whole suites.
+and the Scheduler-driven deadline-mixed retrieval front, now with
+per-request serve-latency DISTRIBUTIONS (p50/p95/p99 via the
+repro.obs log-bucketed histograms) and the tracing-disabled overhead
+row — so later PRs can diff the perf trajectory without rerunning
+whole suites.
 ``--smoke`` compiles and runs every path once at the small scale
 without writing the file (the scripts/verify.sh regression gate: a
 snapshot that stops compiling fails verify before it rots).
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.core.guarantees import Guarantee
@@ -40,7 +44,7 @@ from repro.store import DeviceLeafCache
 from . import bench_kernels
 from .common import dataset, timeit
 
-SNAPSHOT_NAME = "BENCH_pr5.json"
+SNAPSHOT_NAME = "BENCH_pr6.json"
 
 
 def _repo_root_path(name: str = None) -> str:
@@ -65,6 +69,12 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         ({k: v for k, v in r.items()
           if k not in ("bench", "kernel")}
          for r in krows if r.get("kernel") == "pq_adc_select_memory"),
+        None)
+    obs_overhead = next(
+        ({k: v for k, v in r.items()
+          if k not in ("bench", "kernel")}
+         for r in krows
+         if r.get("kernel") == "obs_span_disabled_overhead"),
         None)
 
     # --- in-memory queries/s (the paper's best tree, eps=1) ---
@@ -121,14 +131,24 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
                 for i in range(len(q))]
         sched = Scheduler()
         sched.run_retrieval(eng, reqs, k)  # warm per-group shapes
+        # per-request retrieval-latency distribution: every repeat's
+        # per-uid retrieval_ms lands in a private log-bucketed
+        # histogram (repro.obs quantile extraction — the serving
+        # stack's own p50/p95/p99 machinery, not numpy over a list)
+        lat_hist = obs.Histogram("serve.retrieval_ms", ())
         t0 = time.perf_counter()
         for _ in range(repeats):
             out_r = sched.run_retrieval(eng, reqs, k)
+            for v in out_r.values():
+                lat_hist.record(v["retrieval_ms"])
         dt = (time.perf_counter() - t0) / repeats
         kinds = sorted({v["kind"] for v in out_r.values()})
+        qn = lat_hist.quantiles()
         serve = {
             "requests_per_s": round(len(reqs) / dt, 1),
             "deadline_mix_kinds": kinds,
+            "latency_ms": {key: round(val, 3)
+                           for key, val in qn.items()},
         }
 
     return {
@@ -146,6 +166,7 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         "query_disk": disk,
         "engine_ooc": engine_ooc,
         "serve": serve,
+        "obs_overhead": obs_overhead,
     }
 
 

@@ -1,0 +1,118 @@
+"""Observability smoke for scripts/verify.sh: traced query over a tiny
+spilled store, span tree vs counters BIT-EXACT.
+
+The load-bearing assertion: the ``ooc.query`` span's ``bytes_read``
+attribute — what the trace/QueryProfile reports — equals the
+cache + prefetcher registry counters for the same query window
+EXACTLY (no tolerance). The span attrs are set from the same typed
+OocStats the counters feed, so a drift here means the schema plumbing
+broke, not a flaky timer. Also checks: per-iteration gather spans sum
+to the demand-read counter, the stop-condition attribution accounts
+for every lane, tracing-disabled queries emit no spans, and the
+chrome export round-trips.
+
+    PYTHONPATH=src python scripts/obs_smoke.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from repro import obs
+from repro.core import search as S
+from repro.core.index import FrozenIndex
+from repro.core.indexes import dstree
+from repro.store import DeviceLeafCache, LeafPrefetcher
+
+
+def main() -> int:
+    rng = np.random.default_rng(7)
+    data = np.cumsum(rng.normal(size=(512, 64)), axis=1)
+    data = ((data - data.mean(1, keepdims=True))
+            / (data.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+    queries = (data[rng.choice(512, 6, replace=False)]
+               + 0.05 * rng.normal(size=(6, 64))).astype(np.float32)
+    b = queries.shape[0]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        idx = dstree.build(data, leaf_cap=32)
+        store = FrozenIndex.load(idx.save(os.path.join(tmp, "idx")),
+                                 resident="summaries")
+        # small cache + real prefetcher: both demand and speculative
+        # read paths feed the counters under test
+        pf = LeafPrefetcher(store, depth=3)
+        cache = DeviceLeafCache(store, capacity_leaves=8,
+                                prefetcher=pf)
+        try:
+            # ---- tracing disabled: no spans, stats still complete
+            obs.clear()
+            out = S.search_ooc(store, queries, 5, epsilon=0.5,
+                               cache=cache, prefetch_depth=2)
+            assert not obs.tracer().spans(), "spans while disabled"
+            assert out.stats.bytes_read > 0
+
+            # ---- traced query over the SAME (now part-warm) cache
+            cache.reset_counters()
+            obs.enable()
+            out = S.search_ooc(store, queries, 5, epsilon=0.5,
+                               cache=cache, prefetch_depth=2)
+            obs.disable()
+        finally:
+            pf.close()
+
+        st = out.stats
+        prof = obs.last_profile("ooc.query")
+        assert prof is not None, "no ooc.query span collected"
+
+        # THE assertion: span-tree bytes_read == cache+prefetcher
+        # counters, bit-exact. Window counters (since reset) are what
+        # OocStats snapshots; the rerank term is zero for a lossless
+        # codec, so cache demand reads + prefetcher reads is the
+        # whole byte population.
+        counter_bytes = cache.bytes_read_sync + pf.bytes_read
+        assert st.bytes_read_rerank == 0, st.bytes_read_rerank
+        assert prof.attrs["bytes_read"] == counter_bytes, (
+            prof.attrs["bytes_read"], counter_bytes)
+        assert st.bytes_read == counter_bytes, (
+            st.bytes_read, counter_bytes)
+
+        # per-iteration gather spans: their demand-read bytes sum to
+        # the cache's sync-read counter exactly
+        gather_sync = sum(sp.attrs.get("bytes_read_sync", 0)
+                          for sp in prof.spans)
+        assert gather_sync == cache.bytes_read_sync, (
+            gather_sync, cache.bytes_read_sync)
+
+        # every lane stopped for exactly one attributed reason
+        assert (st.stop_delta + st.stop_epsilon
+                + st.stop_exhausted) == b
+        assert prof.count("ooc.iteration") == st.iterations
+
+        # the registry saw the same query (cumulative: >= window)
+        reg_bytes = sum(
+            c.value for c in obs.REGISTRY.collect(
+                "store.cache.bytes_read_sync"))
+        assert reg_bytes >= cache.bytes_read_sync
+
+        # chrome export round-trips with the same span population
+        trace_path = os.path.join(tmp, "trace.json")
+        obs.dump_chrome_trace(trace_path)
+        with open(trace_path) as f:
+            doc = json.load(f)
+        names = {e["name"] for e in doc["traceEvents"]}
+        assert {"ooc.query", "ooc.filter", "ooc.iteration",
+                "ooc.finalize"} <= names, names
+        obs.clear()
+
+    print("obs smoke OK: span tree bytes_read == cache+prefetcher "
+          f"counters ({counter_bytes} bytes, {st.iterations} "
+          f"iterations, stops d/e/x = {st.stop_delta}/"
+          f"{st.stop_epsilon}/{st.stop_exhausted})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,9 +8,16 @@ full-budget group's answers against brute force. Fails loudly if the
 deadline->guarantee mapping, the per-group engine dispatch, or the
 spilled-shard serving path stops working.
 
+Runs with span tracing ENABLED; when ``OBS_CHROME_TRACE`` is set the
+collected spans are written there as Chrome trace-event JSON and
+validated (the CI verify-fast job uploads the file as an artifact —
+docs/OBSERVABILITY.md shows how to read it).
+
     PYTHONPATH=src python scripts/serve_smoke.py
+    OBS_CHROME_TRACE=trace.json PYTHONPATH=src python scripts/serve_smoke.py
 """
 
+import json
 import os
 import sys
 import tempfile
@@ -19,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.serve.batching import Request, Scheduler
@@ -38,12 +46,16 @@ def main() -> int:
                     deadline_ms=deadlines[i], series=queries[i])
             for i in range(len(deadlines))]
 
-    with tempfile.TemporaryDirectory() as tmp:
-        mesh = jax.make_mesh((1,), ("data",))
-        eng = DistributedEngine(mesh, method="dstree").build(
-            data, leaf_cap=32, spill_dir=os.path.join(tmp, "spill"),
-            codec="f32", keep_resident=False)
-        out = Scheduler().run_retrieval(eng, reqs, k=5)
+    obs.enable()
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            mesh = jax.make_mesh((1,), ("data",))
+            eng = DistributedEngine(mesh, method="dstree").build(
+                data, leaf_cap=32, spill_dir=os.path.join(tmp, "spill"),
+                codec="f32", keep_resident=False)
+            out = Scheduler().run_retrieval(eng, reqs, k=5)
+    finally:
+        obs.disable()
 
     assert sorted(out) == list(range(len(reqs))), "requests dropped"
     kinds = {u: out[u]["kind"] for u in out}
@@ -55,6 +67,32 @@ def main() -> int:
                               np.asarray(truth.ids[u])), u
     assert eng.last_ooc_stats is not None \
         and eng.last_ooc_stats["bytes_read"] > 0
+    # every retrieval group carries its own timed latency
+    assert all(out[u]["retrieval_ms"] > 0 for u in out)
+
+    # the trace the run just collected: one retrieval-group span per
+    # guarantee group (groups are keyed by guarantee PARAMETERS, so
+    # two deadlines can share kind "ng" yet form distinct groups),
+    # each enclosing its engine/ooc span subtree
+    trc = obs.tracer()
+    grp_spans = trc.find("serve.retrieval_group")
+    assert len(grp_spans) >= len(set(kinds.values())), \
+        (len(grp_spans), kinds)
+    assert {sp.attrs["kind"] for sp in grp_spans} == \
+        set(kinds.values()), grp_spans
+    trace_path = os.environ.get("OBS_CHROME_TRACE")
+    if trace_path:
+        obs.dump_chrome_trace(trace_path)
+        with open(trace_path) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        assert evs and all(e["ph"] == "X" and e["dur"] >= 0
+                           for e in evs)
+        assert {"serve.retrieval_group", "engine.query", "ooc.query"} \
+            <= {e["name"] for e in evs}
+        print(f"# chrome trace written to {trace_path} "
+              f"({len(evs)} events)")
+    obs.clear()
     print("serve smoke OK: scheduler -> engine.query over spilled "
           f"shards ({len(out)} requests, kinds: "
           f"{sorted(set(kinds.values()))})")

@@ -29,6 +29,8 @@ run_fast() {
   python -m benchmarks.run --snapshot --smoke
   echo "== verify: serve smoke (Scheduler -> engine.query, spilled store) =="
   python scripts/serve_smoke.py
+  echo "== verify: obs smoke (span tree vs counters, bit-exact) =="
+  python scripts/obs_smoke.py
 }
 
 run_full() {

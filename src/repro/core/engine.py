@@ -34,8 +34,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro import compat, obs
 from repro.kernels import ops
+from repro.obs import OocStats
 
 from .guarantees import Guarantee
 from .histogram import DistanceHistogram, build_histogram
@@ -77,7 +78,9 @@ class DistributedEngine:
         default_factory=dict, repr=False, compare=False)
     _shard_caches: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
-    last_ooc_stats: Optional[dict] = dataclasses.field(
+    # aggregated OocStats of the last out-of-core query (typed schema,
+    # Mapping-style access preserved; per-shard schemas under .shards)
+    last_ooc_stats: Optional[OocStats] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property
@@ -255,7 +258,7 @@ class DistributedEngine:
                      sync_bsf, b, queries.shape[-1])
         cached = self._query_fns.get(cache_key)
         if cached is not None:
-            return cached(idx, queries)
+            return self._run_resident(cached, idx, queries, k, b)
         axes = self.axes
         spec_shard = P(axes if len(axes) > 1 else axes[0])
         in_specs = (
@@ -317,7 +320,23 @@ class DistributedEngine:
             out_specs=out_specs, check=False,
         )
         self._query_fns[cache_key] = fn
-        return fn(idx, queries)
+        return self._run_resident(fn, idx, queries, k, b)
+
+    def _run_resident(self, fn, idx, queries, k: int, b: int
+                      ) -> SearchResult:
+        """Dispatch the (cached) shard_map'ed resident query, wrapped
+        in a span when tracing is enabled. The block_until_ready is
+        span-only: the untraced path keeps its async dispatch."""
+        if not obs.enabled():
+            return fn(idx, queries)
+        with obs.span("engine.query", path="resident", lanes=b, k=k,
+                      shards=self.n_shards) as sp:
+            res = fn(idx, queries)
+            jax.block_until_ready(res.dists)
+            sp.set(leaves_visited=int(np.asarray(
+                       res.leaves_visited).sum()),
+                   rows_scanned=int(np.asarray(res.rows_scanned).sum()))
+        return res
 
     # ------------------------------------------------------------------
     def _shard_cache(self, d: str, store, need_leaves: int,
@@ -406,32 +425,45 @@ class DistributedEngine:
         leaves = np.zeros(b, np.int64)
         rows = np.zeros(b, np.int64)
         lbs = 0
-        stats = {"bytes_read": 0, "shards": []}
-        for d in self.shard_dirs:
-            store = self._stores.get(d)
-            if store is None:
-                store = load_index(d, resident="summaries")
-                self._stores[d] = store
-            cache = self._shard_cache(
-                d, store, b * visit_batch, cache_leaves,
-                prefetch_depth=int(opts.get("prefetch_depth", 1)),
-                prefetch=bool(opts.get("prefetch", True)))
-            out = search_ooc(
-                store, qj, k, delta=g.delta, epsilon=g.epsilon,
-                nprobe=g.nprobe, visit_batch=visit_batch, cache=cache,
-                **opts)
-            r = out.result
-            # shard dists are already sqrt'd like the resident merge
-            # operands; ids are globally disjoint across shards, so the
-            # unique-merge's dedup is a no-op — it is used for its
-            # (d, id)-lex selection and its explicit precondition
-            top_d, top_i = ops.topk_merge_unique(
-                r.dists, r.ids, top_d, top_i)
-            leaves += np.asarray(r.leaves_visited, np.int64)
-            rows += np.asarray(r.rows_scanned, np.int64)
-            lbs += int(r.lb_computed)
-            stats["bytes_read"] += out.stats["bytes_read"]
-            stats["shards"].append(out.stats)
+        per_shard = []
+        with obs.span("engine.query", path="ooc", lanes=b, k=k,
+                      shards=len(self.shard_dirs)) as root:
+            for si, d in enumerate(self.shard_dirs):
+                store = self._stores.get(d)
+                if store is None:
+                    store = load_index(d, resident="summaries")
+                    self._stores[d] = store
+                cache = self._shard_cache(
+                    d, store, b * visit_batch, cache_leaves,
+                    prefetch_depth=int(opts.get("prefetch_depth", 1)),
+                    prefetch=bool(opts.get("prefetch", True)))
+                # the child ooc.query span carries the shard's
+                # bytes_read attr — one subtree level owns each
+                # numeric attr, so QueryProfile.total() never
+                # double-counts
+                with obs.span("engine.shard", shard=si):
+                    out = search_ooc(
+                        store, qj, k, delta=g.delta, epsilon=g.epsilon,
+                        nprobe=g.nprobe, visit_batch=visit_batch,
+                        cache=cache, **opts)
+                obs.REGISTRY.counter(
+                    "engine.shard.bytes_read", shard=str(si)).inc(
+                        out.stats.bytes_read)
+                r = out.result
+                # shard dists are already sqrt'd like the resident
+                # merge operands; ids are globally disjoint across
+                # shards, so the unique-merge's dedup is a no-op — it
+                # is used for its (d, id)-lex selection and its
+                # explicit precondition
+                top_d, top_i = ops.topk_merge_unique(
+                    r.dists, r.ids, top_d, top_i)
+                leaves += np.asarray(r.leaves_visited, np.int64)
+                rows += np.asarray(r.rows_scanned, np.int64)
+                lbs += int(r.lb_computed)
+                per_shard.append(out.stats)
+            stats = OocStats.aggregate(per_shard)
+            root.set(bytes_read_total=stats.bytes_read,
+                     iterations=stats.iterations)
         self.last_ooc_stats = stats
         return SearchResult(
             dists=top_d, ids=top_i,

@@ -27,15 +27,16 @@ def _membership(returned_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
 
 
 def recall(returned_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
-    """Per-query recall [B]."""
-    k = true_ids.shape[1]
+    """Per-query recall [B]. An empty truth set (k == 0) scores 0,
+    not nan — nothing was asked for, nothing was missed."""
+    k = max(true_ids.shape[1], 1)
     return _membership(returned_ids, true_ids).sum(axis=1) / k
 
 
 def average_precision(returned_ids: jax.Array,
                       true_ids: jax.Array) -> jax.Array:
-    """Per-query AP [B] (paper's definition)."""
-    k = true_ids.shape[1]
+    """Per-query AP [B] (paper's definition; empty truth scores 0)."""
+    k = max(true_ids.shape[1], 1)
     rel = _membership(returned_ids, true_ids)  # [B, k]
     cum = jnp.cumsum(rel, axis=1)
     ranks = jnp.arange(1, k + 1, dtype=jnp.float32)[None, :]

@@ -202,15 +202,36 @@ def search_impl(
     )
 
 
-# Public jitted entry point. Callers already inside a shard_map region
-# must use `search_impl` directly: nesting this jit under shard_map
-# miscompiles the while_loop on jax 0.4.x (the refinement loop exits
-# after ~2 iterations with check_rep=False), observed on 0.4.37.
-search = jax.jit(
+# Jitted core of the public entry point. Callers already inside a
+# shard_map region must use `search_impl` directly: nesting this jit
+# under shard_map miscompiles the while_loop on jax 0.4.x (the
+# refinement loop exits after ~2 iterations with check_rep=False),
+# observed on 0.4.37.
+_search_jit = jax.jit(
     search_impl,
     static_argnames=("k", "nprobe", "visit_batch", "force_pallas",
                      "sync_axes", "share_gathers", "frontier"),
 )
+
+
+def search(index: FrozenIndex, queries: jax.Array, k: int,
+           **kw) -> SearchResult:
+    """Public jitted entry point (`search_impl` semantics). When span
+    tracing is enabled (repro.obs) the call is wrapped in a
+    ``core.search`` span — blocking on the result so the span measures
+    the device work; untraced calls keep jit's async dispatch and pay
+    only this one flag check."""
+    from repro import obs
+
+    if not obs.enabled():
+        return _search_jit(index, queries, k, **kw)
+    with obs.span("core.search", lanes=queries.shape[0], k=k,
+                  leaves=index.num_leaves) as sp:
+        res = _search_jit(index, queries, k, **kw)
+        jax.block_until_ready(res.dists)
+        sp.set(leaves_visited=int(jnp.sum(res.leaves_visited)),
+               rows_scanned=int(jnp.sum(res.rows_scanned)))
+    return res
 
 
 def search_ooc(store, queries: jax.Array, k: int, **kw):

@@ -4,14 +4,32 @@ Each op pads inputs to tile boundaries, dispatches to the Pallas kernel on
 TPU (or when forced via ``force_pallas=True``, which uses interpret mode on
 CPU) and to the jnp oracle otherwise, then strips padding. The search core
 calls these ops exclusively, so the TPU/CPU split lives in one place.
+
+Every dispatch site is wrapped in ``jax.named_scope`` (the ``_scoped``
+decorator): the op name lands on the emitted HLO/profiler metadata, so
+device traces captured with jax.profiler attribute kernel time to
+``repro.ops.<name>`` regions. named_scope is trace-time-only — zero
+runtime cost, on or off.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def _scoped(fn):
+    """Wrap an op in jax.named_scope("repro.ops.<name>")."""
+
+    @functools.wraps(fn)
+    def wrapped(*a, **kw):
+        with jax.named_scope(f"repro.ops.{fn.__name__}"):
+            return fn(*a, **kw)
+
+    return wrapped
 
 from . import ref
 from .box_mindist import box_mindist_pallas
@@ -35,6 +53,7 @@ def _pad_rows(x: jax.Array, mult: int, value=0.0) -> jax.Array:
                    constant_values=value)
 
 
+@_scoped
 def paa(x: jax.Array, n_segments: int, *, force_pallas: bool = False,
         tile: int = 256) -> jax.Array:
     """Segment means [N, n] -> [N, l] f32."""
@@ -47,6 +66,7 @@ def paa(x: jax.Array, n_segments: int, *, force_pallas: bool = False,
     return ref.ref_paa(x, n_segments)
 
 
+@_scoped
 def box_mindist(
     q: jax.Array, lo: jax.Array, hi: jax.Array, weights: jax.Array,
     *, force_pallas: bool = False, tile_b: int = 128, tile_l: int = 512,
@@ -65,6 +85,7 @@ def box_mindist(
     return ref.ref_box_mindist(q, lo, hi, weights)
 
 
+@_scoped
 def l2(
     q: jax.Array, x: jax.Array, *, force_pallas: bool = False,
     tile_b: int = 128, tile_m: int = 256, tile_k: int = 512,
@@ -86,6 +107,7 @@ def l2(
     return ref.ref_l2(q, x)
 
 
+@_scoped
 def pq_adc(
     codes: jax.Array, lut: jax.Array, *, force_pallas: bool = False,
     tile_m: int = 512,
@@ -100,6 +122,7 @@ def pq_adc(
     return ref.ref_pq_adc(codes, lut)
 
 
+@_scoped
 def pq_adc_batch(
     codes: jax.Array, luts: jax.Array, *, force_pallas: bool = False,
 ) -> jax.Array:
@@ -129,6 +152,7 @@ def pq_adc_batch(
     return ref.ref_pq_adc_batch(codes, luts)
 
 
+@_scoped
 def l2_topk(
     q: jax.Array, x: jax.Array, k: int, **kw
 ) -> Tuple[jax.Array, jax.Array]:
@@ -138,6 +162,7 @@ def l2_topk(
     return -neg, idx
 
 
+@_scoped
 def row_sq_norms(rows: jax.Array) -> jax.Array:
     """Per-row squared L2 norms [N, n] -> [N] f32.
 
@@ -149,6 +174,7 @@ def row_sq_norms(rows: jax.Array) -> jax.Array:
     return jnp.sum(rf * rf, axis=-1)
 
 
+@_scoped
 def sq_l2(q: jax.Array, rows: jax.Array, row_norms: jax.Array
           ) -> jax.Array:
     """Fused squared-L2 with precomputed row norms (f32 accumulation).
@@ -231,6 +257,7 @@ def _select_k_by_d_id(dists, ids, kk: int):
     return jax.lax.sort((sel_d, sel_i), num_keys=2)
 
 
+@_scoped
 def bitonic_merge_sorted(da, ia, db, ib):
     """Merge two per-row sorted (ascending) lists: [B,ka]+[B,kb] ->
     [B,ka+kb], the k+k bitonic-merge stage of :func:`topk_merge`.
@@ -273,6 +300,7 @@ def bitonic_merge_sorted(da, ia, db, ib):
     return d[:, :total], i[:, :total]
 
 
+@_scoped
 def topk_merge(dists, ids, top_d, top_i):
     """Merge a candidate batch into running sorted top-k rows.
 
@@ -288,6 +316,7 @@ def topk_merge(dists, ids, top_d, top_i):
     return md[:, :k], mi[:, :k]
 
 
+@_scoped
 def dedup_merge_topk(sel_d, sel_i, top_d, top_i):
     """Fold PRE-SELECTED candidates [B, kk] into the running top-k with
     id dedup — the merge half of :func:`topk_merge_unique`, shared with
@@ -308,6 +337,7 @@ def dedup_merge_topk(sel_d, sel_i, top_d, top_i):
     return new_d[:, :k], new_i[:, :k]
 
 
+@_scoped
 def topk_merge_unique(dists, ids, top_d, top_i):
     """topk_merge that keeps each id at most once (best distance).
     Required by the cooperative (share_gathers) scoring paths, where a
@@ -335,6 +365,7 @@ def topk_merge_unique(dists, ids, top_d, top_i):
     return dedup_merge_topk(sel_d, sel_i, top_d, top_i)
 
 
+@_scoped
 def pq_adc_select(
     codes: jax.Array,  # [R, m] pooled code rows (shared across lanes)
     luts: jax.Array,   # [B, m, K] f32 per-lane ADC tables
@@ -372,6 +403,7 @@ def pq_adc_select(
     return _select_k_by_d_id_shared(d, ids, kk)
 
 
+@_scoped
 def coop_score_select(
     q: jax.Array,          # [B, n] f32 queries
     rows: jax.Array,       # [R, n] pooled rows (index/payload dtype)

@@ -10,16 +10,35 @@ degradation, serve/batching.guarantee_for_deadline) and issues one
 HBM-resident shard_map search or the host-driven out-of-core loop
 over spilled stores (core/engine.DistributedEngine.query) — so the
 same serving front covers collections far larger than device memory.
+
+Latency attribution (PR 6): every request's reported ``latency_ms``
+is the sum of ITS OWN components on the one shared monotonic clock
+(``obs.now`` — Request.submitted_at is stamped on the same clock):
+
+  queue_wait_ms   submit -> its batch starts draining
+  generate_ms     the decode step of its batch (shared by the batch)
+  retrieval_ms    its OWN guarantee group's engine time (a request in
+                  the cheap ng group is no longer charged for the
+                  expensive epsilon group's retrieval, which the old
+                  whole-batch timer did)
+
+Per-request components land in the metrics registry as
+``serve.queue_wait_ms`` / ``serve.generate_ms`` /
+``serve.latency_ms{kind=...}`` histograms plus
+``serve.deadline.{hit,miss}{kind=...}`` counters, and each drained
+batch is a ``serve.batch`` span when tracing is enabled
+(docs/OBSERVABILITY.md).
 """
 
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.serve.batching import Request, Scheduler, guarantee_for_deadline
 from repro.serve.serve_step import generate
@@ -39,7 +58,10 @@ def serve_requests(
     request carrying a ``series`` query gets a ``retrieval`` entry
     ({ids, dists, kind}) answered under the guarantee its deadline
     affords; ``guarantee_kw`` tunes the deadline->guarantee mapping
-    (budgets, degraded tiers — see guarantee_for_deadline)."""
+    (budgets, degraded tiers — see guarantee_for_deadline). Each
+    result entry carries the per-request latency breakdown
+    (queue_wait_ms / generate_ms / retrieval_ms / latency_ms) and a
+    ``deadline_hit`` flag when the request had a deadline."""
     sched = Scheduler(max_batch=max_batch)
     for r in requests:
         sched.submit(r)
@@ -50,30 +72,54 @@ def serve_requests(
         if nb is None:
             break
         bucket, reqs = nb
-        prompts = jnp.asarray(sched.pad_prompts(bucket, reqs))
-        n_new = max(r.max_new_tokens for r in reqs)
-        t0 = time.perf_counter()
-        toks, aux = generate(params, cfg, prompts, n_new)
-        retrieved: Dict[int, Dict[str, Any]] = {}
-        if engine is not None:
-            # the retrieval front: one engine.query per deadline-
-            # mapped guarantee group, overlapping nothing — retrieval
-            # latency is part of the request's budget
-            retrieved = sched.run_retrieval(
-                engine, reqs, retrieval_k, **gkw)
-        latency = (time.perf_counter() - t0) * 1e3
-        for i, r in enumerate(reqs):
-            entry: Dict[str, Any] = {
-                "tokens": np.asarray(toks[i, : r.max_new_tokens]),
-                "latency_ms": latency,
-                "guarantee": guarantee_for_deadline(
-                    r.deadline_ms, **gkw).kind,
-            }
-            if r.uid in retrieved:
-                hit = retrieved[r.uid]
-                entry["retrieval"] = {
-                    "ids": hit["ids"], "dists": hit["dists"],
-                    "kind": hit["kind"],
+        with obs.span("serve.batch", bucket=bucket, requests=len(reqs)):
+            t_drain = obs.now()
+            prompts = jnp.asarray(sched.pad_prompts(bucket, reqs))
+            n_new = max(r.max_new_tokens for r in reqs)
+            with obs.span("serve.generate", tokens=n_new):
+                t0 = obs.now()
+                toks, aux = generate(params, cfg, prompts, n_new)
+                toks = jax.block_until_ready(toks)
+                generate_ms = (obs.now() - t0) * 1e3
+            retrieved: Dict[int, Dict[str, Any]] = {}
+            if engine is not None:
+                # the retrieval front: one engine.query per deadline-
+                # mapped guarantee group, overlapping nothing —
+                # retrieval latency is part of the request's budget
+                retrieved = sched.run_retrieval(
+                    engine, reqs, retrieval_k, **gkw)
+            for i, r in enumerate(reqs):
+                kind = guarantee_for_deadline(r.deadline_ms, **gkw).kind
+                queue_wait_ms = max(
+                    (t_drain - r.submitted_at) * 1e3, 0.0)
+                retrieval_ms = retrieved.get(
+                    r.uid, {}).get("retrieval_ms", 0.0)
+                latency_ms = queue_wait_ms + generate_ms + retrieval_ms
+                entry: Dict[str, Any] = {
+                    "tokens": np.asarray(toks[i, : r.max_new_tokens]),
+                    "latency_ms": latency_ms,
+                    "queue_wait_ms": queue_wait_ms,
+                    "generate_ms": generate_ms,
+                    "retrieval_ms": retrieval_ms,
+                    "guarantee": kind,
                 }
-            results[r.uid] = entry
+                reg = obs.REGISTRY
+                reg.histogram("serve.queue_wait_ms").record(
+                    queue_wait_ms)
+                reg.histogram("serve.generate_ms").record(generate_ms)
+                reg.histogram("serve.latency_ms", kind=kind).record(
+                    latency_ms)
+                if r.deadline_ms is not None:
+                    hit = latency_ms <= r.deadline_ms
+                    entry["deadline_hit"] = bool(hit)
+                    reg.counter(
+                        "serve.deadline.hit" if hit
+                        else "serve.deadline.miss", kind=kind).inc()
+                if r.uid in retrieved:
+                    hit_r = retrieved[r.uid]
+                    entry["retrieval"] = {
+                        "ids": hit_r["ids"], "dists": hit_r["dists"],
+                        "kind": hit_r["kind"],
+                    }
+                results[r.uid] = entry
     return results

@@ -1,0 +1,30 @@
+"""repro.obs — query-plan tracing + metrics for the retrieval stack.
+
+Two halves (docs/OBSERVABILITY.md):
+
+  trace    opt-in span tracer (disabled by default, near-zero cost
+           off): nestable context-manager spans on ONE monotonic
+           clock (``obs.now``), per-query :class:`QueryProfile`
+           summaries, Chrome trace-event JSON export.
+  metrics  always-on process-wide registry of labeled counters /
+           gauges / log-bucketed histograms (p50/p95/p99).
+
+``OocStats`` is the typed per-query out-of-core telemetry schema both
+halves share with the store/engine layer.
+"""
+
+from .metrics import (GROWTH, REGISTRY, Counter, Gauge, Histogram,
+                      MetricsRegistry, registry)
+from .stats import OocStats
+from .trace import (NULL_SPAN, QueryProfile, Span, Tracer,
+                    chrome_events, clear, disable, dump_chrome_trace,
+                    enable, enabled, last_profile, now, profile, span,
+                    tracer)
+
+__all__ = [
+    "GROWTH", "REGISTRY", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "registry", "OocStats", "NULL_SPAN",
+    "QueryProfile", "Span", "Tracer", "chrome_events", "clear",
+    "disable", "dump_chrome_trace", "enable", "enabled",
+    "last_profile", "now", "profile", "span", "tracer",
+]

@@ -1,0 +1,228 @@
+"""Process-wide metrics registry: counters, gauges, log-bucketed
+latency histograms with p50/p95/p99 extraction.
+
+The registry is the always-on half of the observability layer (the
+tracer is the opt-in half): host-side code increments labeled
+counters/histograms unconditionally — each update is one dict-free
+attribute op under a lock, nanoseconds against the ms-scale I/O and
+device steps it measures. Metrics are keyed by (name, sorted labels);
+the serving stack labels by guarantee kind / codec / shard so the
+snapshot separates e.g. p99 retrieval latency per guarantee tier.
+
+Histograms are log-bucketed: geometric bucket bounds with growth
+``GROWTH`` (= 2^(1/8), ~9% relative resolution), an underflow bucket
+for values <= ``lo``, exact min/max/count/sum tracked alongside.
+Quantiles linearly interpolate inside the hit bucket and clamp to the
+exact [min, max] — so any quantile is within one bucket (~9% relative)
+of the true sample quantile, property-tested against numpy.quantile
+in tests/test_obs.py.
+
+Window semantics: counters are cumulative, but an owner that needs
+per-query windows (DeviceLeafCache / LeafPrefetcher reset semantics)
+calls ``mark()`` and reads ``since_mark`` — the registry keeps the
+process-lifetime total either way, so per-instance resets can never
+erase fleet-level accounting.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Optional, Tuple
+
+GROWTH = 2.0 ** 0.125          # ~9.05% geometric bucket width
+_LN_GROWTH = math.log(GROWTH)
+_LO = 1e-9                     # first positive bucket upper bound
+_N_BUCKETS = 480               # covers (1e-9, ~1e9] + underflow at [0]
+
+
+class Counter:
+    """Monotonic counter with an owner-managed window mark."""
+
+    __slots__ = ("name", "labels", "_lock", "_value", "_mark")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...]):
+        self.name = name
+        self.labels = labels
+        self._lock = threading.Lock()
+        self._value = 0
+        self._mark = 0
+
+    def inc(self, n=1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self):
+        """Cumulative process-lifetime total."""
+        return self._value
+
+    def mark(self) -> None:
+        """Start a new measurement window (owner-private)."""
+        with self._lock:
+            self._mark = self._value
+
+    @property
+    def since_mark(self):
+        return self._value - self._mark
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("name", "labels", "_value")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...]):
+        self.name = name
+        self.labels = labels
+        self._value = 0.0
+
+    def set(self, v) -> None:
+        self._value = v
+
+    @property
+    def value(self):
+        return self._value
+
+
+class Histogram:
+    """Log-bucketed value histogram with quantile extraction.
+
+    Bucket i > 0 spans (lo*G^(i-1), lo*G^i]; bucket 0 is the
+    underflow [<= lo], including zeros. ``quantile(q)`` returns the
+    value at fractional rank q*(count-1): walk cumulative bucket
+    counts, linear-interpolate inside the hit bucket, clamp to the
+    exact tracked [min, max].
+    """
+
+    __slots__ = ("name", "labels", "_lock", "_counts", "count", "sum",
+                 "min", "max")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...]):
+        self.name = name
+        self.labels = labels
+        self._lock = threading.Lock()
+        self._counts = [0] * _N_BUCKETS
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    @staticmethod
+    def _bucket(v: float) -> int:
+        if v <= _LO:
+            return 0
+        i = int(math.log(v / _LO) / _LN_GROWTH) + 1
+        return min(i, _N_BUCKETS - 1)
+
+    @staticmethod
+    def _bounds(i: int) -> Tuple[float, float]:
+        if i == 0:
+            return 0.0, _LO
+        return _LO * GROWTH ** (i - 1), _LO * GROWTH ** i
+
+    def record(self, v) -> None:
+        v = float(v)
+        with self._lock:
+            self._counts[self._bucket(v)] += 1
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+
+    def quantile(self, q: float) -> float:
+        with self._lock:
+            if self.count == 0:
+                return math.nan
+            rank = q * (self.count - 1)
+            cum = 0
+            for i, c in enumerate(self._counts):
+                if c == 0:
+                    continue
+                if cum + c > rank:
+                    lo, hi = self._bounds(i)
+                    frac = (rank - cum + 0.5) / c
+                    v = lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+                    return min(max(v, self.min), self.max)
+                cum += c
+            return self.max
+
+    def quantiles(self, qs=(0.5, 0.95, 0.99)) -> Dict[str, float]:
+        return {f"p{round(q * 100) if q < 1 else 100}":
+                self.quantile(q) for q in qs}
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def snapshot(self) -> Dict[str, float]:
+        out = {"count": self.count, "sum": self.sum,
+               "min": self.min if self.count else math.nan,
+               "max": self.max if self.count else math.nan,
+               "mean": self.mean}
+        out.update(self.quantiles())
+        return out
+
+
+class MetricsRegistry:
+    """Get-or-create registry keyed by (name, sorted label kv-pairs).
+    One process-wide instance (``REGISTRY``); tests may build private
+    ones or call :meth:`reset`."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._metrics: Dict[tuple, object] = {}
+
+    def _get(self, cls, name: str, labels: dict):
+        lbl = tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+        key = (name, lbl)
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                m = cls(name, lbl)
+                self._metrics[key] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, requested {cls.__name__}")
+            return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get(Histogram, name, labels)
+
+    def collect(self, prefix: Optional[str] = None):
+        """All registered metric objects, optionally name-filtered."""
+        with self._lock:
+            ms = list(self._metrics.values())
+        if prefix is not None:
+            ms = [m for m in ms if m.name.startswith(prefix)]
+        return ms
+
+    def snapshot(self, prefix: Optional[str] = None) -> Dict[str, object]:
+        """Flat {\"name{k=v,...}\": value-or-quantile-dict} view."""
+        out: Dict[str, object] = {}
+        for m in self.collect(prefix):
+            lbl = ",".join(f"{k}={v}" for k, v in m.labels)
+            key = f"{m.name}{{{lbl}}}" if lbl else m.name
+            out[key] = m.snapshot() if isinstance(m, Histogram) \
+                else m.value
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return REGISTRY

@@ -24,12 +24,12 @@ stay bounded exactly like the prompt buckets.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import defaultdict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.guarantees import Guarantee
 
 
@@ -42,7 +42,11 @@ class Request:
     # retrieval query in the engine's series space ([n] float); None =
     # this request wants no retrieval
     series: Optional[np.ndarray] = None
-    submitted_at: float = dataclasses.field(default_factory=time.monotonic)
+    # stamped on obs.now — THE one monotonic clock of the serving
+    # stack (launch/serve.py subtracts it from the same clock for
+    # queue-wait; mixing time.monotonic here with time.perf_counter
+    # there made that subtraction incoherent)
+    submitted_at: float = dataclasses.field(default_factory=obs.now)
 
 
 def bucket_of(length: int, min_bucket: int = 16) -> int:
@@ -137,7 +141,12 @@ class Scheduler:
         (duplicating the last row — extra lanes are discarded; bounds
         the compiled/retraced batch shapes), and issue one engine call
         per group. Requests without a ``series`` are skipped. Returns
-        {uid: {ids, dists, guarantee, kind}}."""
+        {uid: {ids, dists, guarantee, kind, retrieval_ms}} —
+        ``retrieval_ms`` is the request's OWN guarantee group's engine
+        time (each group is timed to completion separately), so
+        per-request latency attribution never charges a request for
+        another group's work. Group times also land in the registry
+        as ``serve.retrieval_ms{kind=...}`` histograms."""
         import jax.numpy as jnp
 
         out: Dict[int, Dict[str, Any]] = {}
@@ -149,12 +158,23 @@ class Scheduler:
             if lanes > qs.shape[0]:
                 qs = np.concatenate(
                     [qs, np.repeat(qs[-1:], lanes - qs.shape[0], 0)])
-            res = engine.query(jnp.asarray(qs), k, g)
+            with obs.span("serve.retrieval_group", kind=g.kind,
+                          lanes=lanes, requests=len(group)):
+                t0 = obs.now()
+                res = engine.query(jnp.asarray(qs), k, g)
+                # host copies block on the device result, so the group
+                # time covers the full engine call
+                ids_np = np.asarray(res.ids)
+                dists_np = np.asarray(res.dists)
+                group_ms = (obs.now() - t0) * 1e3
+            obs.REGISTRY.histogram(
+                "serve.retrieval_ms", kind=g.kind).record(group_ms)
             for i, r in enumerate(group):
                 out[r.uid] = {
-                    "ids": np.asarray(res.ids[i]),
-                    "dists": np.asarray(res.dists[i]),
+                    "ids": ids_np[i],
+                    "dists": dists_np[i],
                     "guarantee": g,
                     "kind": g.kind,
+                    "retrieval_ms": group_ms,
                 }
         return out

@@ -14,25 +14,39 @@ a per-leaf trickle.
 
 Counters (``stats()``) are the bench currency of the paper's on-disk
 regime: disk bytes actually read, h2d bytes shipped, hit/miss counts,
-and how many of the misses the prefetcher had already staged. Hits are
-counted PER REQUEST: every occurrence of a leaf in the ``get_slots``
-batch that did not trigger a disk read is a hit — so when many query
-lanes visit the same leaf (the regime cooperative scoring targets) the
-hit rate credits each lane. ``hits_distinct`` keeps the per-distinct
-view (leaves resident at batch start).
+and how many of the misses the prefetcher had already staged. Since
+PR 6 every counter is REGISTRY-BACKED (repro.obs.metrics): each cache
+owns labeled ``store.cache.*`` counters in the process-wide registry —
+``reset_counters()`` starts a new per-query window via counter marks
+(the attribute/``stats()`` views report the window, preserving the old
+reset semantics bit-for-bit) while the registry keeps process-lifetime
+totals, so per-query resets can never erase fleet-level accounting.
+The same window values feed the typed ``OocStats`` schema and the span
+tree (store/ooc.py), so the three views cannot drift.
+
+Hits are counted PER REQUEST: every occurrence of a leaf in the
+``get_slots`` batch that did not trigger a disk read is a hit — so when
+many query lanes visit the same leaf (the regime cooperative scoring
+targets) the hit rate credits each lane. ``hits_distinct`` keeps the
+per-distinct view (leaves resident at batch start).
 """
 
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import REGISTRY
+
 from .layout import LeafStore
 from .prefetch import LeafPrefetcher
+
+_cache_ids = itertools.count()
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -50,12 +64,14 @@ class DeviceLeafCache:
         store: LeafStore,
         capacity_leaves: int,
         prefetcher: Optional[LeafPrefetcher] = None,
+        name: Optional[str] = None,
     ):
         if capacity_leaves < 1:
             raise ValueError("capacity_leaves must be >= 1")
         self.store = store
         self.capacity = int(capacity_leaves)
         self.prefetcher = prefetcher
+        self.name = name or f"cache{next(_cache_ids)}"
         m, c = store.max_leaf, store.payload_cols
         self.slots = jnp.zeros((self.capacity, m, c),
                                jnp.dtype(store.data_dtype))
@@ -63,15 +79,56 @@ class DeviceLeafCache:
         self.owner = np.full(self.capacity, -1, np.int64)
         self.refbit = np.zeros(self.capacity, bool)
         self.hand = 0
-        # counters
-        self.hits = 0            # per-request: every non-read occurrence
-        self.hits_distinct = 0   # distinct leaves resident at batch start
-        self.misses = 0          # distinct leaves read (disk or staged)
-        self.bytes_read_sync = 0  # demand-path disk reads only; total
-        #                           disk traffic = this + the attached
-        #                           prefetcher's bytes_read (stats())
-        self.bytes_h2d = 0       # padded slot bytes shipped to device
-        self.prefetch_hits = 0   # misses served from the prefetcher
+        # registry-backed counters, windowed by reset_counters()
+        lbl = {"cache": self.name}
+        self._c_hits = REGISTRY.counter("store.cache.hits", **lbl)
+        self._c_hits_distinct = REGISTRY.counter(
+            "store.cache.hits_distinct", **lbl)
+        self._c_misses = REGISTRY.counter("store.cache.misses", **lbl)
+        self._c_bytes_read_sync = REGISTRY.counter(
+            "store.cache.bytes_read_sync", **lbl)
+        self._c_bytes_h2d = REGISTRY.counter(
+            "store.cache.bytes_h2d", **lbl)
+        self._c_prefetch_hits = REGISTRY.counter(
+            "store.cache.prefetch_hits", **lbl)
+        self._counters = (
+            self._c_hits, self._c_hits_distinct, self._c_misses,
+            self._c_bytes_read_sync, self._c_bytes_h2d,
+            self._c_prefetch_hits)
+        for ctr in self._counters:
+            ctr.mark()  # a fresh cache starts a fresh window
+
+    # windowed counter views (the pre-PR6 attribute surface)
+    @property
+    def hits(self) -> int:
+        """Per-request: every non-read occurrence this window."""
+        return self._c_hits.since_mark
+
+    @property
+    def hits_distinct(self) -> int:
+        """Distinct leaves resident at batch start, this window."""
+        return self._c_hits_distinct.since_mark
+
+    @property
+    def misses(self) -> int:
+        """Distinct leaves read (disk or staged), this window."""
+        return self._c_misses.since_mark
+
+    @property
+    def bytes_read_sync(self) -> int:
+        """Demand-path disk reads only; total disk traffic = this +
+        the attached prefetcher's bytes_read (stats())."""
+        return self._c_bytes_read_sync.since_mark
+
+    @property
+    def bytes_h2d(self) -> int:
+        """Padded slot bytes shipped to device, this window."""
+        return self._c_bytes_h2d.since_mark
+
+    @property
+    def prefetch_hits(self) -> int:
+        """Misses served from the prefetcher, this window."""
+        return self._c_prefetch_hits.since_mark
 
     # ------------------------------------------------------------------
     def contains(self, leaf: int) -> bool:
@@ -120,9 +177,9 @@ class DeviceLeafCache:
                 # resident (or just filled earlier in this batch):
                 # served without a read -> per-request hit; only leaves
                 # resident BEFORE the batch count as distinct hits
-                self.hits += 1
+                self._c_hits.inc()
                 if lf not in assigned:
-                    self.hits_distinct += 1
+                    self._c_hits_distinct.inc()
                 self.refbit[s] = True
                 slots[i] = s
                 assigned.setdefault(lf, s)
@@ -133,7 +190,7 @@ class DeviceLeafCache:
             self.owner[s] = lf
             self.refbit[s] = True
             assigned[lf] = s
-            self.misses += 1
+            self._c_misses.inc()
             miss_leaves.append(lf)
             miss_slots.append(s)
             slots[i] = s
@@ -150,12 +207,12 @@ class DeviceLeafCache:
                 staged = self.prefetcher.take(lf)
             if staged is not None:
                 buf[j] = staged
-                self.prefetch_hits += 1  # bytes already counted by the
-                #                          prefetcher thread
+                self._c_prefetch_hits.inc()  # bytes already counted by
+                #                              the prefetcher thread
             else:
                 self.store.read_leaf(lf, out=buf[j])
-                self.bytes_read_sync += self.store.leaf_nbytes(lf)
-        self.bytes_h2d += buf.nbytes  # real misses only, not the pad
+                self._c_bytes_read_sync.inc(self.store.leaf_nbytes(lf))
+        self._c_bytes_h2d.inc(buf.nbytes)  # real misses, not the pad
         # pad the batch to the next power of two by REPEATING the last
         # row (idempotent duplicate scatter) so the jitted scatter sees
         # O(log capacity) distinct shapes instead of one per miss count
@@ -180,12 +237,10 @@ class DeviceLeafCache:
         return self.bytes_read_sync + pf
 
     def reset_counters(self) -> None:
-        self.hits = 0
-        self.hits_distinct = 0
-        self.misses = 0
-        self.bytes_read_sync = 0
-        self.bytes_h2d = 0
-        self.prefetch_hits = 0
+        """Start a fresh per-query measurement window (counter marks;
+        the registry keeps the process-lifetime totals)."""
+        for ctr in self._counters:
+            ctr.mark()
         if self.prefetcher is not None:
             # quiesces first: a cold-pass read still in flight must not
             # land its bytes after the zeroing (bench_query_disk warm

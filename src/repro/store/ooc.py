@@ -57,11 +57,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import refine
 from repro.core.histogram import r_delta
 from repro.core.refine import INF, Gathered, ScoreCtx, default_frontier
 from repro.core.search import SearchResult
 from repro.core.summaries.pq import adc_lut_batch
+from repro.obs import OocStats
 
 from .cache import DeviceLeafCache
 from .layout import LeafStore
@@ -70,7 +72,7 @@ from .prefetch import LeafPrefetcher
 
 class OocResult(NamedTuple):
     result: SearchResult
-    stats: dict
+    stats: OocStats
 
 
 @jax.jit
@@ -240,15 +242,24 @@ def _host_refine(
     Algorithm 2 iteration search_impl runs under lax.while_loop,
     executed step by step so each iteration can perform I/O. Returns
     (SearchResult with SQUARED final pool pre-finalize sqrt applied,
-    iterations, rerank_bytes)."""
+    refinement telemetry dict, rerank_bytes).
+
+    Telemetry is read-only observation of values the loop already
+    syncs to host (active mask, ranks, bsf, next_lb) — it cannot
+    change visit order, scoring, or stopping arithmetic. Spans are
+    emitted only when tracing is enabled (obs.enabled())."""
     res = src.resident
     b, n = queries.shape
     L = res.num_leaves
     v = int(visit_batch)
     depth = max(1, int(prefetch_depth))
+    traced = obs.enabled()
 
     ctx = src.query_ctx(queries)
-    lb_sq = _filter_stage(res, queries)  # [B, L], stays on device
+    with obs.span("ooc.filter", leaves=L, lanes=b):
+        lb_sq = _filter_stage(res, queries)  # [B, L], stays on device
+        if traced:  # make the span cover the device work it launched
+            jax.block_until_ready(lb_sq)
 
     # frontier width F covers this iteration's visits, the next_lb
     # probe AND the prefetch lookahead (depth extra windows); ANY
@@ -277,9 +288,21 @@ def _host_refine(
     leaves_visited = np.zeros(b, np.int64)
     rows_scanned = np.zeros(b, np.int64)
     iters = 0
+    # refinement telemetry (read-only; see docstring)
+    refills = 0
+    stop_n = {"delta": 0, "epsilon": 0, "exhausted": 0}
+    slack_sum = {"delta": 0.0, "epsilon": 0.0}
+    slack_n = {"delta": 0, "epsilon": 0}
 
     while active.any():
+        it_span = obs.span("ooc.iteration", iter=iters)
+        it_span.__enter__()
         active_j = jnp.asarray(active)
+        # mirror frontier_tick's refill predicate (same F/lookahead/
+        # pos inputs) to count lane-refill events; pos is host-read
+        # BEFORE the tick so the count observes, never participates
+        pos_host = np.asarray(fr.pos)
+        refills += int((active & (pos_host > F - 1 - lookahead)).sum())
         fr, leaf_j = _frontier_tick(fr, lb_sq, active_j,
                                     v=v, lookahead=lookahead)
         leaf = np.asarray(leaf_j)
@@ -287,7 +310,16 @@ def _host_refine(
         rk = rank[:, None] + np.arange(v)[None, :]
         in_range = rk < max_rank
         ok = in_range & active[:, None]
-        g = src.gather(leaf, ok)
+        with obs.span("ooc.gather") as g_span:
+            # demand-path (sync) reads only: the prefetcher thread
+            # lands its bytes concurrently, so a cache.bytes_read
+            # delta here would be racy — the root span carries the
+            # authoritative total instead
+            pre_read = src.cache.bytes_read_sync if traced else 0
+            g = src.gather(leaf, ok)
+            if traced:
+                g_span.set(
+                    bytes_read_sync=src.cache.bytes_read_sync - pre_read)
 
         # overlap: stage the next `depth` visit windows while the
         # device scores this one (nearest window first — it is read
@@ -302,13 +334,16 @@ def _host_refine(
                     (np.asarray(_frontier_window(fr, d * v, v)), ok_d))
         src.prefetch(windows)
 
-        if share_gathers:
-            pool_valid = _coop_mask(leaf_j, jnp.asarray(ok), g.valid)
-            top_d, top_i = src.score(ctx, g, pool_valid, top_d, top_i,
-                                     share=True)
-        else:
-            top_d, top_i = src.score(ctx, g, g.valid, top_d, top_i,
-                                     share=False)
+        with obs.span("ooc.score", lanes=int(active.sum())):
+            if share_gathers:
+                pool_valid = _coop_mask(leaf_j, jnp.asarray(ok), g.valid)
+                top_d, top_i = src.score(ctx, g, pool_valid, top_d,
+                                         top_i, share=True)
+            else:
+                top_d, top_i = src.score(ctx, g, g.valid, top_d, top_i,
+                                         share=False)
+            if traced:
+                jax.block_until_ready(top_d)
 
         valid_np = np.asarray(g.valid)
         leaves_visited += np.where(active, in_range.sum(1), 0)
@@ -321,11 +356,42 @@ def _host_refine(
         bsf = np.asarray(top_d[:, k - 1])          # f32, sync point
         stop = refine.stop_mask(next_lb, exhausted, bsf,
                                 eps_mult, rd_sq)
+        # attribute each newly stopped lane to ONE condition
+        # (priority delta > epsilon > exhausted — a lane can satisfy
+        # several at once) and measure the slack at stop: how far past
+        # the threshold the predicate fired, in squared-distance units
+        newly = active & stop
+        if newly.any():
+            m_delta = newly & (bsf <= eps_mult * rd_sq)
+            m_eps = newly & ~m_delta & (next_lb * eps_mult > bsf)
+            m_exh = newly & ~m_delta & ~m_eps
+            stop_n["delta"] += int(m_delta.sum())
+            stop_n["epsilon"] += int(m_eps.sum())
+            stop_n["exhausted"] += int(m_exh.sum())
+            if m_delta.any():
+                s = (eps_mult * rd_sq - bsf)[m_delta]
+                slack_sum["delta"] += float(s.sum())
+                slack_n["delta"] += int(m_delta.sum())
+            # epsilon slack only over finite next_lb: an inf next_lb
+            # means the frontier pool ran dry, not a measurable margin
+            m_eps_f = m_eps & np.isfinite(next_lb)
+            if m_eps_f.any():
+                s = (next_lb * eps_mult - bsf)[m_eps_f]
+                slack_sum["epsilon"] += float(s.sum())
+                slack_n["epsilon"] += int(m_eps_f.sum())
         active = active & ~stop
         rank = rank_next
         iters += 1
+        it_span.__exit__(None, None, None)
 
-    top_d, top_i, rerank_bytes = src.finalize(ctx, top_d, top_i, k)
+    with obs.span("ooc.finalize") as f_span:
+        top_d, top_i, rerank_bytes = src.finalize(ctx, top_d, top_i, k)
+        if traced:
+            jax.block_until_ready(top_d)
+            # rerank-specific attr name: the ooc.query root owns the
+            # subtree's single "bytes_read" (total() must not double-
+            # count the rerank bytes folded into it)
+            f_span.set(bytes_read_rerank=rerank_bytes)
     result = SearchResult(
         dists=jnp.sqrt(top_d),
         ids=top_i,
@@ -333,7 +399,22 @@ def _host_refine(
         rows_scanned=jnp.asarray(rows_scanned, jnp.int32),
         lb_computed=jnp.int32(L),
     )
-    return result, iters, rerank_bytes
+    lv_total = int(leaves_visited.sum())
+    telem = {
+        "iterations": iters,
+        "frontier_refills": refills,
+        "leaves_visited": lv_total,
+        "rows_scanned": int(rows_scanned.sum()),
+        "pruning_ratio": 1.0 - lv_total / (b * L) if b * L else 0.0,
+        "stop_delta": stop_n["delta"],
+        "stop_epsilon": stop_n["epsilon"],
+        "stop_exhausted": stop_n["exhausted"],
+        "delta_slack": slack_sum["delta"] / slack_n["delta"]
+        if slack_n["delta"] else 0.0,
+        "eps_slack": slack_sum["epsilon"] / slack_n["epsilon"]
+        if slack_n["epsilon"] else 0.0,
+    }
+    return result, telem, rerank_bytes
 
 
 def make_source(store: LeafStore, cache: DeviceLeafCache, *,
@@ -417,28 +498,81 @@ def search_ooc(
             stacklevel=2)
 
     src = make_source(store, cache, prefetch=prefetch, rerank=rerank)
-    try:
-        result, iters, rerank_bytes = _host_refine(
-            src, queries, k, delta=delta, epsilon=epsilon,
-            nprobe=nprobe, visit_batch=v, share_gathers=share_gathers,
-            frontier=frontier, prefetch_depth=depth)
-    finally:
-        if own_prefetcher is not None:
-            own_prefetcher.close()
-            if cache.prefetcher is own_prefetcher:
-                cache.prefetcher = None
+    guarantee = _guarantee_kind(epsilon=epsilon, delta=delta,
+                                nprobe=nprobe)
+    root = obs.span("ooc.query", codec=store.codec, lanes=b, k=k,
+                    guarantee=guarantee, share_gathers=bool(share_gathers))
+    with root:
+        try:
+            result, telem, rerank_bytes = _host_refine(
+                src, queries, k, delta=delta, epsilon=epsilon,
+                nprobe=nprobe, visit_batch=v,
+                share_gathers=share_gathers, frontier=frontier,
+                prefetch_depth=depth)
+        finally:
+            if own_prefetcher is not None:
+                own_prefetcher.close()
+                if cache.prefetcher is own_prefetcher:
+                    cache.prefetcher = None
 
-    stats = dict(cache.stats())
-    stats["iterations"] = iters
-    stats["codec"] = store.codec
-    stats["share_gathers"] = bool(share_gathers)
-    stats["prefetch_depth"] = depth
-    stats["dataset_bytes"] = store.dataset_nbytes
-    stats["bytes_read_rerank"] = rerank_bytes
-    stats["bytes_read"] += rerank_bytes
-    if pf_used is not None:
-        if cache.prefetcher is None:  # transient pf already detached:
-            stats["bytes_read"] += pf_used.bytes_read  # fold bytes in
-        stats["prefetch_bytes_read"] = pf_used.bytes_read
-        stats["prefetch_leaves_read"] = pf_used.leaves_read
+        stats = OocStats(codec=store.codec,
+                         share_gathers=bool(share_gathers),
+                         prefetch_depth=depth,
+                         dataset_bytes=store.dataset_nbytes,
+                         bytes_read_rerank=rerank_bytes,
+                         **telem)
+        for key, val in cache.stats().items():
+            setattr(stats, key, val)
+        stats.bytes_read += rerank_bytes
+        if pf_used is not None:
+            if cache.prefetcher is None:  # transient pf detached:
+                stats.bytes_read += pf_used.bytes_read  # fold bytes in
+            stats.prefetch_bytes_read = pf_used.bytes_read
+            stats.prefetch_leaves_read = pf_used.leaves_read
+        # the SAME schema instance feeds the span tree (attrs) and the
+        # registry — the three views cannot drift
+        root.set(bytes_read=stats.bytes_read,
+                 bytes_h2d=stats.bytes_h2d,
+                 iterations=stats.iterations,
+                 frontier_refills=stats.frontier_refills,
+                 leaves_visited=stats.leaves_visited,
+                 rows_scanned=stats.rows_scanned,
+                 pruning_ratio=stats.pruning_ratio,
+                 stop_delta=stats.stop_delta,
+                 stop_epsilon=stats.stop_epsilon,
+                 stop_exhausted=stats.stop_exhausted,
+                 delta_slack=stats.delta_slack,
+                 eps_slack=stats.eps_slack)
+        _publish_ooc_metrics(stats, guarantee)
     return OocResult(result=result, stats=stats)
+
+
+def _guarantee_kind(*, epsilon: float, delta: float,
+                    nprobe: Optional[int]) -> str:
+    """Label for the guarantee tier a query ran under (the metric /
+    span ``guarantee`` label): ng (fixed rank budget) > delta-epsilon
+    (probabilistic early stop armed) > epsilon > exact."""
+    if nprobe is not None:
+        return "ng"
+    if delta < 1.0:
+        return "delta-epsilon"
+    if epsilon > 0.0:
+        return "epsilon"
+    return "exact"
+
+
+def _publish_ooc_metrics(stats: OocStats, guarantee: str) -> None:
+    """Fold one query's OocStats into the process-wide registry,
+    labeled by codec + guarantee tier."""
+    lbl = {"codec": stats.codec or "raw", "guarantee": guarantee}
+    reg = obs.REGISTRY
+    reg.counter("ooc.queries", **lbl).inc()
+    for field in ("bytes_read", "bytes_read_sync", "bytes_h2d",
+                  "bytes_read_rerank", "prefetch_bytes_read",
+                  "leaves_visited", "rows_scanned", "frontier_refills",
+                  "stop_delta", "stop_epsilon", "stop_exhausted"):
+        val = stats.get(field, 0)
+        if val:
+            reg.counter(f"ooc.{field}", **lbl).inc(val)
+    reg.histogram("ooc.iterations", **lbl).record(stats.iterations)
+    reg.histogram("ooc.pruning_ratio", **lbl).record(stats.pruning_ratio)

@@ -18,19 +18,26 @@ buys little on top of overlapping the disk latency, which dominates.
 from __future__ import annotations
 
 import collections
+import itertools
 import threading
 import time
 from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import REGISTRY
+
 from .layout import LeafStore
+
+_prefetcher_ids = itertools.count()
 
 
 class LeafPrefetcher:
-    def __init__(self, store: LeafStore, depth: int = 2):
+    def __init__(self, store: LeafStore, depth: int = 2,
+                 name: Optional[str] = None):
         self.store = store
         self.depth = int(depth)
+        self.name = name or f"prefetch{next(_prefetcher_ids)}"
         self._lock = threading.Condition()
         self._queue: collections.deque = collections.deque()
         self._staged: "collections.OrderedDict[int, np.ndarray]" = \
@@ -46,12 +53,29 @@ class LeafPrefetcher:
         # landing after the reset would pollute warm-run stats); the
         # epoch stamps each read with its measurement window so even a
         # read that outlives reset_counters' quiesce timeout cannot
-        # leak its bytes into the next window
+        # leak its bytes into the next window. Since PR 6 the counters
+        # are registry-backed (store.prefetch.* in repro.obs.REGISTRY):
+        # reset_counters() starts a window via marks, the registry
+        # keeps the process-lifetime totals.
         self._epoch = 0
-        self.bytes_read = 0          # includes speculative reads
-        self.leaves_read = 0
+        lbl = {"prefetch": self.name}
+        self._c_bytes_read = REGISTRY.counter(
+            "store.prefetch.bytes_read", **lbl)
+        self._c_leaves_read = REGISTRY.counter(
+            "store.prefetch.leaves_read", **lbl)
+        self._c_bytes_read.mark()
+        self._c_leaves_read.mark()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
+
+    @property
+    def bytes_read(self) -> int:
+        """Disk bytes read this window (includes speculative reads)."""
+        return self._c_bytes_read.since_mark
+
+    @property
+    def leaves_read(self) -> int:
+        return self._c_leaves_read.since_mark
 
     # ------------------------------------------------------------------
     def schedule(self, leaves: Sequence[int]) -> None:
@@ -134,8 +158,8 @@ class LeafPrefetcher:
                     break
                 self._lock.wait(remaining)
             self._epoch += 1
-            self.bytes_read = 0
-            self.leaves_read = 0
+            self._c_bytes_read.mark()
+            self._c_leaves_read.mark()
 
     def close(self) -> None:
         with self._lock:
@@ -170,8 +194,8 @@ class LeafPrefetcher:
                     if not self._stop and leaf in self._wanted:
                         self._staged[leaf] = buf
                     if epoch == self._epoch:  # not reset mid-read
-                        self.bytes_read += nbytes
-                        self.leaves_read += 1
+                        self._c_bytes_read.inc(nbytes)
+                        self._c_leaves_read.inc()
                     self._lock.notify_all()
         except Exception:  # I/O failure: unblock waiters, go demand-only
             with self._lock:

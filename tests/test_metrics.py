@@ -61,3 +61,53 @@ def test_mre_guards_zero_distance():
     mre = float(M.relative_error(got, true)[0])
     assert np.isfinite(mre)
     np.testing.assert_allclose(mre, 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------- edge cases (PR 6)
+def test_tied_distances_are_not_an_error():
+    """Different ids at IDENTICAL distances: recall sees a wrong id,
+    rank-paired MRE sees a perfect distance — both by design."""
+    got_ids = jnp.asarray([[5, 6]])
+    true_ids = jnp.asarray([[1, 2]])
+    tied_d = jnp.asarray([[1.0, 1.0]])
+    assert float(M.recall(got_ids, true_ids)[0]) == 0.0
+    np.testing.assert_allclose(
+        float(M.relative_error(tied_d, tied_d)[0]), 0.0, atol=1e-7)
+
+
+def test_tie_swapped_order_scores_perfect():
+    """Reordering within a distance tie must not cost recall or AP."""
+    got = jnp.asarray([[2, 1, 3]])
+    true = jnp.asarray([[1, 2, 3]])
+    assert float(M.recall(got, true)[0]) == 1.0
+    np.testing.assert_allclose(
+        float(M.average_precision(got, true)[0]), 1.0, atol=1e-6)
+
+
+def test_k_greater_than_collection():
+    """k > n: both sides pad with -1 ids / inf distances (the ng
+    incomplete-result shape). Pad slots match nothing and inf answer
+    ranks are excluded from MRE — scores stay finite."""
+    got_ids = jnp.asarray([[0, 1, -1]])
+    true_ids = jnp.asarray([[0, 1, -1]])
+    got_d = jnp.asarray([[1.0, 2.0, jnp.inf]])
+    true_d = jnp.asarray([[1.0, 2.0, jnp.inf]])
+    out = M.workload_metrics(got_ids, got_d, true_ids, true_d)
+    np.testing.assert_allclose(out["avg_recall"], 2 / 3, atol=1e-6)
+    np.testing.assert_allclose(out["map"], 2 / 3, atol=1e-6)
+    assert np.isfinite(out["mre"])
+    np.testing.assert_allclose(out["mre"], 0.0, atol=1e-7)
+
+
+def test_empty_truth_scores_zero_not_nan():
+    got_ids = jnp.zeros((2, 0), jnp.int32)
+    got_d = jnp.zeros((2, 0), jnp.float32)
+    out = M.workload_metrics(got_ids, got_d, got_ids, got_d)
+    assert out["avg_recall"] == 0.0
+    assert out["map"] == 0.0
+    assert np.isfinite(out["mre"]) and out["mre"] == 0.0
+    # a populated answer against an empty truth set is also 0, not nan
+    got = jnp.asarray([[4, 5]])
+    assert float(M.recall(got, jnp.zeros((1, 0), jnp.int32))[0]) == 0.0
+    assert float(M.average_precision(
+        got, jnp.zeros((1, 0), jnp.int32))[0]) == 0.0
