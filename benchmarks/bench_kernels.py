@@ -98,7 +98,10 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     timed = {}
     for name, (fn, operands) in cases.items():
         jitted = jax.jit(fn)
-        sec = timeit(lambda: jitted(*operands), repeats=5)
+        # default-arg binding: the thunk must close over THIS
+        # iteration's jitted/operands, not the loop variables (B023)
+        sec = timeit(lambda jf=jitted, args=operands: jf(*args),
+                     repeats=5)
         timed[name] = sec
         rows.append({"bench": "kernels", "kernel": name,
                      "us_per_call": sec * 1e6,

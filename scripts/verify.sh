@@ -23,6 +23,8 @@ mode="${1:-all}"
 WFLAGS=(-W "error::repro.store.layout.StoreFormatDeprecationWarning")
 
 run_fast() {
+  echo "== verify: static analysis (repro.analysis, docs/ANALYSIS.md) =="
+  python -m repro.analysis src/
   echo "== verify: fast tier1 subset =="
   python -m pytest -q -m tier1 "${WFLAGS[@]}"
   echo "== verify: bench snapshot smoke (compile-only, small scale) =="

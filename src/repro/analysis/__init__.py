@@ -1,0 +1,26 @@
+"""repro.analysis — the repo-invariant static-analysis pass.
+
+AST-based rules that mechanize invariants previously held by comments
+and reviewer memory: lock discipline on annotated fields
+(``guarded-by``), one-monotonic-clock discipline (``clock-
+discipline``), the documented jax/XLA traps (``jax-while-shard-map``,
+``jax-topk-on-topk``, ``jax-int32-topk``, ``jax-host-sync-in-jit``)
+and typed-stats discipline (``stats-schema``).
+
+    PYTHONPATH=src python -m repro.analysis src/
+
+exits non-zero on any unsuppressed finding. Deliberate exceptions are
+recorded in-line as ``# repro: allow[rule-id] reason`` — allows are
+validated (no reason, unknown rule, or nothing to suppress is itself
+an error). Rule catalog + annotation conventions: docs/ANALYSIS.md.
+Pure stdlib: the pass needs no jax/numpy and runs over src/ in
+seconds, so it gates CI ahead of every test job.
+"""
+
+from .core import (Allow, Finding, Module, Project, Report, Rule,
+                   all_rules, rule, run)
+
+__all__ = [
+    "Allow", "Finding", "Module", "Project", "Report", "Rule",
+    "all_rules", "rule", "run",
+]

@@ -1,0 +1,44 @@
+"""CLI: ``python -m repro.analysis [paths...]`` (default: src/).
+
+Prints one ``path:line: severity: [rule-id] message`` per unsuppressed
+finding plus a summary line; exit status 1 on any finding (including
+allow-hygiene violations), 0 on a clean pass. ``--rule`` restricts to
+a subset; ``--list-rules`` prints the catalog ids."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import core
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-invariant static analysis (docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to analyze (default: src)")
+    ap.add_argument("--rule", action="append", metavar="RULE-ID",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = core.all_rules()
+    if args.list_rules:
+        for rid in sorted(rules):
+            print(f"{rid:24s} {rules[rid].summary}")
+        return 0
+
+    project = core.Project.from_paths(args.paths or ["src"])
+    report = core.run(project, args.rule)
+    for f in report.findings:
+        print(f.format())
+    print(f"repro.analysis: {len(report.rules_run)} rules over "
+          f"{len(project.modules)} files — {len(report.findings)} "
+          f"finding(s), {len(report.suppressed)} suppressed by allows")
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,339 @@
+"""Framework for the repro static-analysis pass (docs/ANALYSIS.md).
+
+The moving parts:
+
+  Module    one parsed source file: AST + the comment map (tokenize)
+            from which both ``# guarded_by: <lock>`` annotations and
+            ``# repro: allow[rule-id] reason`` suppressions are read.
+  Project   every module under analysis plus memoized CROSS-MODULE
+            indexes (``Project.index``) — e.g. "functions whose body
+            contains lax.while_loop" — so rules that need whole-
+            program facts (the while-in-shard_map detector must see
+            through engine.py -> search.py) share one collection pass.
+  rule      registration decorator: a rule is a callable
+            ``check(project) -> iterable[Finding]`` with a stable id;
+            ``all_rules()`` imports :mod:`repro.analysis.rules` so
+            registration happens on first use.
+  run       applies rules, matches findings against allow comments,
+            and turns allow HYGIENE violations into findings of their
+            own: an allow that suppresses nothing, carries no reason,
+            or names an unknown rule is an ``allow-hygiene`` error —
+            suppressions must stay tethered to a live finding.
+
+Suppression scope: an allow covers findings on its OWN line; an allow
+on a comment-only line additionally covers the next code line (the
+idiomatic "allow comment above the offending statement" placement).
+Findings anchor at the statement's first line, so multi-line calls are
+covered by an allow on the line the call starts.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Set, Tuple)
+
+ALLOW_RE = re.compile(r"repro:\s*allow\[([A-Za-z0-9_-]+)\]\s*(.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: where, which rule, why."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    severity: str = "error"
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: {self.severity}: "
+                f"[{self.rule}] {self.message}")
+
+
+@dataclasses.dataclass
+class Allow:
+    """A parsed ``# repro: allow[rule-id] reason`` comment."""
+
+    rule: str
+    line: int
+    reason: str
+    used: bool = False
+
+
+def _relname(path: str) -> str:
+    """Repo-relative module path used for path-scoped rules (the
+    clock rule exempts ``repro/obs/``): the part after ``src/`` when
+    present, else the path as given (fixtures pass virtual repo-style
+    paths directly)."""
+    p = path.replace(os.sep, "/")
+    if "/src/" in p:
+        return p.split("/src/", 1)[1]
+    if p.startswith("src/"):
+        return p[len("src/"):]
+    return p.lstrip("./")
+
+
+class Module:
+    """One parsed file: source, AST, comments, allows."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.relname = _relname(path)
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        #: line -> full comment text (including the leading '#')
+        self.comments: Dict[int, str] = {}
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                self.comments[tok.start[0]] = tok.string
+        self.allows: List[Allow] = []
+        #: (rule, covered-line) -> Allow
+        self._allow_map: Dict[Tuple[str, int], Allow] = {}
+        for line, text in sorted(self.comments.items()):
+            m = ALLOW_RE.search(text)
+            if not m:
+                continue
+            al = Allow(rule=m.group(1), line=line,
+                       reason=m.group(2).strip())
+            self.allows.append(al)
+            self._allow_map[(al.rule, line)] = al
+            if self.comment_only(line):
+                self._allow_map[(al.rule, self._next_code_line(line))] = al
+
+    def comment_only(self, line: int) -> bool:
+        text = self.lines[line - 1] if line <= len(self.lines) else ""
+        return text.lstrip().startswith("#")
+
+    def _next_code_line(self, line: int) -> int:
+        for i in range(line + 1, len(self.lines) + 1):
+            text = self.lines[i - 1].strip()
+            if text and not text.startswith("#"):
+                return i
+        return -1
+
+    def allow_for(self, rule: str, line: int) -> Optional[Allow]:
+        return self._allow_map.get((rule, line))
+
+    def comment_in_range(self, lo: int, hi: int,
+                         pattern: "re.Pattern") -> Optional["re.Match"]:
+        """First comment between lines lo..hi (inclusive) matching
+        ``pattern`` — how the guarded-by rule reads its trailing
+        ``# guarded_by: <lock>`` annotations off multi-line statements."""
+        for line in range(lo, hi + 1):
+            text = self.comments.get(line)
+            if text:
+                m = pattern.search(text)
+                if m:
+                    return m
+        return None
+
+
+class Project:
+    """All modules under analysis + shared memoized indexes."""
+
+    def __init__(self, modules: Sequence[Module],
+                 errors: Optional[List[Finding]] = None):
+        self.modules = list(modules)
+        self.errors: List[Finding] = list(errors or [])
+        self._indexes: Dict[str, object] = {}
+
+    @classmethod
+    def from_paths(cls, paths: Iterable[str]) -> "Project":
+        files: List[str] = []
+        for p in paths:
+            if os.path.isdir(p):
+                for root, dirs, names in os.walk(p):
+                    dirs[:] = sorted(d for d in dirs
+                                     if d != "__pycache__")
+                    files.extend(os.path.join(root, nm)
+                                 for nm in sorted(names)
+                                 if nm.endswith(".py"))
+            else:
+                files.append(p)
+        mods, errors = [], []
+        for f in files:
+            with open(f, "r", encoding="utf-8") as fh:
+                src = fh.read()
+            try:
+                mods.append(Module(f, src))
+            except SyntaxError as e:
+                errors.append(Finding(
+                    "parse-error", f, e.lineno or 1,
+                    f"could not parse: {e.msg}"))
+        return cls(mods, errors)
+
+    @classmethod
+    def from_sources(cls, sources: Dict[str, str]) -> "Project":
+        """In-memory project for rule fixtures: {virtual-path: source}.
+        Paths should look repo-relative (``repro/x/y.py``) so
+        path-scoped rules behave as they would on disk."""
+        return cls([Module(p, s) for p, s in sources.items()])
+
+    def index(self, key: str,
+              build: Callable[["Project"], object]) -> object:
+        if key not in self._indexes:
+            self._indexes[key] = build(self)
+        return self._indexes[key]
+
+
+# ----------------------------------------------------------- rule registry
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    check: Callable[[Project], Iterable[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, summary: str):
+    """Register a project-level rule under a stable kebab-case id."""
+
+    def deco(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        RULES[rule_id] = Rule(rule_id, summary, fn)
+        return fn
+
+    return deco
+
+
+def all_rules() -> Dict[str, Rule]:
+    from . import rules  # noqa: F401 — registers rules on import
+    return dict(RULES)
+
+
+# ------------------------------------------------------------- AST helpers
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def terminal(dotted: Optional[str]) -> Optional[str]:
+    """Last component of a dotted name ('jax.lax.top_k' -> 'top_k')."""
+    return dotted.rsplit(".", 1)[-1] if dotted else None
+
+
+def call_target(node: ast.Call) -> Optional[str]:
+    return terminal(dotted_name(node.func))
+
+
+def functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield n
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def assign_target_names(stmt: ast.stmt) -> Set[str]:
+    """Plain-Name targets of an assignment, through tuple unpacking."""
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    out: Set[str] = set()
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+def stmts_in_order(fn: ast.AST) -> Iterator[ast.stmt]:
+    """Every statement under ``fn`` in source order, descending into
+    compound bodies but NOT into nested function/class definitions —
+    the unit of the intra-procedural taint rules."""
+    body = getattr(fn, "body", [])
+    stack = list(reversed(body))
+    while stack:
+        st = stack.pop()
+        yield st
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            continue
+        children: List[ast.stmt] = []
+        for field in ("body", "orelse", "finalbody"):
+            children.extend(getattr(st, field, []))
+        for h in getattr(st, "handlers", []):
+            children.extend(h.body)
+        stack.extend(reversed(children))
+
+
+# ------------------------------------------------------------------ runner
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]                  # unsuppressed + hygiene
+    suppressed: List[Tuple[Finding, Allow]]
+    rules_run: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def run(project: Project,
+        rule_ids: Optional[Sequence[str]] = None) -> Report:
+    rules = all_rules()
+    if rule_ids is None:
+        ids = sorted(rules)
+    else:
+        unknown = [r for r in rule_ids if r not in rules]
+        if unknown:
+            raise KeyError(f"unknown rule id(s): {unknown}")
+        ids = list(rule_ids)
+    raw: List[Finding] = list(project.errors)
+    for rid in ids:
+        raw.extend(rules[rid].check(project))
+    mods = {m.path: m for m in project.modules}
+    keep: List[Finding] = []
+    suppressed: List[Tuple[Finding, Allow]] = []
+    for f in raw:
+        mod = mods.get(f.path)
+        al = mod.allow_for(f.rule, f.line) if mod else None
+        if al is not None:
+            al.used = True
+            suppressed.append((f, al))
+        else:
+            keep.append(f)
+    # allow hygiene: every allow must name a real rule, give a reason,
+    # and actually suppress something
+    for mod in project.modules:
+        for al in mod.allows:
+            if al.rule not in rules:
+                keep.append(Finding(
+                    "allow-hygiene", mod.path, al.line,
+                    f"allow names unknown rule {al.rule!r}"))
+            elif al.rule not in ids:
+                continue  # rule not run this pass: usage unknowable
+            elif not al.reason:
+                keep.append(Finding(
+                    "allow-hygiene", mod.path, al.line,
+                    f"allow[{al.rule}] without a reason — say why the "
+                    "finding is acceptable"))
+            elif not al.used:
+                keep.append(Finding(
+                    "allow-hygiene", mod.path, al.line,
+                    f"unused allow[{al.rule}]: suppresses no finding "
+                    "(stale after a fix? delete it)"))
+    keep.sort(key=lambda f: (f.path, f.line, f.rule))
+    suppressed.sort(key=lambda p: (p[0].path, p[0].line, p[0].rule))
+    return Report(keep, suppressed, ids)

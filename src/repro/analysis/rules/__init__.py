@@ -1,0 +1,7 @@
+"""Rule modules — importing this package registers every rule with
+:mod:`repro.analysis.core`. New rules: add a module here, decorate the
+check with ``@core.rule(...)``, import it below, and give it a
+positive + negative fixture in tests/test_analysis.py (the meta test
+fails otherwise). docs/ANALYSIS.md is the catalog."""
+
+from . import clock, guarded_by, jax_traps, stats_schema  # noqa: F401

@@ -1,0 +1,51 @@
+"""clock-discipline: one monotonic clock for every duration.
+
+``obs.now`` (= time.perf_counter, defined once in repro/obs/trace.py)
+is THE clock of the repo: queue-wait arithmetic subtracts stamps taken
+in different modules, so any module reading its own clock re-creates
+the PR 6 serve bug (time.monotonic in batching vs perf_counter in
+launch/serve made the subtraction incoherent). Outside ``repro/obs/``
+no module may read a clock directly — flag both ``time.<clock>()``
+attribute reads and ``from time import <clock>``. ``time.sleep`` is
+not a clock read and stays legal.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .. import core
+from ..core import Finding, Project
+
+CLOCKS = frozenset({
+    "time", "time_ns", "monotonic", "monotonic_ns", "perf_counter",
+    "perf_counter_ns", "process_time", "process_time_ns",
+})
+EXEMPT_PREFIX = "repro/obs/"
+
+
+@core.rule("clock-discipline",
+           "no direct time.* clock reads outside repro/obs (use obs.now)")
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        if mod.relname.startswith(EXEMPT_PREFIX):
+            continue
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "time"
+                    and node.attr in CLOCKS):
+                yield Finding(
+                    "clock-discipline", mod.path, node.lineno,
+                    f"direct clock read time.{node.attr} — use "
+                    "repro.obs.now so every duration is on the one "
+                    "monotonic clock")
+            elif (isinstance(node, ast.ImportFrom)
+                    and node.module == "time"):
+                for alias in node.names:
+                    if alias.name in CLOCKS:
+                        yield Finding(
+                            "clock-discipline", mod.path, node.lineno,
+                            f"'from time import {alias.name}' — use "
+                            "repro.obs.now instead of a private clock")

@@ -1,0 +1,96 @@
+"""guarded-by: lock-discipline checking for annotated fields.
+
+Convention (docs/ANALYSIS.md): a field assignment in a class carrying
+a trailing ``# guarded_by: <lock>`` comment declares that every OTHER
+``self.<field>`` read/write in that class must sit lexically inside
+``with self.<lock>:``. ``__init__`` is exempt (the object is not yet
+shared). The check is class-scoped and lexical — accesses from outside
+the class, or through an alias, are invisible; the annotation is a
+contract for the class's own methods, which is where the prefetcher's
+"mutated ONLY under self._lock" comment lived unchecked.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Set
+
+from .. import core
+from ..core import Finding, Module, Project
+
+GUARD_RE = re.compile(r"#\s*guarded_by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+
+def _declared(mod: Module, cls: ast.ClassDef) -> Dict[str, str]:
+    """{field: lock} from annotated ``self.<field> = ...`` statements."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(cls):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        fields = [t.attr for t in targets
+                  if isinstance(t, ast.Attribute)
+                  and isinstance(t.value, ast.Name)
+                  and t.value.id == "self"]
+        if not fields:
+            continue
+        m = mod.comment_in_range(
+            node.lineno, node.end_lineno or node.lineno, GUARD_RE)
+        if m:
+            for f in fields:
+                out[f] = m.group(1)
+    return out
+
+
+def _check_fn(mod: Module, fn: ast.AST, guarded: Dict[str, str],
+              out: List[Finding]) -> None:
+    def walk(node: ast.AST, held: Set[str]) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            newly = set()
+            for item in node.items:
+                d = core.dotted_name(item.context_expr)
+                if d and d.startswith("self."):
+                    newly.add(d[len("self."):])
+                walk(item.context_expr, held)
+                if item.optional_vars is not None:
+                    walk(item.optional_vars, held)
+            for st in node.body:
+                walk(st, held | newly)
+            return
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in guarded
+                and guarded[node.attr] not in held):
+            out.append(Finding(
+                "guarded-by", mod.path, node.lineno,
+                f"'self.{node.attr}' is guarded_by "
+                f"'{guarded[node.attr]}' but accessed outside "
+                f"'with self.{guarded[node.attr]}:'"))
+        for child in ast.iter_child_nodes(node):
+            walk(child, held)
+
+    for st in getattr(fn, "body", []):
+        walk(st, set())
+
+
+@core.rule("guarded-by",
+           "annotated fields only touched under their declared lock")
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        for cls in [n for n in ast.walk(mod.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            guarded = _declared(mod, cls)
+            if not guarded:
+                continue
+            findings: List[Finding] = []
+            for item in cls.body:
+                if not isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if item.name == "__init__":
+                    continue  # not yet shared across threads
+                _check_fn(mod, item, guarded, findings)
+            yield from findings

@@ -1,0 +1,297 @@
+"""jax/XLA trap detectors — the repo's hard-won pitfalls, mechanized.
+
+  jax-while-shard-map   a lax.while_loop reachable from inside a
+                        shard_map'ed closure. On the pinned jax 0.4.37
+                        this MISCOMPILES under jit (inner or outer):
+                        the refinement loop exits early with silently
+                        wrong neighbors (ROADMAP pin notes). Detection
+                        is cross-module: pass 1 collects every
+                        function whose body lexically contains a
+                        while_loop, pass 2 flags while_loops (and
+                        calls to collected functions) inside closures
+                        handed to shard_map.
+  jax-topk-on-topk      a top_k whose operand derives from another
+                        top_k. XLA:CPU rewrites a lone TopK to its
+                        fast custom call but leaves a dependent TopK
+                        as a full O(R log R) sort — measured ~70x
+                        slower at cooperative width (docs/PERF.md).
+                        Intra-procedural forward taint.
+  jax-int32-topk        a top_k keyed on integer data: the int TopK
+                        path is ~60x slower than f32 on XLA:CPU
+                        (docs/PERF.md) — rank/bitcast the key into
+                        f32 instead. Flags an int-cast in the operand
+                        expression or one assignment upstream.
+  jax-host-sync-in-jit  .item() / np.asarray / jax.debug.callback on
+                        values derived from the parameters of a
+                        function that is jitted (decorator, jax.jit(f)
+                        call, or pallas_call kernel): a host sync on a
+                        tracer either fails to trace or silently
+                        serializes dispatch.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from .. import core
+from ..core import Finding, Module, Project
+
+_WHILE = "while_loop"
+_TOPK = "top_k"
+_INT_DTYPES = frozenset({
+    "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64",
+})
+
+
+# ------------------------------------------------- while-in-shard_map
+def _while_fns(project: Project) -> Set[str]:
+    """Names of functions whose body lexically contains a
+    lax.while_loop call (project-wide, name-keyed)."""
+    out: Set[str] = set()
+    for mod in project.modules:
+        for fn in core.functions(mod.tree):
+            for n in ast.walk(fn):
+                if (isinstance(n, ast.Call)
+                        and core.call_target(n) == _WHILE):
+                    out.add(fn.name)
+                    break
+    return out
+
+
+def _closure_of(call: ast.Call,
+                local_fns: Dict[str, ast.FunctionDef]
+                ) -> Optional[ast.AST]:
+    """The function body handed to a shard_map(...) call, when it is
+    resolvable in this module: a lambda, or a Name bound to a local
+    def."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        return local_fns.get(arg.id)
+    return None
+
+
+@core.rule("jax-while-shard-map",
+           "lax.while_loop reachable inside a shard_map'ed closure "
+           "(0.4.37 miscompile)")
+def check_while_shard_map(project: Project) -> Iterator[Finding]:
+    wf: Set[str] = project.index("while_fns", _while_fns)
+    for mod in project.modules:
+        local_fns = {f.name: f for f in core.functions(mod.tree)}
+        for n in ast.walk(mod.tree):
+            if not (isinstance(n, ast.Call)
+                    and core.call_target(n) == "shard_map"):
+                continue
+            closure = _closure_of(n, local_fns)
+            if closure is None:
+                continue
+            cname = getattr(closure, "name", "<lambda>")
+            for c in ast.walk(closure):
+                if not isinstance(c, ast.Call):
+                    continue
+                t = core.call_target(c)
+                if t == _WHILE:
+                    yield Finding(
+                        "jax-while-shard-map", mod.path, c.lineno,
+                        "lax.while_loop lexically inside the "
+                        f"shard_map'ed closure '{cname}' — "
+                        "miscompiles under jit on jax 0.4.37 "
+                        "(ROADMAP pin notes): run the shard_map "
+                        "eagerly or hoist the loop")
+                elif t in wf and t != cname:
+                    yield Finding(
+                        "jax-while-shard-map", mod.path, c.lineno,
+                        f"call to {t}() (contains lax.while_loop) "
+                        f"inside the shard_map'ed closure '{cname}' "
+                        "— miscompiles under jit on jax 0.4.37 "
+                        "(ROADMAP pin notes): keep this call path "
+                        "eager, or prove the pin moved")
+
+
+# ------------------------------------------------------ topk-on-topk
+def _topk_calls(node: ast.AST) -> List[ast.Call]:
+    return [n for n in ast.walk(node)
+            if isinstance(n, ast.Call)
+            and core.call_target(n) == _TOPK]
+
+
+@core.rule("jax-topk-on-topk",
+           "top_k operand derived from another top_k (XLA:CPU full-"
+           "sort fallback)")
+def check_topk_on_topk(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        for fn in core.functions(mod.tree):
+            tainted: Set[str] = set()
+            for st in core.stmts_in_order(fn):
+                for call in _topk_calls(st):
+                    if not call.args:
+                        continue
+                    operand = call.args[0]
+                    dependent = (_topk_calls(operand)
+                                 or core.names_in(operand) & tainted)
+                    if dependent:
+                        yield Finding(
+                            "jax-topk-on-topk", mod.path, call.lineno,
+                            "top_k operand derives from another "
+                            "top_k: XLA:CPU lowers the dependent "
+                            "TopK as a full O(R log R) sort, ~70x "
+                            "slower (docs/PERF.md) — restructure to "
+                            "a single TopK (see "
+                            "_select_k_by_d_id_shared)")
+                if isinstance(st, (ast.Assign, ast.AugAssign,
+                                   ast.AnnAssign)) and st.value:
+                    if (_topk_calls(st.value)
+                            or core.names_in(st.value) & tainted):
+                        tainted |= core.assign_target_names(st)
+
+
+# -------------------------------------------------------- int32-topk
+def _has_int_cast(node: ast.AST) -> bool:
+    """True if the expression subtree contains an integer-dtype cast:
+    x.astype(jnp.int32) / x.astype("int32") / jnp.int32(x) /
+    asarray(x, jnp.int32) and friends."""
+    for n in ast.walk(node):
+        if not isinstance(n, ast.Call):
+            continue
+        t = core.call_target(n)
+        if t in _INT_DTYPES:
+            return True
+        if t in ("astype", "asarray", "array", "full", "zeros",
+                 "ones", "arange"):
+            cands = list(n.args) + [kw.value for kw in n.keywords
+                                    if kw.arg == "dtype"]
+            for a in cands:
+                if core.terminal(core.dotted_name(a)) in _INT_DTYPES:
+                    return True
+                if (isinstance(a, ast.Constant)
+                        and a.value in _INT_DTYPES):
+                    return True
+    return False
+
+
+@core.rule("jax-int32-topk",
+           "top_k keyed on integer data (XLA:CPU int TopK ~60x "
+           "slower than f32)")
+def check_int_topk(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        for fn in core.functions(mod.tree):
+            assigns: Dict[str, List[ast.expr]] = {}
+            for st in core.stmts_in_order(fn):
+                for call in _topk_calls(st):
+                    if not call.args:
+                        continue
+                    operand = call.args[0]
+                    inty = _has_int_cast(operand)
+                    if not inty and isinstance(operand, ast.Name):
+                        inty = any(_has_int_cast(v) for v
+                                   in assigns.get(operand.id, []))
+                    if inty:
+                        yield Finding(
+                            "jax-int32-topk", mod.path, call.lineno,
+                            "top_k keyed on an integer operand: the "
+                            "int TopK path is ~60x slower than f32 "
+                            "on XLA:CPU (docs/PERF.md) — rank or "
+                            "bitcast the key into f32")
+                if isinstance(st, (ast.Assign, ast.AnnAssign)) \
+                        and st.value is not None:
+                    for nm in core.assign_target_names(st):
+                        assigns.setdefault(nm, []).append(st.value)
+
+
+# -------------------------------------------------- host-sync-in-jit
+def _jitted_fns(project: Project) -> Set[str]:
+    """Names of functions that run as traced bodies: decorated with
+    jit (directly or via functools.partial), passed to a jax.jit(...)
+    call, or handed to pallas_call as the kernel."""
+    names: Set[str] = set()
+    for mod in project.modules:
+        for n in ast.walk(mod.tree):
+            if not isinstance(n, ast.Call):
+                continue
+            t = core.call_target(n)
+            if t in ("jit", "pallas_call") and n.args:
+                arg = n.args[0]
+                if (isinstance(arg, ast.Call)
+                        and core.call_target(arg) == "partial"
+                        and arg.args):
+                    arg = arg.args[0]
+                nm = core.terminal(core.dotted_name(arg))
+                if nm:
+                    names.add(nm)
+        for fn in core.functions(mod.tree):
+            for dec in fn.decorator_list:
+                dt = core.terminal(core.dotted_name(dec))
+                if dt == "jit":
+                    names.add(fn.name)
+                elif isinstance(dec, ast.Call):
+                    ct = core.call_target(dec)
+                    if ct == "jit":
+                        names.add(fn.name)
+                    elif ct == "partial" and dec.args and \
+                            core.terminal(core.dotted_name(
+                                dec.args[0])) == "jit":
+                        names.add(fn.name)
+    return names
+
+
+_SYNC_NP = frozenset({"np.asarray", "numpy.asarray", "onp.asarray"})
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    a = fn.args
+    out = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        out.add(a.vararg.arg)
+    if a.kwarg:
+        out.add(a.kwarg.arg)
+    return out
+
+
+def _check_jit_body(mod: Module, fn: ast.FunctionDef
+                    ) -> Iterator[Finding]:
+    tainted = _param_names(fn)
+    for st in core.stmts_in_order(fn):
+        for n in ast.walk(st):
+            if not isinstance(n, ast.Call):
+                continue
+            d = core.dotted_name(n.func)
+            t = core.terminal(d)
+            if (t == "item" and isinstance(n.func, ast.Attribute)
+                    and core.names_in(n.func.value) & tainted):
+                yield Finding(
+                    "jax-host-sync-in-jit", mod.path, n.lineno,
+                    f".item() on a traced value inside jitted "
+                    f"'{fn.name}' — host sync on a tracer")
+            elif d in _SYNC_NP and n.args \
+                    and core.names_in(n.args[0]) & tainted:
+                yield Finding(
+                    "jax-host-sync-in-jit", mod.path, n.lineno,
+                    f"np.asarray on a traced value inside jitted "
+                    f"'{fn.name}' — host sync on a tracer (use "
+                    "jnp.asarray)")
+            elif d is not None and d.endswith("debug.callback"):
+                yield Finding(
+                    "jax-host-sync-in-jit", mod.path, n.lineno,
+                    f"jax.debug.callback inside jitted '{fn.name}' "
+                    "— a host round-trip per call; keep it out of "
+                    "hot traced bodies")
+        if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)) \
+                and getattr(st, "value", None) is not None \
+                and core.names_in(st.value) & tainted:
+            tainted |= core.assign_target_names(st)
+
+
+@core.rule("jax-host-sync-in-jit",
+           "host sync (.item / np.asarray / debug.callback) on "
+           "tracers inside jit/pallas bodies")
+def check_host_sync(project: Project) -> Iterator[Finding]:
+    jitted: Set[str] = project.index("jitted_fns", _jitted_fns)
+    for mod in project.modules:
+        for fn in core.functions(mod.tree):
+            if fn.name in jitted:
+                yield from _check_jit_body(mod, fn)

@@ -1,0 +1,55 @@
+"""stats-schema: no new free-form dict stats where a typed schema
+exists.
+
+PR 6 replaced the ``last_ooc_stats`` free-form dict with the typed
+``repro.obs.stats.OocStats`` schema precisely because ad-hoc dicts
+drift (three views of the same counters disagreed). This rule keeps
+that from regressing: outside ``repro/obs/``, a dict literal whose
+string keys overlap ``OocStats`` field names in >= 3 places is a new
+stats surface that should be the typed schema (or an extension of it)
+instead. The field list is read from the live dataclass so the rule
+tracks schema growth automatically.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import FrozenSet, Iterator
+
+from .. import core
+from ..core import Finding, Project
+
+_MIN_OVERLAP = 3
+EXEMPT_PREFIX = "repro/obs/"
+
+
+def _schema_fields() -> FrozenSet[str]:
+    from repro.obs.stats import OocStats
+    return frozenset(f.name for f in dataclasses.fields(OocStats))
+
+
+@core.rule("stats-schema",
+           "free-form stats dicts duplicating the typed obs.stats "
+           "schema")
+def check(project: Project) -> Iterator[Finding]:
+    fields = _schema_fields()
+    for mod in project.modules:
+        if mod.relname.startswith(EXEMPT_PREFIX):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Dict):
+                continue
+            keys = {k.value for k in node.keys
+                    if isinstance(k, ast.Constant)
+                    and isinstance(k.value, str)}
+            overlap = sorted(keys & fields)
+            if len(overlap) >= _MIN_OVERLAP:
+                shown = ", ".join(overlap[:4])
+                if len(overlap) > 4:
+                    shown += ", ..."
+                yield Finding(
+                    "stats-schema", mod.path, node.lineno,
+                    f"free-form dict duplicates {len(overlap)} typed "
+                    f"OocStats fields ({shown}) — construct/extend "
+                    "the typed schema instead (repro.obs.stats)")

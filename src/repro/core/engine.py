@@ -287,6 +287,7 @@ class DistributedEngine:
                 data=sq[3], ids=sq[4], row_norms=sq[5])
             # search_impl, not search: an inner jit under shard_map
             # miscompiles the refinement loop on jax 0.4.x.
+            # repro: allow[jax-while-shard-map] deliberate: this closure is dispatched ONLY through the eager compat.shard_map below (never under jit) precisely because of the 0.4.37 miscompile — ROADMAP pin notes
             res = search_impl(
                 lidx, q, k, delta=delta, epsilon=epsilon,
                 nprobe=nprobe, visit_batch=visit_batch,

@@ -71,7 +71,7 @@ def pq_train(
         return jnp.stack(cents)  # [m, K, dsub]
 
     cents = train_codebooks(xf @ rot, key)
-    for it in range(opq_iters):
+    for _it in range(opq_iters):
         codes = pq_encode(PQCodebook(cents, rot), x)
         recon = pq_reconstruct(PQCodebook(cents, jnp.eye(d)), codes)
         # Procrustes: R = argmin ||X R - recon||_F  =>  R = U V^T

@@ -13,10 +13,11 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Callable, Dict, Iterator, Optional
 
 import jax
+
+from repro.obs import now
 
 
 class Prefetcher:
@@ -41,13 +42,13 @@ class Prefetcher:
     def _worker(self):
         step = self.step
         while not self._stop.is_set():
-            t0 = time.perf_counter()
+            t0 = now()
             try:
                 batch = self.make_batch(step)
             except Exception as e:  # pragma: no cover - defensive
                 self._q.put(e)
                 return
-            dt = time.perf_counter() - t0
+            dt = now() - t0
             if self._ema is None:
                 self._ema = dt
             else:

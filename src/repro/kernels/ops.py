@@ -251,6 +251,7 @@ def _select_k_by_d_id(dists, ids, kk: int):
         dists < thr, jnp.float32(jnp.inf),
         jnp.where(dists == thr, -ids.astype(jnp.float32),
                   jnp.float32(-jnp.inf)))
+    # repro: allow[jax-topk-on-topk] deliberate trade-off documented above: this is the generic per-row-ids fallback (property tests); real call sites use the single-TopK _select_k_by_d_id_shared
     _, pos = jax.lax.top_k(key, kk)
     sel_d = jnp.take_along_axis(dists, pos, axis=1)
     sel_i = jnp.take_along_axis(ids, pos, axis=1)

@@ -6,7 +6,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse  # noqa: E402
 import json  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
 from typing import Any, Dict, Optional  # noqa: E402
 
@@ -16,6 +15,7 @@ from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
+from repro.obs import now  # noqa: E402
 from repro.configs import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
                            shape_applicable)
 from repro.launch import analytic  # noqa: E402
@@ -114,7 +114,7 @@ def lower_cell(
     in_abs = params_mod.abstract(in_specs)
     in_sh = params_mod.shardings(in_specs, rules, mesh)
 
-    t0 = time.time()
+    t0 = now()
     if shape.kind == "train":
         ocfg = _opt_cfg(arch)
         accum = grad_accum if grad_accum is not None \
@@ -144,13 +144,13 @@ def lower_cell(
         )
         lowered = fn.lower(p_abs, in_abs["tokens"], in_abs["cache"],
                            in_abs["pos"])
-    t_lower = time.time() - t0
+    t_lower = now() - t0
     if act_ctx is not None:
         act_ctx.__exit__()
 
-    t0 = time.time()
+    t0 = now()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = now() - t0
 
     mf = roof.model_flops(cfg, shape, cfg.active_param_count())
     accum = (grad_accum if grad_accum is not None

@@ -206,7 +206,8 @@ def run_blocks(
         caches_list = []
         g = cfg.num_blocks
         for i in range(g):
-            bp = jax.tree_util.tree_map(lambda a: a[i], stacked_params)
+            bp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                        stacked_params)
             (x, moe_total), c = body((x, moe_total), bp)
             caches_list.append(c)
         caches = (jax.tree_util.tree_map(
@@ -265,8 +266,10 @@ def decode_blocks(stacked_params, x, cfg: ModelConfig, stacked_cache, pos):
     else:
         outs = []
         for i in range(cfg.num_blocks):
-            bp = jax.tree_util.tree_map(lambda a: a[i], stacked_params)
-            bc = jax.tree_util.tree_map(lambda a: a[i], stacked_cache)
+            bp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                        stacked_params)
+            bc = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                        stacked_cache)
             x, nc = body(x, (bp, bc))
             outs.append(nc)
         new_cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)

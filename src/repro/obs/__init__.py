@@ -10,9 +10,14 @@ Two halves (docs/OBSERVABILITY.md):
            gauges / log-bucketed histograms (p50/p95/p99).
 
 ``OocStats`` is the typed per-query out-of-core telemetry schema both
-halves share with the store/engine layer.
+halves share with the store/engine layer. ``lockorder`` is the
+debug-mode lock-order recorder (wrap locks, run a workload,
+``assert_acyclic()``) — the dynamic complement to the static
+guarded-by pass in :mod:`repro.analysis`.
 """
 
+from .lockorder import (LockOrderError, LockOrderRecorder, wrap
+                        as wrap_lock)
 from .metrics import (GROWTH, REGISTRY, Counter, Gauge, Histogram,
                       MetricsRegistry, registry)
 from .stats import OocStats
@@ -23,6 +28,7 @@ from .trace import (NULL_SPAN, QueryProfile, Span, Tracer,
 
 __all__ = [
     "GROWTH", "REGISTRY", "Counter", "Gauge", "Histogram",
+    "LockOrderError", "LockOrderRecorder", "wrap_lock",
     "MetricsRegistry", "registry", "OocStats", "NULL_SPAN",
     "QueryProfile", "Span", "Tracer", "chrome_events", "clear",
     "disable", "dump_chrome_trace", "enable", "enabled",

@@ -136,8 +136,8 @@ class Tracer:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._ids = itertools.count()
-        self._spans: List[Span] = []
+        self._ids = itertools.count()             # guarded_by: _lock
+        self._spans: List[Span] = []              # guarded_by: _lock
         self._local = threading.local()
 
     # ------------------------------------------------------- internals

@@ -24,6 +24,7 @@ stay bounded exactly like the prompt buckets.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import defaultdict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -106,23 +107,33 @@ def retrieval_groups(
 
 class Scheduler:
     """Length-bucketed FIFO batching + the deadline-aware retrieval
-    front."""
+    front.
+
+    Queue state is lock-guarded (checked guarded_by annotations,
+    docs/ANALYSIS.md): the async-serving ROADMAP item has submitters
+    and the drain loop on different threads, so submit/next_batch must
+    already be safe to interleave."""
 
     def __init__(self, max_batch: int = 8, min_bucket: int = 16):
         self.max_batch = max_batch
         self.min_bucket = min_bucket
-        self.queues: Dict[int, List[Request]] = defaultdict(list)
-        self.completed: Dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()
+        self.queues: Dict[int, List[Request]] = \
+            defaultdict(list)                     # guarded_by: _lock
+        self.completed: Dict[int, np.ndarray] = {}  # guarded_by: _lock
 
     def submit(self, req: Request):
-        self.queues[bucket_of(len(req.prompt), self.min_bucket)].append(req)
+        bucket = bucket_of(len(req.prompt), self.min_bucket)
+        with self._lock:
+            self.queues[bucket].append(req)
 
     def next_batch(self) -> Optional[Tuple[int, List[Request]]]:
-        for bucket, q in sorted(self.queues.items()):
-            if q:
-                take = q[: self.max_batch]
-                self.queues[bucket] = q[len(take):]
-                return bucket, take
+        with self._lock:
+            for bucket, q in sorted(self.queues.items()):
+                if q:
+                    take = q[: self.max_batch]
+                    self.queues[bucket] = q[len(take):]
+                    return bucket, take
         return None
 
     def pad_prompts(self, bucket: int, reqs: List[Request]) -> np.ndarray:

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import functools
 import itertools
+import threading
 from typing import List, Optional, Sequence
 
 import jax
@@ -73,12 +74,22 @@ class DeviceLeafCache:
         self.prefetcher = prefetcher
         self.name = name or f"cache{next(_cache_ids)}"
         m, c = store.max_leaf, store.payload_cols
+        # the CLOCK state is lock-guarded (checked guarded_by
+        # annotations, docs/ANALYSIS.md): the continuous-batching
+        # ROADMAP item makes engine.query re-entrant, so concurrent
+        # get_slots calls must see a consistent slot map. RLock —
+        # get_slots holds it across _evict_one/_fill, which
+        # re-acquire. Lock order (asserted by the obs lock-order
+        # recorder in tests): cache._lock -> prefetcher._lock, never
+        # the reverse.
+        self._lock = threading.RLock()
         self.slots = jnp.zeros((self.capacity, m, c),
-                               jnp.dtype(store.data_dtype))
-        self.slot_of: dict = {}                       # leaf -> slot
-        self.owner = np.full(self.capacity, -1, np.int64)
-        self.refbit = np.zeros(self.capacity, bool)
-        self.hand = 0
+                               jnp.dtype(store.data_dtype))  # guarded_by: _lock
+        self.slot_of: dict = {}      # leaf -> slot   # guarded_by: _lock
+        self.owner = np.full(self.capacity, -1,
+                             np.int64)                # guarded_by: _lock
+        self.refbit = np.zeros(self.capacity, bool)   # guarded_by: _lock
+        self.hand = 0                                 # guarded_by: _lock
         # registry-backed counters, windowed by reset_counters()
         lbl = {"cache": self.name}
         self._c_hits = REGISTRY.counter("store.cache.hits", **lbl)
@@ -136,23 +147,25 @@ class DeviceLeafCache:
         effects — unlike get_slots this neither touches the CLOCK
         reference bit nor counts a hit). The prefetch scheduler uses
         it to skip staging leaves that could never miss."""
-        return int(leaf) in self.slot_of
+        with self._lock:
+            return int(leaf) in self.slot_of
 
     def _evict_one(self, pinned: set) -> int:
         """CLOCK: advance the hand, clearing reference bits, until an
         unpinned slot with refbit=0 comes up."""
-        for _ in range(2 * self.capacity + 1):
-            s = self.hand
-            self.hand = (self.hand + 1) % self.capacity
-            if s in pinned:
-                continue
-            if self.refbit[s]:
-                self.refbit[s] = False
-                continue
-            if self.owner[s] >= 0:
-                del self.slot_of[int(self.owner[s])]
-            self.owner[s] = -1
-            return s
+        with self._lock:
+            for _ in range(2 * self.capacity + 1):
+                s = self.hand
+                self.hand = (self.hand + 1) % self.capacity
+                if s in pinned:
+                    continue
+                if self.refbit[s]:
+                    self.refbit[s] = False
+                    continue
+                if self.owner[s] >= 0:
+                    del self.slot_of[int(self.owner[s])]
+                self.owner[s] = -1
+                return s
         raise RuntimeError(
             f"cache thrash: all {self.capacity} slots pinned by one "
             "iteration; raise capacity_leaves above the per-iteration "
@@ -164,38 +177,46 @@ class DeviceLeafCache:
         ``leaves`` may contain duplicates (multiple query lanes visiting
         the same leaf) — each distinct leaf is read and uploaded once;
         every occurrence beyond the read counts as a (per-request) hit.
+
+        The whole batch is one critical section: residency decisions,
+        eviction, and the fill scatter happen under ``self._lock`` so
+        a concurrent caller can never observe a slot map that points
+        at not-yet-uploaded payload.
         """
         slots = np.empty(len(leaves), np.int64)
-        pinned = {self.slot_of[lf] for lf in leaves if lf in self.slot_of}
-        miss_leaves: List[int] = []
-        miss_slots: List[int] = []
-        assigned: dict = {}
-        for i, lf in enumerate(leaves):
-            lf = int(lf)
-            if lf in self.slot_of:
-                s = self.slot_of[lf]
-                # resident (or just filled earlier in this batch):
-                # served without a read -> per-request hit; only leaves
-                # resident BEFORE the batch count as distinct hits
-                self._c_hits.inc()
-                if lf not in assigned:
-                    self._c_hits_distinct.inc()
+        with self._lock:
+            pinned = {self.slot_of[lf] for lf in leaves
+                      if lf in self.slot_of}
+            miss_leaves: List[int] = []
+            miss_slots: List[int] = []
+            assigned: dict = {}
+            for i, lf in enumerate(leaves):
+                lf = int(lf)
+                if lf in self.slot_of:
+                    s = self.slot_of[lf]
+                    # resident (or just filled earlier in this batch):
+                    # served without a read -> per-request hit; only
+                    # leaves resident BEFORE the batch count as
+                    # distinct hits
+                    self._c_hits.inc()
+                    if lf not in assigned:
+                        self._c_hits_distinct.inc()
+                    self.refbit[s] = True
+                    slots[i] = s
+                    assigned.setdefault(lf, s)
+                    continue
+                s = self._evict_one(pinned)
+                pinned.add(s)
+                self.slot_of[lf] = s
+                self.owner[s] = lf
                 self.refbit[s] = True
+                assigned[lf] = s
+                self._c_misses.inc()
+                miss_leaves.append(lf)
+                miss_slots.append(s)
                 slots[i] = s
-                assigned.setdefault(lf, s)
-                continue
-            s = self._evict_one(pinned)
-            pinned.add(s)
-            self.slot_of[lf] = s
-            self.owner[s] = lf
-            self.refbit[s] = True
-            assigned[lf] = s
-            self._c_misses.inc()
-            miss_leaves.append(lf)
-            miss_slots.append(s)
-            slots[i] = s
-        if miss_leaves:
-            self._fill(miss_leaves, miss_slots)
+            if miss_leaves:
+                self._fill(miss_leaves, miss_slots)
         return slots
 
     def _fill(self, leaves: List[int], slot_ids: List[int]) -> None:
@@ -224,8 +245,9 @@ class DeviceLeafCache:
             buf = np.concatenate(
                 [buf, np.broadcast_to(buf[-1], (pad - len(leaves),) +
                                       buf.shape[1:])])
-        self.slots = _scatter_fill(
-            self.slots, jnp.asarray(ids_arr), jnp.asarray(buf))
+        with self._lock:
+            self.slots = _scatter_fill(
+                self.slots, jnp.asarray(ids_arr), jnp.asarray(buf))
 
     # ------------------------------------------------------------------
     @property
@@ -250,6 +272,7 @@ class DeviceLeafCache:
     def stats(self) -> dict:
         total = self.hits + self.misses
         distinct = self.hits_distinct + self.misses
+        # repro: allow[stats-schema] pre-PR6 back-compat view of the SAME registry counters; search_ooc copies these fields into the typed OocStats field-for-field, so the two views cannot drift
         return {
             "capacity_leaves": self.capacity,
             "hits": self.hits,

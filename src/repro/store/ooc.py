@@ -400,6 +400,7 @@ def _host_refine(
         lb_computed=jnp.int32(L),
     )
     lv_total = int(leaves_visited.sum())
+    # repro: allow[stats-schema] internal transport dict: search_ooc splices these refinement fields straight into the typed OocStats constructor — never a user-facing stats surface
     telem = {
         "iterations": iters,
         "frontier_refills": refills,

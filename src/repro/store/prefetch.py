@@ -20,12 +20,11 @@ from __future__ import annotations
 import collections
 import itertools
 import threading
-import time
 from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.obs import REGISTRY
+from repro.obs import REGISTRY, now
 
 from .layout import LeafStore
 
@@ -38,16 +37,24 @@ class LeafPrefetcher:
         self.store = store
         self.depth = int(depth)
         self.name = name or f"prefetch{next(_prefetcher_ids)}"
+        # every shared field below is annotated guarded_by and the
+        # annotation is CHECKED: python -m repro.analysis enforces
+        # that all access outside __init__ sits in `with self._lock:`
+        # (docs/ANALYSIS.md — this class is where the old "mutated
+        # ONLY under self._lock" comment lived unchecked)
         self._lock = threading.Condition()
-        self._queue: collections.deque = collections.deque()
+        self._queue: collections.deque = \
+            collections.deque()                   # guarded_by: _lock
         self._staged: "collections.OrderedDict[int, np.ndarray]" = \
-            collections.OrderedDict()
-        self._inflight: set = set()
-        self._wanted: set = set()
-        self._batches_staged: collections.deque = collections.deque()
-        self._stop = False
-        self._dead = False
-        self._reading: Optional[int] = None  # leaf mid-read right now
+            collections.OrderedDict()             # guarded_by: _lock
+        self._inflight: set = set()               # guarded_by: _lock
+        self._wanted: set = set()                 # guarded_by: _lock
+        self._batches_staged: collections.deque = \
+            collections.deque()                   # guarded_by: _lock
+        self._stop = False                        # guarded_by: _lock
+        self._dead = False                        # guarded_by: _lock
+        # leaf mid-read right now:
+        self._reading: Optional[int] = None       # guarded_by: _lock
         # counters: mutated ONLY under self._lock (the reader thread
         # races reset_counters otherwise — a straggler cold-pass read
         # landing after the reset would pollute warm-run stats); the
@@ -57,7 +64,7 @@ class LeafPrefetcher:
         # are registry-backed (store.prefetch.* in repro.obs.REGISTRY):
         # reset_counters() starts a window via marks, the registry
         # keeps the process-lifetime totals.
-        self._epoch = 0
+        self._epoch = 0                           # guarded_by: _lock
         lbl = {"prefetch": self.name}
         self._c_bytes_read = REGISTRY.counter(
             "store.prefetch.bytes_read", **lbl)
@@ -125,14 +132,14 @@ class LeafPrefetcher:
         None falls back to a sync read in the cache.
         """
         leaf = int(leaf)
-        deadline = time.monotonic() + timeout
+        deadline = now() + timeout
         with self._lock:
             while True:
                 if leaf in self._staged:
                     return self._staged.pop(leaf)
                 if leaf not in self._inflight and leaf not in self._queue:
                     return None
-                remaining = deadline - time.monotonic()
+                remaining = deadline - now()
                 if remaining <= 0 or self._stop or self._dead:
                     return None
                 self._lock.wait(remaining)
@@ -147,13 +154,13 @@ class LeafPrefetcher:
         epoch bump makes the straggler's completion drop its counter
         update, so the new window still starts clean.
         """
-        deadline = time.monotonic() + timeout
+        deadline = now() + timeout
         with self._lock:
             for lf in self._queue:
                 self._inflight.discard(lf)
             self._queue.clear()
             while self._reading is not None and not self._dead:
-                remaining = deadline - time.monotonic()
+                remaining = deadline - now()
                 if remaining <= 0:
                     break
                 self._lock.wait(remaining)

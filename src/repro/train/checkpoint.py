@@ -176,7 +176,7 @@ class Checkpointer:
                         shardings[group])[0]]
             new = []
             tensor_meta = manifest["files"][group]["tensors"]
-            for i, (path, leaf) in enumerate(leaves_p):
+            for i, (path, _leaf) in enumerate(leaves_p):
                 key = "/".join(
                     str(getattr(p, "key", getattr(p, "idx", p)))
                     for p in path)

@@ -13,9 +13,10 @@ tensors under the new mesh (see checkpoint.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
+
+from repro.obs import now
 
 from .checkpoint import Checkpointer
 
@@ -56,12 +57,12 @@ class Supervisor:
             try:
                 if self.injector:
                     self.injector.maybe_fail(step)
-                t0 = time.perf_counter()
+                t0 = now()
                 batch = self.make_batch(step)
                 params, opt_state, metrics = self.train_step(
                     params, opt_state, batch)
                 loss = float(metrics["loss"])
-                dt = time.perf_counter() - t0
+                dt = now() - t0
                 if ema is None:
                     ema = dt
                 else:
