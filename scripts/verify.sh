@@ -7,6 +7,9 @@
 #                               # kernels, summaries, metrics, search,
 #                               # indexes, store)
 #   scripts/verify.sh full      # the tier-1 command only
+#   scripts/verify.sh chaos     # fault-tolerance smoke only (shard
+#                               # kill -> degrade, owner kill ->
+#                               # replica failover, docs/FAULT.md)
 #
 # The fast subset fails in minutes when a core-search/store regression
 # slips in; model-smoke and distributed tests are marked `slow` and
@@ -33,6 +36,12 @@ run_fast() {
   python scripts/serve_smoke.py
   echo "== verify: obs smoke (span tree vs counters, bit-exact) =="
   python scripts/obs_smoke.py
+  run_chaos
+}
+
+run_chaos() {
+  echo "== verify: chaos smoke (shard kill -> degrade / failover) =="
+  python scripts/chaos_smoke.py
 }
 
 run_full() {
@@ -43,6 +52,7 @@ run_full() {
 case "$mode" in
   fast) run_fast ;;
   full) run_full ;;
+  chaos) run_chaos ;;
   all)  run_fast && run_full ;;
-  *) echo "usage: scripts/verify.sh [fast|full|all]" >&2; exit 2 ;;
+  *) echo "usage: scripts/verify.sh [fast|full|chaos|all]" >&2; exit 2 ;;
 esac

@@ -1,0 +1,80 @@
+"""broad-except: every ``except Exception`` must say WHY.
+
+A broad handler (bare ``except``, ``except Exception``, ``except
+BaseException``, or a tuple containing one) is sometimes exactly right
+— a failover boundary, a supervisor restart loop, a daemon thread's
+last line of defence — and sometimes a bug magnet that silently eats
+``KeyError`` from three frames down. The difference is whether the
+author can articulate the boundary, so this rule makes the
+articulation mandatory: the handler line must carry a comment giving a
+REASON, or the site must be suppressed with
+``# repro: allow[broad-except] reason`` (the allow's reason is
+enforced by the allow-hygiene pass). A bare ``# noqa: BLE001`` with no
+prose does not count — it silences a linter, it does not explain the
+boundary.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from .. import core
+from ..core import ALLOW_RE, Finding, Project
+
+BROAD = frozenset({"Exception", "BaseException"})
+# '# noqa', '# noqa: BLE001', '# noqa: BLE001,E501' — directive only,
+# no explanation attached
+_BARE_NOQA_RE = re.compile(
+    r"^#\s*noqa(?::\s*[A-Z][A-Z0-9]*(?:\s*,\s*[A-Z][A-Z0-9]*)*)?\s*$")
+
+
+def _is_broad(type_node) -> bool:
+    if type_node is None:  # bare except
+        return True
+    if isinstance(type_node, ast.Tuple):
+        return any(_is_broad(e) for e in type_node.elts)
+    return core.terminal(core.dotted_name(type_node)) in BROAD
+
+
+def _has_reason(comment: str) -> bool:
+    """True when the trailing comment carries actual prose: not empty,
+    not a bare noqa directive, not (only) the allow marker itself —
+    an allow is a suppression, and suppressions are matched by the
+    runner so they stay tethered to a live finding."""
+    if ALLOW_RE.search(comment):
+        return False
+    if _BARE_NOQA_RE.match(comment.strip()):
+        return False
+    text = comment.lstrip("#").strip()
+    # strip a leading noqa directive and see if prose follows
+    # ('# noqa: BLE001 — restart on any fault' is a reason)
+    m = re.match(r"noqa(?::\s*[A-Z][A-Z0-9]*(?:\s*,\s*[A-Z][A-Z0-9]*)*)?"
+                 r"\s*[-—:]*\s*(.*)", text)
+    if m:
+        text = m.group(1)
+    return bool(text.strip())
+
+
+@core.rule("broad-except",
+           "except Exception sites must carry a reason comment")
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node.type):
+                continue
+            comment = mod.comments.get(node.lineno)
+            if comment is not None and _has_reason(comment):
+                continue
+            what = ("bare except" if node.type is None
+                    else "except " + (core.dotted_name(node.type)
+                                      or "Exception/..."))
+            yield Finding(
+                "broad-except", mod.path, node.lineno,
+                f"{what} without a reason — add a trailing comment "
+                "explaining the boundary (why EVERY failure stops "
+                "here) or suppress with "
+                "'# repro: allow[broad-except] reason'")

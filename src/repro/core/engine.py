@@ -18,14 +18,30 @@ stop conservative w.r.t. the global distribution.
 Fault tolerance: the frozen artifact checkpoints via train/checkpoint.py
 like any pytree; straggler mitigation degrades the guarantee to
 ng(nprobe) under a deadline — the taxonomy is the mitigation (paper
-Fig. 8 shows the first bsf is already near-exact).
+Fig. 8 shows the first bsf is already near-exact). Since PR 8 the
+out-of-core path is fault-tolerant end to end (docs/FAULT.md): shards
+are served by CONCURRENT owners (a worker pool streaming results into
+the topk_merge_unique fold as they land — the merge is a commutative
+(d, id)-lex selection, so completion order cannot change the answer),
+``build(replicas=R)`` persists R copies of every shard store with
+round-robin owner assignment, a failed/timed-out attempt retries with
+capped exponential backoff and fails over to the next copy
+(serve/fault.py: RetryPolicy + CircuitBreaker), and a shard lost past
+every copy degrades the answer honestly — the query completes over
+the surviving shards and OocStats reports ``degraded`` /
+``shards_lost`` / ``effective_delta`` with delta recomputed from the
+global distance histogram mass the missing rows own
+(core.guarantees.effective_delta_after_loss).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
+import shutil
+import threading
 import warnings
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from typing import Optional, Tuple
 
 import jax
@@ -59,6 +75,27 @@ def _pad_to(arr: np.ndarray, target: int, fill) -> np.ndarray:
     return np.concatenate([arr, pad], axis=0)
 
 
+def _discover_replicas(spill_dir: str, shard_dirs: Tuple[str, ...]
+                       ) -> Tuple[Tuple[str, ...], ...]:
+    """Per shard: (primary, *replica copies) found on disk. Replicas
+    live under spill_dir/replicas/rN/shard_NNNN — deliberately NOT
+    top-level shard_* names, which open_spill would mis-discover as
+    independent shards."""
+    rep_root = os.path.join(spill_dir, "replicas")
+    rdirs = sorted(os.listdir(rep_root)) \
+        if os.path.isdir(rep_root) else []
+    out = []
+    for d in shard_dirs:
+        name = os.path.basename(d)
+        copies = [d]
+        for rd in rdirs:
+            cand = os.path.join(rep_root, rd, name)
+            if os.path.isdir(cand):
+                copies.append(cand)
+        out.append(tuple(copies))
+    return tuple(out)
+
+
 @dataclasses.dataclass
 class DistributedEngine:
     mesh: Optional[Mesh]  # None for an OOC-only engine (open_spill)
@@ -66,6 +103,15 @@ class DistributedEngine:
     method: str = "dstree"
     stacked: Optional[FrozenIndex] = None  # leading shard axis on arrays
     shard_dirs: Optional[Tuple[str, ...]] = None  # spilled store dirs
+    # explicit shard count for a MESH-FREE engine (mesh=None +
+    # build(keep_resident=False): multi-shard OOC serving without any
+    # device mesh — the single-process stand-in for per-host shard
+    # ownership); ignored when a mesh is set
+    shards: Optional[int] = None
+    # per shard: every on-disk copy of its store, PRIMARY FIRST
+    # (build(replicas=R) / open_spill discovery); the failover loop
+    # rotates the attempt order per shard for round-robin ownership
+    shard_replica_dirs: Optional[Tuple[Tuple[str, ...], ...]] = None
     # jitted query fns keyed by (k, guarantee, batch shape, ...): the
     # shard_map body closes over those values, so a fresh closure per
     # call would defeat jit's compile cache
@@ -82,9 +128,21 @@ class DistributedEngine:
     # Mapping-style access preserved; per-shard schemas under .shards)
     last_ooc_stats: Optional[OocStats] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # serializes _stores/_shard_caches mutation against concurrent
+    # shard owners and close(); per-shard search runs OUTSIDE it
+    _ooc_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    # persistent per-(shard, copy) circuit breaker (serve/fault.py),
+    # created lazily on the first fault-tolerant OOC query
+    _breaker: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_shards(self) -> int:
+        if self.mesh is None:
+            if self.shards is not None:
+                return int(self.shards)
+            return len(self.shard_dirs) if self.shard_dirs else 1
         shape = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         out = 1
         for a in self.axes:
@@ -99,7 +157,9 @@ class DistributedEngine:
         artifact WITHOUT loading any shard into HBM — the serving path
         for collections larger than device memory (multi-host: each
         host opens the shards it owns). ``query`` auto-detects the
-        missing resident index and serves out-of-core."""
+        missing resident index and serves out-of-core. Replica copies
+        persisted by ``build(replicas=R)`` (spill_dir/replicas/rN/
+        shard_NNNN) are discovered too and arm failover."""
         shard_dirs = tuple(sorted(
             os.path.join(spill_dir, d) for d in os.listdir(spill_dir)
             if d.startswith("shard_")))
@@ -107,12 +167,15 @@ class DistributedEngine:
             raise ValueError(f"no shard_* stores under {spill_dir!r}")
         eng = cls(mesh=mesh, axes=tuple(axes), method=method)
         eng.shard_dirs = shard_dirs
+        eng.shard_replica_dirs = _discover_replicas(spill_dir,
+                                                    shard_dirs)
         return eng
 
     # ------------------------------------------------------------------
     def build(self, data: np.ndarray, key=None,
               spill_dir: Optional[str] = None, codec: str = "f32",
-              keep_resident: bool = True, **params):
+              keep_resident: bool = True, replicas: int = 1,
+              **params):
         """Shard rows, build per-shard indexes (embarrassingly parallel
         on hosts), stack and device_put with the shard axis mapped onto
         the mesh axes.
@@ -127,9 +190,25 @@ class DistributedEngine:
         every shard's bytes-read in the out-of-core serving path.
         ``keep_resident=False`` (requires ``spill_dir``) skips stacking
         the shards into HBM entirely: the engine holds only the spilled
-        stores and every query runs the OOC path."""
+        stores and every query runs the OOC path — on a MESH-FREE
+        engine (``mesh=None`` + ``shards=N``) this is the only legal
+        mode, and the shard count comes from ``self.shards``.
+        ``replicas=R`` persists R on-disk copies of every shard store
+        (the primary plus R-1 byte-identical replicas under
+        spill_dir/replicas/rN/ — no re-encode, so pq codebooks and
+        leaf payloads match bit for bit) with round-robin owner
+        assignment; a failed or timed-out shard attempt fails over to
+        the next copy before the query degrades (docs/FAULT.md)."""
         if not keep_resident and spill_dir is None:
             raise ValueError("keep_resident=False requires spill_dir")
+        if self.mesh is None and keep_resident:
+            raise ValueError(
+                "mesh-free engine (mesh=None) cannot hold a resident "
+                "index: build with keep_resident=False + spill_dir")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if replicas > 1 and spill_dir is None:
+            raise ValueError("replicas > 1 requires spill_dir")
         key = key if key is not None else jax.random.PRNGKey(0)
         self._query_fns.clear()  # compiled against the previous index
         self.close()             # OOC state from the previous build
@@ -154,9 +233,21 @@ class DistributedEngine:
             if spill_dir is not None:
                 d = os.path.join(spill_dir, f"shard_{si:04d}")
                 spill_dirs.append(idx.save(d, codec=codec))
+                # replica copies are byte-identical file copies of the
+                # saved store (same ids, histogram, pq codebook), laid
+                # out under replicas/rN so open_spill's shard_*
+                # discovery cannot mistake them for extra shards
+                for rep in range(1, replicas):
+                    rd = os.path.join(spill_dir, "replicas",
+                                      f"r{rep}", f"shard_{si:04d}")
+                    if os.path.isdir(rd):
+                        shutil.rmtree(rd)
+                    shutil.copytree(spill_dirs[-1], rd)
             if keep_resident:
                 shards.append(idx)  # else: spilled, drop the HBM copy
         self.shard_dirs = tuple(spill_dirs) if spill_dirs else None
+        self.shard_replica_dirs = _discover_replicas(
+            spill_dir, self.shard_dirs) if spill_dirs else None
         if not keep_resident:
             self.stacked = None
             return self
@@ -231,9 +322,17 @@ class DistributedEngine:
         detected automatically, or forced with ``ooc=True`` on an
         engine that holds both. ``ooc_opts`` forwards out-of-core
         knobs (share_gathers / cache_leaves / prefetch /
-        prefetch_depth / rerank / frontier) to search_ooc; per-shard
-        caches stay warm across queries. Aggregate per-shard stats
-        land in ``self.last_ooc_stats``."""
+        prefetch_depth / rerank / frontier) to search_ooc, plus the
+        fault-tolerance knobs the engine consumes itself
+        (docs/FAULT.md): ``fault`` (a repro.fault.FaultInjector),
+        ``retry`` (a serve.fault.RetryPolicy), ``workers`` (shard
+        owner pool width; default min(n_shards, 8), 1 = the
+        sequential fold). Per-shard caches stay warm across queries.
+        Aggregate per-shard stats land in ``self.last_ooc_stats`` —
+        including the degradation block (degraded / shards_lost /
+        effective_delta) when a shard was lost past its replicas."""
+        self.last_ooc_stats = None  # stale stats must not outlive
+        #                             a query that takes another path
         if ooc is None:
             ooc = self.stacked is None and self.shard_dirs is not None
         if ooc:
@@ -340,78 +439,125 @@ class DistributedEngine:
         return res
 
     # ------------------------------------------------------------------
+    def _store(self, d: str):
+        """The (lazily opened, cached) store for one shard copy —
+        lock-guarded: concurrent shard owners open their stores in
+        parallel on the first query."""
+        with self._ooc_lock:
+            store = self._stores.get(d)
+        if store is not None:
+            return store
+        from repro.store import load_index
+        store = load_index(d, resident="summaries")
+        with self._ooc_lock:
+            # a concurrent open of the same dir (close() racing a
+            # query) keeps the first registered handle
+            return self._stores.setdefault(d, store)
+
     def _shard_cache(self, d: str, store, need_leaves: int,
                      cache_leaves: Optional[int], *,
                      prefetch_depth: int, prefetch: bool):
-        """The shard's persistent warm cache + prefetcher, re-validated
-        per query: a cache whose capacity cannot pin this query's
-        per-iteration working set (b * visit_batch leaves — batch
-        sizes vary per guarantee group in the serving front) is
+        """The shard copy's persistent warm cache + prefetcher,
+        re-validated per query: a cache whose capacity cannot pin this
+        query's per-iteration working set (b * visit_batch leaves —
+        batch sizes vary per guarantee group in the serving front) is
         retired and rebuilt larger, and the prefetcher thread persists
         with the cache instead of being spawned and joined per query
-        (its staging depth grows with the requested lookahead)."""
+        (its staging depth grows with the requested lookahead).
+
+        Runs under ``_ooc_lock`` end to end: owners touch DISTINCT
+        dirs so the serialization costs nothing on the steady path,
+        and it makes the dict re-validation atomic against a
+        concurrent ``close()`` (mid-query close retires the cache;
+        this query keeps its own reference and finishes on it)."""
         from repro.store import DeviceLeafCache, LeafPrefetcher
 
         need = max(int(need_leaves), 1)
-        cache = self._shard_caches.get(d)
-        if cache is not None \
-                and cache.capacity < min(need, max(store.num_leaves, 1)):
-            if cache.prefetcher is not None:
-                cache.prefetcher.close()
-                cache.prefetcher = None
-            cache = None
-        if cache is None:
-            cap = cache_leaves if cache_leaves is not None \
-                else max(store.num_leaves // 8, 1)
-            cap = min(max(cap, need), max(store.num_leaves, 1))
-            cache = DeviceLeafCache(store, cap)
-            self._shard_caches[d] = cache
-        else:
-            # warm CONTENTS persist across queries (the serving
-            # regime); counters reset so last_ooc_stats reports this
-            # query's bytes, not the cache's lifetime
-            cache.reset_counters()
-        if prefetch:
-            depth = max(2, prefetch_depth + 1)
-            if cache.prefetcher is not None \
-                    and cache.prefetcher.depth < depth:
-                cache.prefetcher.close()
-                cache.prefetcher = None
-            if cache.prefetcher is None:
-                cache.prefetcher = LeafPrefetcher(store, depth=depth)
+        with self._ooc_lock:
+            cache = self._shard_caches.get(d)
+            if cache is not None \
+                    and cache.capacity < min(need,
+                                             max(store.num_leaves, 1)):
+                if cache.prefetcher is not None:
+                    cache.prefetcher.close()
+                    cache.prefetcher = None
+                cache = None
+            if cache is None:
+                cap = cache_leaves if cache_leaves is not None \
+                    else max(store.num_leaves // 8, 1)
+                cap = min(max(cap, need), max(store.num_leaves, 1))
+                cache = DeviceLeafCache(store, cap)
+                self._shard_caches[d] = cache
+            else:
+                # warm CONTENTS persist across queries (the serving
+                # regime); counters reset so last_ooc_stats reports
+                # this query's bytes, not the cache's lifetime
+                cache.reset_counters()
+            if prefetch:
+                depth = max(2, prefetch_depth + 1)
+                if cache.prefetcher is not None \
+                        and cache.prefetcher.depth < depth:
+                    cache.prefetcher.close()
+                    cache.prefetcher = None
+                if cache.prefetcher is None:
+                    cache.prefetcher = LeafPrefetcher(store,
+                                                      depth=depth)
         return cache
 
     def close(self) -> None:
         """Release out-of-core serving state: stop every per-shard
         prefetcher thread and drop the warm caches/stores. build()
         calls this before rebuilding; harmless on a resident-only
-        engine."""
-        for cache in self._shard_caches.values():
+        engine. Idempotent and thread-safe: state is snapshotted and
+        detached under the lock, prefetcher threads are joined outside
+        it (a query in flight keeps its own cache reference and falls
+        back to demand reads once its prefetcher stops)."""
+        with self._ooc_lock:
+            caches = list(self._shard_caches.values())
+            self._shard_caches.clear()
+            self._stores.clear()
+        for cache in caches:
             if cache.prefetcher is not None:
                 cache.prefetcher.close()
                 cache.prefetcher = None
-        self._shard_caches.clear()
-        self._stores.clear()
 
     def _query_ooc(self, queries, k: int, g: Guarantee,
                    visit_batch: int, opts: dict) -> SearchResult:
-        """Serve the query batch from the spilled shard stores: a
-        host-driven refinement loop per shard (the SAME shared core
-        search_impl traces — core/refine.py), then a cross-shard
-        ``ops.topk_merge_unique`` fold. Parity with the resident
-        shard_map path: per-shard results are bit-exact to the
-        resident per-shard search for lossless codecs
-        (tests/test_store.py), shard ids are globally disjoint, and
-        both merges select the k smallest distances — so ids AND dists
-        match the resident engine answer bit-for-bit (modulo
-        cross-shard ties, which (d, id)-lex ordering resolves
-        deterministically). Guarantee preservation is the same
-        argument as the shard_map path (module docstring): every
-        shard's answer satisfies the local guarantee against the
-        GLOBAL histogram/n_total persisted in its store, and the merge
-        only improves each rank."""
-        from repro.store import load_index
+        """Serve the query batch from the spilled shard stores:
+        CONCURRENT shard owners (one worker per shard, pool width
+        ``workers``) each drive the host refinement loop over their
+        store — the SAME shared core search_impl traces
+        (core/refine.py) — and stream their answers into a cross-shard
+        ``ops.topk_merge_unique`` fold on this thread as they land.
+        Completion order cannot change the answer: the merge is a
+        commutative, associative (d, id)-lex selection over globally
+        disjoint ids, so the fold equals the sequential fold bit for
+        bit. Parity with the resident shard_map path: per-shard
+        results are bit-exact to the resident per-shard search for
+        lossless codecs (tests/test_store.py) and both merges select
+        the k smallest distances — so ids AND dists match the resident
+        engine answer bit-for-bit (modulo cross-shard ties, which
+        (d, id)-lex ordering resolves deterministically). Guarantee
+        preservation is the same argument as the shard_map path
+        (module docstring): every shard's answer satisfies the local
+        guarantee against the GLOBAL histogram/n_total persisted in
+        its store, and the merge only improves each rank.
+
+        Fault tolerance (docs/FAULT.md): each shard serve runs under
+        serve/fault.serve_shard_with_failover — retries with capped
+        backoff across the shard's store copies (round-robin owner
+        first), per-attempt deadlines checked cooperatively inside the
+        host loop, a persistent circuit breaker skipping copies that
+        keep failing. A shard lost past every copy degrades the
+        answer instead of failing the query: the fold completes over
+        the survivors and ``last_ooc_stats`` carries ``degraded`` /
+        ``shards_lost`` / ``effective_delta`` with delta recomputed
+        from the global histogram mass the missing rows own
+        (core.guarantees.effective_delta_after_loss)."""
+        from repro.serve import fault as sfault
         from repro.store.ooc import search_ooc
+
+        from .guarantees import effective_delta_after_loss
 
         if not self.shard_dirs:
             raise ValueError(
@@ -421,32 +567,64 @@ class DistributedEngine:
         qj = jnp.asarray(queries)
         b = qj.shape[0]
         cache_leaves = opts.pop("cache_leaves", None)
+        injector = opts.pop("fault", None)
+        policy = opts.pop("retry", None) or sfault.RetryPolicy()
+        n_sh = len(self.shard_dirs)
+        workers = int(opts.pop("workers", 0) or min(n_sh, 8))
+        prefetch_depth = int(opts.get("prefetch_depth", 1))
+        prefetch = bool(opts.get("prefetch", True))
+        replica_dirs = self.shard_replica_dirs \
+            or tuple((d,) for d in self.shard_dirs)
+        with self._ooc_lock:
+            if self._breaker is None:
+                self._breaker = sfault.CircuitBreaker()
+            breaker = self._breaker
+
+        def attempt_for(si):
+            def attempt(d, fctx):
+                store = self._store(d)
+                cache = self._shard_cache(
+                    d, store, b * visit_batch, cache_leaves,
+                    prefetch_depth=prefetch_depth, prefetch=prefetch)
+                # the child ooc.query span carries the shard's
+                # bytes_read attr — one subtree level owns each
+                # numeric attr, so QueryProfile.total() never
+                # double-counts. Worker-thread spans root their own
+                # per-thread subtree (obs/trace.py).
+                with obs.span("engine.shard", shard=si,
+                              copy=fctx.replica):
+                    return search_ooc(
+                        store, qj, k, delta=g.delta,
+                        epsilon=g.epsilon, nprobe=g.nprobe,
+                        visit_batch=visit_batch, cache=cache,
+                        fault=fctx, **opts)
+            return attempt
+
+        def serve_one(si):
+            copies = replica_dirs[si]
+            # round-robin ownership: shard si's owner is copy
+            # (si % R); failover walks the remaining copies in order
+            order = tuple(copies[(si + j) % len(copies)]
+                          for j in range(len(copies)))
+            return sfault.serve_shard_with_failover(
+                attempt_for(si), shard=si, replica_dirs=order,
+                policy=policy, breaker=breaker, injector=injector)
+
         top_d = jnp.full((b, k), jnp.inf, jnp.float32)
         top_i = jnp.full((b, k), -1, jnp.int32)
         leaves = np.zeros(b, np.int64)
         rows = np.zeros(b, np.int64)
         lbs = 0
         per_shard = []
+        infos = []
+        lost = []
         with obs.span("engine.query", path="ooc", lanes=b, k=k,
-                      shards=len(self.shard_dirs)) as root:
-            for si, d in enumerate(self.shard_dirs):
-                store = self._stores.get(d)
-                if store is None:
-                    store = load_index(d, resident="summaries")
-                    self._stores[d] = store
-                cache = self._shard_cache(
-                    d, store, b * visit_batch, cache_leaves,
-                    prefetch_depth=int(opts.get("prefetch_depth", 1)),
-                    prefetch=bool(opts.get("prefetch", True)))
-                # the child ooc.query span carries the shard's
-                # bytes_read attr — one subtree level owns each
-                # numeric attr, so QueryProfile.total() never
-                # double-counts
-                with obs.span("engine.shard", shard=si):
-                    out = search_ooc(
-                        store, qj, k, delta=g.delta, epsilon=g.epsilon,
-                        nprobe=g.nprobe, visit_batch=visit_batch,
-                        cache=cache, **opts)
+                      shards=n_sh, workers=workers) as root:
+
+            def fold(si, served):
+                out, info = served
+                out.stats.retries = info.retries
+                out.stats.failovers = info.failovers
                 obs.REGISTRY.counter(
                     "engine.shard.bytes_read", shard=str(si)).inc(
                         out.stats.bytes_read)
@@ -456,13 +634,51 @@ class DistributedEngine:
                 # shards, so the unique-merge's dedup is a no-op — it
                 # is used for its (d, id)-lex selection and its
                 # explicit precondition
+                nonlocal top_d, top_i, lbs, leaves, rows
                 top_d, top_i = ops.topk_merge_unique(
                     r.dists, r.ids, top_d, top_i)
                 leaves += np.asarray(r.leaves_visited, np.int64)
                 rows += np.asarray(r.rows_scanned, np.int64)
                 lbs += int(r.lb_computed)
                 per_shard.append(out.stats)
+                infos.append(info)
+
+            if workers <= 1 or n_sh == 1:
+                # sequential fold: no worker threads, spans nest
+                # under this root exactly as before PR 8
+                for si in range(n_sh):
+                    try:
+                        served = serve_one(si)
+                    except sfault.ShardLost:
+                        lost.append(si)
+                        continue
+                    fold(si, served)
+            else:
+                with ThreadPoolExecutor(
+                        max_workers=min(workers, n_sh),
+                        thread_name_prefix="shard-owner") as ex:
+                    futs = {ex.submit(serve_one, si): si
+                            for si in range(n_sh)}
+                    for fut in as_completed(futs):
+                        si = futs[fut]
+                        try:
+                            served = fut.result()
+                        except sfault.ShardLost:
+                            lost.append(si)
+                            continue
+                        fold(si, served)
+            if len(lost) == n_sh:
+                raise sfault.ShardLost(
+                    -1, RuntimeError(
+                        f"every shard lost ({sorted(lost)}): no "
+                        "surviving answer to degrade to"))
             stats = OocStats.aggregate(per_shard)
+            stats.effective_delta = float(g.delta)
+            if lost:
+                self._degrade(stats, sorted(lost), infos, top_d, k, g,
+                              effective_delta_after_loss)
+                root.set(degraded=True, shards_lost=stats.shards_lost,
+                         effective_delta=stats.effective_delta)
             root.set(bytes_read_total=stats.bytes_read,
                      iterations=stats.iterations)
         self.last_ooc_stats = stats
@@ -472,3 +688,30 @@ class DistributedEngine:
             rows_scanned=jnp.asarray(rows, jnp.int32),
             lb_computed=jnp.int32(lbs),
         )
+
+    def _degrade(self, stats: OocStats, lost, infos, top_d, k: int,
+                 g: Guarantee, effective_delta_after_loss) -> None:
+        """Downgrade the answer's guarantee honestly after shard loss:
+        count the rows the fold never saw (global n_total minus the
+        survivors' real rows — robust to uneven range-sharding) and
+        recompute delta from the global histogram mass those rows own
+        at each lane's surviving kth distance. The result is a
+        delta-epsilon guarantee whatever the request was — exact and
+        epsilon claims cannot survive unseen rows."""
+        surv = [self._store(i.served_dir) for i in infos]
+        n_total = int(surv[0].resident.n_total)
+        n_seen = sum(
+            int((np.asarray(s.resident.ids) >= 0).sum()) for s in surv)
+        n_lost = max(n_total - n_seen, 0)
+        stats.degraded = True
+        stats.shards_lost = len(lost)
+        stats.effective_delta = effective_delta_after_loss(
+            surv[0].resident.hist, np.asarray(top_d[:, k - 1]),
+            n_lost, delta=g.delta, epsilon=g.epsilon)
+        obs.REGISTRY.counter("engine.degraded_queries").inc()
+        obs.REGISTRY.counter("engine.shards_lost").inc(len(lost))
+        warnings.warn(
+            f"shards {lost} lost past retries and replicas: answer "
+            f"degraded to delta-epsilon with effective_delta="
+            f"{stats.effective_delta:.3g} over {n_lost} unseen rows "
+            "(docs/FAULT.md)", UserWarning, stacklevel=4)

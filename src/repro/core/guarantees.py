@@ -17,6 +17,8 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
+import numpy as np
+
 
 class Guarantee(NamedTuple):
     delta: float = 1.0
@@ -61,3 +63,44 @@ def delta_epsilon(delta: float, eps: float = 0.0) -> Guarantee:
 def ng(nprobe: int = 1) -> Guarantee:
     """Paper's ng-approximate: visit nprobe leaves, keep best-so-far."""
     return Guarantee(nprobe=nprobe).validate()
+
+
+def effective_delta_after_loss(
+    hist, kth_dists, n_lost: int, *, delta: float = 1.0,
+    epsilon: float = 0.0,
+) -> float:
+    """The honest delta of an answer computed WITHOUT ``n_lost`` rows.
+
+    A query that lost a shard past retries and replicas still returns
+    the fold over the surviving shards — but the reported guarantee
+    must account for the neighbors it never saw. Under the same
+    independence model that defines r_delta (Ciaccia-Patella, §3.2.3:
+    distances to the query are i.i.d. draws from the global
+    distribution F persisted as ``hist``), the answer is
+    epsilon-correct iff no unseen row improves the reported kth
+    distance beyond the epsilon slack the guarantee already tolerates,
+    i.e. no unseen row lies within ``d_k / (1 + epsilon)``. Each of
+    the ``n_lost`` unseen rows misses that ball with probability
+    ``1 - F(d_k / (1+eps))``, so per lane
+
+        P[answer still epsilon-correct] = (1 - F(d_k/(1+eps)))**n_lost
+
+    and the query-level delta is the prior ``delta`` times the WORST
+    lane's survival probability (the guarantee must hold for every
+    lane in the batch). ``kth_dists`` are the per-lane kth-best
+    distances of the surviving fold (sqrt'd, same scale as ``hist``
+    edges); an infinite kth (fewer than k survivors) yields delta 0 —
+    no probabilistic claim survives an unfilled answer.
+    """
+    if n_lost <= 0:
+        return float(delta)
+    from .histogram import f_of
+    d = np.asarray(kth_dists, np.float64).reshape(-1)
+    d = d / (1.0 + float(epsilon))
+    # F at the shrunk kth radius; inf radius -> F = 1 -> survival 0
+    p_hit = np.where(np.isfinite(d),
+                     np.asarray(f_of(hist, np.where(
+                         np.isfinite(d), d, 0.0)), np.float64),
+                     1.0)
+    survival = np.power(np.clip(1.0 - p_hit, 0.0, 1.0), float(n_lost))
+    return float(np.clip(float(delta) * survival.min(), 0.0, 1.0))

@@ -121,5 +121,16 @@ def serve_requests(
                         "ids": hit_r["ids"], "dists": hit_r["dists"],
                         "kind": hit_r["kind"],
                     }
+                    if hit_r.get("degraded"):
+                        # shard(s) lost past retries/replicas: the
+                        # answer is honest delta-epsilon, not the
+                        # requested tier (docs/FAULT.md)
+                        entry["retrieval"]["degraded"] = True
+                        entry["retrieval"]["requested_kind"] = \
+                            hit_r["requested_kind"]
+                        entry["retrieval"]["effective_delta"] = \
+                            hit_r["effective_delta"]
+                        entry["retrieval"]["shards_lost"] = \
+                            hit_r["shards_lost"]
                 results[r.uid] = entry
     return results

@@ -67,6 +67,14 @@ class OocStats:
     stop_exhausted: int = 0      # lanes that ran out of rank budget
     delta_slack: float = 0.0     # mean (1+eps)^2*rd^2 - bsf at delta stops
     eps_slack: float = 0.0       # mean next_lb*(1+eps)^2 - bsf at eps stops
+    # ---- fault tolerance (engine fold; per-shard entries carry their
+    # own retries/failovers, the degradation triple is engine-level —
+    # docs/FAULT.md)
+    retries: int = 0             # failed shard attempts that were retried
+    failovers: int = 0           # shards served from a non-owner copy
+    degraded: bool = False       # answer computed without >=1 shard
+    shards_lost: int = 0
+    effective_delta: float = 1.0  # honest delta of the returned answer
     # ---- engine cross-shard fold
     shards: List["OocStats"] = dataclasses.field(default_factory=list)
 
@@ -106,6 +114,7 @@ class OocStats:
         "bytes_read_rerank", "dataset_bytes", "iterations",
         "frontier_refills", "leaves_visited", "rows_scanned",
         "stop_delta", "stop_epsilon", "stop_exhausted",
+        "retries", "failovers",
     )
 
     @classmethod

@@ -180,12 +180,30 @@ class Scheduler:
                 group_ms = (obs.now() - t0) * 1e3
             obs.REGISTRY.histogram(
                 "serve.retrieval_ms", kind=g.kind).record(group_ms)
+            # fault-tolerant degrade (docs/FAULT.md): if the engine
+            # lost shards past retries and replicas, the answer's
+            # honest guarantee is delta-epsilon with the recomputed
+            # effective_delta — surface that per request instead of
+            # echoing the requested tier
+            stats = getattr(engine, "last_ooc_stats", None)
+            degraded = bool(stats is not None and stats.degraded)
+            kind = "delta-epsilon" if degraded else g.kind
+            if degraded:
+                obs.REGISTRY.counter(
+                    "serve.degraded", kind=g.kind).inc(len(group))
             for i, r in enumerate(group):
-                out[r.uid] = {
+                entry: Dict[str, Any] = {
                     "ids": ids_np[i],
                     "dists": dists_np[i],
                     "guarantee": g,
-                    "kind": g.kind,
+                    "kind": kind,
                     "retrieval_ms": group_ms,
                 }
+                if degraded:
+                    entry["degraded"] = True
+                    entry["requested_kind"] = g.kind
+                    entry["effective_delta"] = float(
+                        stats.effective_delta)
+                    entry["shards_lost"] = int(stats.shards_lost)
+                out[r.uid] = entry
         return out

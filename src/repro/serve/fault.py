@@ -1,0 +1,234 @@
+"""Serving-side fault tolerance: retries, failover, circuit breaking.
+
+The policy layer between the engine's concurrent shard owners and the
+raw injection points in :mod:`repro.fault` (docs/FAULT.md):
+
+    RetryPolicy     capped exponential backoff + a per-attempt
+                    deadline (a slow shard fails over instead of
+                    stalling the whole query).
+    CircuitBreaker  consecutive-failure counting per (shard, copy):
+                    a copy that keeps failing is skipped without
+                    paying its deadline, until a cooldown elapses
+                    (half-open: the next attempt probes it again).
+    FaultContext    what a single shard-serve attempt threads into
+                    the OOC host loop — the injector plus the
+                    attempt's absolute deadline, checked cooperatively
+                    at every gather/score point (the loop cannot be
+                    preempted mid-I/O, so deadlines are polled, not
+                    delivered).
+    serve_shard_with_failover
+                    the attempt loop: owner copy first, then each
+                    replica in attempt order, backoff between
+                    attempts, ShardLost when every copy is exhausted.
+
+Every event is a registry metric: ``fault.retries`` /
+``fault.failovers`` / ``fault.shard_lost`` / ``fault.breaker_open`` /
+``fault.breaker_skip`` counters and the ``fault.failover_latency_ms``
+histogram (first failure -> eventual success on another copy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro import obs
+from repro.fault import FaultInjected, FaultInjector  # noqa: F401
+
+__all__ = [
+    "FaultContext", "FaultInjected", "FaultInjector", "RetryPolicy",
+    "CircuitBreaker", "ShardLost", "ShardServeInfo", "ShardTimeout",
+    "serve_shard_with_failover",
+]
+
+
+class ShardTimeout(RuntimeError):
+    """A shard-serve attempt overran its per-attempt deadline."""
+
+
+class ShardLost(RuntimeError):
+    """Every copy of a shard failed past the retry budget — the query
+    must degrade (core/engine recomputes the honest delta)."""
+
+    def __init__(self, shard: int, cause: Optional[BaseException] = None):
+        super().__init__(
+            f"shard {shard} lost after retries and replicas"
+            + (f": {cause!r}" if cause is not None else ""))
+        self.shard = shard
+        self.cause = cause
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Per-shard retry/backoff/deadline policy.
+
+    The attempt budget is ``max(max_attempts, n_copies)`` so every
+    replica gets at least one shot even under a small retry budget.
+    ``attempt_deadline_s`` is the per-ATTEMPT wall budget, checked
+    cooperatively at the host loop's gather/score points; ``None``
+    disables timeouts (an attempt runs to completion or error).
+    """
+
+    max_attempts: int = 3
+    backoff_base_s: float = 0.005
+    backoff_cap_s: float = 0.25
+    attempt_deadline_s: Optional[float] = None
+
+    def backoff_s(self, attempt: int) -> float:
+        return min(self.backoff_cap_s,
+                   self.backoff_base_s * (2.0 ** attempt))
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker keyed by (shard, copy dir).
+
+    ``threshold`` consecutive failures open the circuit for
+    ``cooldown_s``; while open, ``allow`` is False and the failover
+    loop skips the copy without paying its deadline. After the
+    cooldown the circuit is half-open: one attempt probes the copy
+    and its outcome closes or re-opens it.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0):
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._lock = threading.Lock()
+        # key -> [consecutive failures, open-until stamp (obs.now)]
+        self._state: Dict[object, list] = {}  # guarded by _lock
+
+    def _slot(self, key) -> list:
+        return self._state.setdefault(key, [0, 0.0])
+
+    def allow(self, key) -> bool:
+        with self._lock:
+            return obs.now() >= self._slot(key)[1]
+
+    def is_open(self, key) -> bool:
+        return not self.allow(key)
+
+    def record_success(self, key) -> None:
+        with self._lock:
+            self._state[key] = [0, 0.0]
+
+    def record_failure(self, key) -> None:
+        with self._lock:
+            slot = self._slot(key)
+            slot[0] += 1
+            # at/past threshold every further failure re-opens — a
+            # failed half-open probe goes straight back to open
+            opened = slot[0] >= self.threshold
+            if opened:
+                slot[1] = obs.now() + self.cooldown_s
+        if opened:
+            obs.REGISTRY.counter("fault.breaker_open",
+                                 key=str(key)).inc()
+
+
+@dataclasses.dataclass
+class FaultContext:
+    """Per-attempt context threaded into the OOC host loop via
+    ``search_ooc(..., fault=ctx)``: the loop calls ``check(point)``
+    before every gather and score, which evaluates the injector's
+    rules AND the attempt deadline. ``replica`` is the attempt-order
+    position (0 = the copy currently owning the shard)."""
+
+    shard: int
+    replica: int = 0
+    injector: Optional[FaultInjector] = None
+    deadline: Optional[float] = None  # absolute obs.now stamp
+
+    def check(self, point: str) -> None:
+        if self.injector is not None:
+            self.injector.check(point, shard=self.shard,
+                                replica=self.replica)
+        if self.deadline is not None and obs.now() > self.deadline:
+            raise ShardTimeout(
+                f"shard {self.shard} attempt (copy position "
+                f"{self.replica}) overran its deadline at "
+                f"point {point!r}")
+
+
+@dataclasses.dataclass
+class ShardServeInfo:
+    """How one shard's answer was obtained (feeds OocStats)."""
+
+    shard: int
+    attempts: int = 1
+    retries: int = 0      # failed attempts before the success
+    failovers: int = 0    # 1 when served from a non-owner copy
+    served_dir: str = ""
+    served_replica: int = 0  # attempt-order position that served
+
+
+def serve_shard_with_failover(
+    attempt_fn: Callable[[str, FaultContext], object],
+    *,
+    shard: int,
+    replica_dirs: Sequence[str],
+    policy: Optional[RetryPolicy] = None,
+    breaker: Optional[CircuitBreaker] = None,
+    injector: Optional[FaultInjector] = None,
+) -> Tuple[object, ShardServeInfo]:
+    """Serve one shard with retries and replica failover.
+
+    ``replica_dirs`` is the shard's store copies in attempt order
+    (owner first); attempt ``i`` uses copy ``i % len(replica_dirs)``,
+    so retries past the copy count wrap back around. Between failed
+    attempts the worker sleeps the policy backoff. Returns
+    ``(attempt_fn result, ShardServeInfo)``; raises :class:`ShardLost`
+    carrying the last cause when every attempt failed.
+    """
+    if not replica_dirs:
+        raise ValueError(f"shard {shard}: no store copies to serve")
+    policy = policy or RetryPolicy()
+    n_attempts = max(int(policy.max_attempts), len(replica_dirs))
+    reg = obs.REGISTRY
+    first_failure_t: Optional[float] = None
+    cause: Optional[BaseException] = None
+    failed = 0
+    for attempt in range(n_attempts):
+        pos = attempt % len(replica_dirs)
+        d = replica_dirs[pos]
+        if breaker is not None and not breaker.allow((shard, d)):
+            reg.counter("fault.breaker_skip", shard=str(shard)).inc()
+            if cause is None:
+                cause = RuntimeError(
+                    f"circuit open for shard {shard} copy {d!r}")
+            continue
+        deadline = None
+        if policy.attempt_deadline_s is not None:
+            deadline = obs.now() + policy.attempt_deadline_s
+        ctx = FaultContext(shard=shard, replica=pos,
+                           injector=injector, deadline=deadline)
+        try:
+            ctx.check("shard")  # whole-shard kill gate
+            result = attempt_fn(d, ctx)
+        # repro: allow[broad-except] failover boundary: ANY attempt failure — injected fault, deadline, I/O error, device error — must mean retry/failover, never propagate past the policy loop (the last cause rides out on ShardLost)
+        except Exception as e:
+            failed += 1
+            cause = e
+            if first_failure_t is None:
+                first_failure_t = obs.now()
+            if breaker is not None:
+                breaker.record_failure((shard, d))
+            reg.counter("fault.attempt_failed", shard=str(shard)).inc()
+            if attempt + 1 < n_attempts:
+                reg.counter("fault.retries", shard=str(shard)).inc()
+                time.sleep(policy.backoff_s(attempt))
+            continue
+        if breaker is not None:
+            breaker.record_success((shard, d))
+        info = ShardServeInfo(shard=shard, attempts=attempt + 1,
+                              retries=failed, failovers=int(pos != 0),
+                              served_dir=d, served_replica=pos)
+        if pos != 0:
+            reg.counter("fault.failovers", shard=str(shard)).inc()
+        if first_failure_t is not None:
+            reg.histogram("fault.failover_latency_ms",
+                          shard=str(shard)).record(
+                              (obs.now() - first_failure_t) * 1e3)
+        return result, info
+    reg.counter("fault.shard_lost", shard=str(shard)).inc()
+    raise ShardLost(shard, cause)

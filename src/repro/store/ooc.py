@@ -236,7 +236,7 @@ def _exact_rerank(store: LeafStore, qf, top_d, top_i, k: int):
 def _host_refine(
     src, queries: jax.Array, k: int, *, delta: float, epsilon: float,
     nprobe: Optional[int], visit_batch: int, share_gathers: bool,
-    frontier: Optional[int], prefetch_depth: int,
+    frontier: Optional[int], prefetch_depth: int, fault=None,
 ):
     """The host-driven refinement loop over a LeafSource — the same
     Algorithm 2 iteration search_impl runs under lax.while_loop,
@@ -247,7 +247,15 @@ def _host_refine(
     Telemetry is read-only observation of values the loop already
     syncs to host (active mask, ranks, bsf, next_lb) — it cannot
     change visit order, scoring, or stopping arithmetic. Spans are
-    emitted only when tracing is enabled (obs.enabled())."""
+    emitted only when tracing is enabled (obs.enabled()).
+
+    ``fault`` is the serving-layer injection hook (duck-typed —
+    serve/fault.FaultContext in production): ``fault.check("gather")``
+    runs before every leaf-gather I/O and ``fault.check("score")``
+    before every device scoring step, which is where injected faults
+    fire and cooperative per-attempt deadlines are polled
+    (docs/FAULT.md). ``fault=None`` (every non-chaos caller) adds no
+    work to the loop."""
     res = src.resident
     b, n = queries.shape
     L = res.num_leaves
@@ -297,92 +305,108 @@ def _host_refine(
     while active.any():
         it_span = obs.span("ooc.iteration", iter=iters)
         it_span.__enter__()
-        active_j = jnp.asarray(active)
-        # mirror frontier_tick's refill predicate (same F/lookahead/
-        # pos inputs) to count lane-refill events; pos is host-read
-        # BEFORE the tick so the count observes, never participates
-        pos_host = np.asarray(fr.pos)
-        refills += int((active & (pos_host > F - 1 - lookahead)).sum())
-        fr, leaf_j = _frontier_tick(fr, lb_sq, active_j,
-                                    v=v, lookahead=lookahead)
-        leaf = np.asarray(leaf_j)
+        # the try/finally matters under fault injection: an exception
+        # escaping mid-iteration (injected fault, attempt deadline)
+        # must still pop this span off the thread's stack, or every
+        # later span in this worker thread would nest under a corpse
+        try:
+            active_j = jnp.asarray(active)
+            # mirror frontier_tick's refill predicate (same F/
+            # lookahead/pos inputs) to count lane-refill events; pos
+            # is host-read BEFORE the tick so the count observes,
+            # never participates
+            pos_host = np.asarray(fr.pos)
+            refills += int(
+                (active & (pos_host > F - 1 - lookahead)).sum())
+            fr, leaf_j = _frontier_tick(fr, lb_sq, active_j,
+                                        v=v, lookahead=lookahead)
+            leaf = np.asarray(leaf_j)
 
-        rk = rank[:, None] + np.arange(v)[None, :]
-        in_range = rk < max_rank
-        ok = in_range & active[:, None]
-        with obs.span("ooc.gather") as g_span:
-            # demand-path (sync) reads only: the prefetcher thread
-            # lands its bytes concurrently, so a cache.bytes_read
-            # delta here would be racy — the root span carries the
-            # authoritative total instead
-            pre_read = src.cache.bytes_read_sync if traced else 0
-            g = src.gather(leaf, ok)
-            if traced:
-                g_span.set(
-                    bytes_read_sync=src.cache.bytes_read_sync - pre_read)
+            rk = rank[:, None] + np.arange(v)[None, :]
+            in_range = rk < max_rank
+            ok = in_range & active[:, None]
+            if fault is not None:
+                fault.check("gather")
+            with obs.span("ooc.gather") as g_span:
+                # demand-path (sync) reads only: the prefetcher thread
+                # lands its bytes concurrently, so a cache.bytes_read
+                # delta here would be racy — the root span carries the
+                # authoritative total instead
+                pre_read = src.cache.bytes_read_sync if traced else 0
+                g = src.gather(leaf, ok)
+                if traced:
+                    g_span.set(bytes_read_sync=(
+                        src.cache.bytes_read_sync - pre_read))
 
-        # overlap: stage the next `depth` visit windows while the
-        # device scores this one (nearest window first — it is read
-        # first)
-        windows = []
-        for d in range(1, depth + 1):
-            base = np.minimum(rank + d * v, max_rank)
-            ok_d = ((base[:, None] + np.arange(v)[None, :]) < max_rank) \
-                & active[:, None]
-            if ok_d.any():
-                windows.append(
-                    (np.asarray(_frontier_window(fr, d * v, v)), ok_d))
-        src.prefetch(windows)
+            # overlap: stage the next `depth` visit windows while the
+            # device scores this one (nearest window first — it is
+            # read first)
+            windows = []
+            for d in range(1, depth + 1):
+                base = np.minimum(rank + d * v, max_rank)
+                ok_d = ((base[:, None] + np.arange(v)[None, :])
+                        < max_rank) & active[:, None]
+                if ok_d.any():
+                    windows.append(
+                        (np.asarray(_frontier_window(fr, d * v, v)),
+                         ok_d))
+            src.prefetch(windows)
 
-        with obs.span("ooc.score", lanes=int(active.sum())):
-            if share_gathers:
-                pool_valid = _coop_mask(leaf_j, jnp.asarray(ok), g.valid)
-                top_d, top_i = src.score(ctx, g, pool_valid, top_d,
-                                         top_i, share=True)
-            else:
-                top_d, top_i = src.score(ctx, g, g.valid, top_d, top_i,
-                                         share=False)
-            if traced:
-                jax.block_until_ready(top_d)
+            if fault is not None:
+                fault.check("score")
+            with obs.span("ooc.score", lanes=int(active.sum())):
+                if share_gathers:
+                    pool_valid = _coop_mask(leaf_j, jnp.asarray(ok),
+                                            g.valid)
+                    top_d, top_i = src.score(ctx, g, pool_valid, top_d,
+                                             top_i, share=True)
+                else:
+                    top_d, top_i = src.score(ctx, g, g.valid, top_d,
+                                             top_i, share=False)
+                if traced:
+                    jax.block_until_ready(top_d)
 
-        valid_np = np.asarray(g.valid)
-        leaves_visited += np.where(active, in_range.sum(1), 0)
-        rows_scanned += np.where(active, valid_np.sum(1), 0)
+            valid_np = np.asarray(g.valid)
+            leaves_visited += np.where(active, in_range.sum(1), 0)
+            rows_scanned += np.where(active, valid_np.sum(1), 0)
 
-        fr, next_lb_j = _frontier_advance(fr, active_j, v=v)
-        rank_next = np.minimum(rank + v, max_rank)
-        exhausted = rank_next >= max_rank
-        next_lb = np.asarray(next_lb_j).astype(np.float32)
-        bsf = np.asarray(top_d[:, k - 1])          # f32, sync point
-        stop = refine.stop_mask(next_lb, exhausted, bsf,
-                                eps_mult, rd_sq)
-        # attribute each newly stopped lane to ONE condition
-        # (priority delta > epsilon > exhausted — a lane can satisfy
-        # several at once) and measure the slack at stop: how far past
-        # the threshold the predicate fired, in squared-distance units
-        newly = active & stop
-        if newly.any():
-            m_delta = newly & (bsf <= eps_mult * rd_sq)
-            m_eps = newly & ~m_delta & (next_lb * eps_mult > bsf)
-            m_exh = newly & ~m_delta & ~m_eps
-            stop_n["delta"] += int(m_delta.sum())
-            stop_n["epsilon"] += int(m_eps.sum())
-            stop_n["exhausted"] += int(m_exh.sum())
-            if m_delta.any():
-                s = (eps_mult * rd_sq - bsf)[m_delta]
-                slack_sum["delta"] += float(s.sum())
-                slack_n["delta"] += int(m_delta.sum())
-            # epsilon slack only over finite next_lb: an inf next_lb
-            # means the frontier pool ran dry, not a measurable margin
-            m_eps_f = m_eps & np.isfinite(next_lb)
-            if m_eps_f.any():
-                s = (next_lb * eps_mult - bsf)[m_eps_f]
-                slack_sum["epsilon"] += float(s.sum())
-                slack_n["epsilon"] += int(m_eps_f.sum())
-        active = active & ~stop
-        rank = rank_next
-        iters += 1
-        it_span.__exit__(None, None, None)
+            fr, next_lb_j = _frontier_advance(fr, active_j, v=v)
+            rank_next = np.minimum(rank + v, max_rank)
+            exhausted = rank_next >= max_rank
+            next_lb = np.asarray(next_lb_j).astype(np.float32)
+            bsf = np.asarray(top_d[:, k - 1])      # f32, sync point
+            stop = refine.stop_mask(next_lb, exhausted, bsf,
+                                    eps_mult, rd_sq)
+            # attribute each newly stopped lane to ONE condition
+            # (priority delta > epsilon > exhausted — a lane can
+            # satisfy several at once) and measure the slack at stop:
+            # how far past the threshold the predicate fired, in
+            # squared-distance units
+            newly = active & stop
+            if newly.any():
+                m_delta = newly & (bsf <= eps_mult * rd_sq)
+                m_eps = newly & ~m_delta & (next_lb * eps_mult > bsf)
+                m_exh = newly & ~m_delta & ~m_eps
+                stop_n["delta"] += int(m_delta.sum())
+                stop_n["epsilon"] += int(m_eps.sum())
+                stop_n["exhausted"] += int(m_exh.sum())
+                if m_delta.any():
+                    s = (eps_mult * rd_sq - bsf)[m_delta]
+                    slack_sum["delta"] += float(s.sum())
+                    slack_n["delta"] += int(m_delta.sum())
+                # epsilon slack only over finite next_lb: an inf
+                # next_lb means the frontier pool ran dry, not a
+                # measurable margin
+                m_eps_f = m_eps & np.isfinite(next_lb)
+                if m_eps_f.any():
+                    s = (next_lb * eps_mult - bsf)[m_eps_f]
+                    slack_sum["epsilon"] += float(s.sum())
+                    slack_n["epsilon"] += int(m_eps_f.sum())
+            active = active & ~stop
+            rank = rank_next
+            iters += 1
+        finally:
+            it_span.__exit__(None, None, None)
 
     with obs.span("ooc.finalize") as f_span:
         top_d, top_i, rerank_bytes = src.finalize(ctx, top_d, top_i, k)
@@ -443,6 +467,7 @@ def search_ooc(
     rerank: int = 4,
     frontier: Optional[int] = None,
     prefetch_depth: int = 1,
+    fault=None,
 ) -> OocResult:
     """k-NN over an on-disk index without device-resident raw data.
 
@@ -464,6 +489,10 @@ def search_ooc(
     ``frontier`` tunes the lazy visit-order window width (None ->
     core.refine.default_frontier, widened to cover the prefetch
     lookahead); any width emits the same visit order.
+    ``fault`` threads a serving-layer fault context into the host
+    loop (checked before every gather and score — docs/FAULT.md);
+    injected faults and attempt deadlines propagate out of this call
+    as exceptions for the engine's failover loop to catch.
     """
     res = store.resident
     b, n = queries.shape
@@ -509,7 +538,7 @@ def search_ooc(
                 src, queries, k, delta=delta, epsilon=epsilon,
                 nprobe=nprobe, visit_batch=v,
                 share_gathers=share_gathers, frontier=frontier,
-                prefetch_depth=depth)
+                prefetch_depth=depth, fault=fault)
         finally:
             if own_prefetcher is not None:
                 own_prefetcher.close()

@@ -20,6 +20,7 @@ from __future__ import annotations
 import collections
 import itertools
 import threading
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
@@ -70,6 +71,15 @@ class LeafPrefetcher:
             "store.prefetch.bytes_read", **lbl)
         self._c_leaves_read = REGISTRY.counter(
             "store.prefetch.leaves_read", **lbl)
+        # deadline expiries (take/reset_counters) and close() leaks
+        # are SURFACED, not swallowed: a silently slow disk shows up
+        # here first (docs/OBSERVABILITY.md)
+        self._c_quiesce_take = REGISTRY.counter(
+            "store.prefetch.quiesce_timeout", site="take", **lbl)
+        self._c_quiesce_reset = REGISTRY.counter(
+            "store.prefetch.quiesce_timeout", site="reset", **lbl)
+        self._c_close_leaked = REGISTRY.counter(
+            "store.prefetch.close_leaked", **lbl)
         self._c_bytes_read.mark()
         self._c_leaves_read.mark()
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -130,6 +140,12 @@ class LeafPrefetcher:
         prefetcher already paid for. The prefetcher remains a pure
         overlap optimization, never a correctness dependency — every
         None falls back to a sync read in the cache.
+
+        Stop/dead Nones are expected teardown; a DEADLINE expiry means
+        the disk is slower than the timeout and the miss silently
+        doubles the read — so expiries are surfaced
+        (``store.prefetch.quiesce_timeout{site=take}`` + a warning)
+        instead of vanishing into the fallback.
         """
         leaf = int(leaf)
         deadline = now() + timeout
@@ -139,8 +155,17 @@ class LeafPrefetcher:
                     return self._staged.pop(leaf)
                 if leaf not in self._inflight and leaf not in self._queue:
                     return None
+                if self._stop or self._dead:
+                    return None
                 remaining = deadline - now()
-                if remaining <= 0 or self._stop or self._dead:
+                if remaining <= 0:
+                    self._c_quiesce_take.inc()
+                    warnings.warn(
+                        f"prefetcher {self.name}: take({leaf}) gave "
+                        f"up after {timeout:.1f}s with the read "
+                        "still pending — the caller falls back to a "
+                        "duplicate sync read (slow disk?)",
+                        RuntimeWarning, stacklevel=2)
                     return None
                 self._lock.wait(remaining)
 
@@ -162,17 +187,40 @@ class LeafPrefetcher:
             while self._reading is not None and not self._dead:
                 remaining = deadline - now()
                 if remaining <= 0:
+                    # the epoch bump below still keeps the window
+                    # clean, but a quiesce that cannot finish inside
+                    # the timeout is a slow-disk signal the operator
+                    # must see, not an implementation detail
+                    self._c_quiesce_reset.inc()
+                    warnings.warn(
+                        f"prefetcher {self.name}: reset_counters "
+                        f"quiesce timed out after {timeout:.1f}s "
+                        f"with leaf {self._reading} mid-read; the "
+                        "epoch guard keeps the new window clean",
+                        RuntimeWarning, stacklevel=2)
                     break
                 self._lock.wait(remaining)
             self._epoch += 1
             self._c_bytes_read.mark()
             self._c_leaves_read.mark()
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the reader thread and join it. A thread that outlives
+        the join timeout (wedged in a read syscall) is REPORTED —
+        ``store.prefetch.close_leaked`` counter + warning — instead of
+        leaking silently; it is a daemon thread, so the report is
+        about the wedged I/O, not process shutdown."""
         with self._lock:
             self._stop = True
             self._lock.notify_all()
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            self._c_close_leaked.inc()
+            warnings.warn(
+                f"prefetcher {self.name}: reader thread still alive "
+                f"{timeout:.1f}s after close() — wedged in a read? "
+                "(daemon thread; it cannot block exit, but its memmap "
+                "stays open)", RuntimeWarning, stacklevel=2)
 
     def __enter__(self):
         return self

@@ -15,23 +15,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
-
+from repro import obs
+# FaultInjector moved to the SHARED repro.fault in PR 8 (serving
+# injects faults through the same class — docs/FAULT.md); this
+# re-export keeps the historic import path working
+from repro.fault import FaultInjector  # noqa: F401
 from repro.obs import now
 
 from .checkpoint import Checkpointer
-
-
-class FaultInjector:
-    """Deterministically fail at specified steps (once each)."""
-
-    def __init__(self, fail_at=()):
-        self.fail_at = set(fail_at)
-        self.fired = set()
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise RuntimeError(f"injected fault at step {step}")
 
 
 @dataclasses.dataclass
@@ -68,29 +59,39 @@ class Supervisor:
                 else:
                     if dt > self.straggler_factor * ema:
                         stragglers += 1
+                        obs.REGISTRY.counter("train.stragglers").inc()
                     ema = 0.9 * ema + 0.1 * dt
-                history.append(loss)
+                # replayed steps BELOW start_step (a restore point
+                # that predates this run) are warm-up, not part of
+                # this run's loss history
+                if step >= start_step:
+                    history.append(loss)
                 step += 1
                 if step % self.ckpt_every == 0:
                     self.ckpt.save(
                         step, {"params": params, "opt_state": opt_state},
                         extra={"loss": loss})
-            except Exception as e:  # noqa: BLE001 — restart on any fault
+            except Exception:  # noqa: BLE001 — restart on any fault
                 restarts += 1
+                obs.REGISTRY.counter("train.restarts").inc()
                 if restarts > self.max_restarts:
                     raise
                 latest = self.ckpt.latest_step()
                 if latest is None:
                     # restart from the provided initial state
                     step = start_step
+                    history = []
                     continue
                 self.ckpt.wait()
                 latest, state, _ = self.ckpt.restore(
                     {"params": params, "opt_state": opt_state}, latest)
                 params = state["params"]
                 opt_state = state["opt_state"]
-                # drop history past the restore point
-                history = history[:latest - start_step]
+                # drop history past the restore point; clamped at 0 —
+                # a checkpoint that PRECEDES start_step (left by an
+                # earlier run of the same dir) used to make this slice
+                # negative and silently truncate the tail instead
+                history = history[:max(latest - start_step, 0)]
                 step = latest
         self.ckpt.wait()
         return {

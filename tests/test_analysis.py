@@ -186,6 +186,49 @@ FIXTURES = {
                 return np.asarray(x)  # not a jitted body
             """)},
     },
+    "broad-except": {
+        # reasonless broad handlers in all three spellings — including
+        # a BARE noqa, which silences a linter without explaining the
+        # boundary
+        "positive": {"repro/fx/be_pos.py": _fix("""
+            def risky():
+                try:
+                    return 1
+                except Exception:
+                    return None
+
+            def risky2():
+                try:
+                    return 1
+                except (ValueError, BaseException):  # noqa: BLE001
+                    return None
+
+            def risky3():
+                try:
+                    return 1
+                except:
+                    return None
+            """)},
+        "negative": {"repro/fx/be_neg.py": _fix("""
+            def narrow():
+                try:
+                    return 1
+                except ValueError:  # narrow handlers need no reason
+                    return None
+
+            def boundary():
+                try:
+                    return 1
+                except Exception:  # supervisor restart boundary: any step fault must restart, not crash
+                    return None
+
+            def linted():
+                try:
+                    return 1
+                except Exception:  # noqa: BLE001 — reason after the directive counts
+                    return None
+            """)},
+    },
     "stats-schema": {
         "positive": {"repro/fx/stats_pos.py": _fix("""
             def report(a, b, c):

@@ -1,0 +1,615 @@
+"""PR 8 fault tolerance: injection, failover, honest degradation.
+
+Four layers, all in-process and mesh-free (``DistributedEngine``
+with ``mesh=None`` + ``shards=N`` is the single-process stand-in for
+per-host shard ownership, so the chaos paths run in tier1 time):
+
+  units      FaultInjector rule semantics, RetryPolicy backoff,
+             CircuitBreaker state machine, serve_shard_with_failover,
+             effective_delta_after_loss math vs a manual recompute.
+  engine     concurrent shard owners == sequential fold == brute
+             force; a shard killed past retries AND replicas degrades
+             the answer to a bit-exact surviving-shards fold with the
+             recomputed delta; the same kill aimed only at the owner
+             copy fails over and returns the FULL undegraded answer.
+  lifecycle  close() idempotent, close() racing an in-flight query,
+             re-opened engines bit-exact; prefetcher deadline/close
+             paths SURFACE (counters + warnings) instead of silently
+             returning None.
+  serving    Scheduler.run_retrieval / Supervisor surface the same
+             events (degraded entries, train.restarts counter, the
+             history clamp for pre-dated checkpoints).
+"""
+
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import search as S
+from repro.core.engine import DistributedEngine
+from repro.core.guarantees import Guarantee, effective_delta_after_loss
+from repro.fault import FaultInjected, FaultInjector
+from repro.serve.fault import (CircuitBreaker, FaultContext, RetryPolicy,
+                               ShardLost, ShardTimeout,
+                               serve_shard_with_failover)
+
+pytestmark = pytest.mark.tier1
+
+N, DIM, SHARDS, K = 512, 32, 4, 5
+
+
+# ---------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    data = np.cumsum(rng.normal(size=(N, DIM)), axis=1)
+    data = ((data - data.mean(1, keepdims=True))
+            / (data.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+    queries = (data[rng.choice(N, 4, replace=False)]
+               + 0.05 * rng.normal(size=(4, DIM))).astype(np.float32)
+    return data, queries
+
+
+@pytest.fixture(scope="module")
+def spill(tmp_path_factory, corpus):
+    """One spilled 4-shard build with replicas=2 — every copy is a
+    byte-identical store, so both the failover and the degradation
+    tests share the artifact."""
+    data, _ = corpus
+    tmp = str(tmp_path_factory.mktemp("fault_spill"))
+    eng = DistributedEngine(mesh=None, method="dstree", shards=SHARDS)
+    eng.build(data, leaf_cap=16, spill_dir=tmp, codec="f32",
+              keep_resident=False, replicas=2)
+    eng.close()
+    return tmp
+
+
+@pytest.fixture()
+def engine(spill):
+    eng = DistributedEngine.open_spill(spill)
+    yield eng
+    eng.close()
+
+
+def surviving_oracle(data, queries, k, lost):
+    """Brute force over every row NOT owned by a lost shard, with ids
+    mapped back to global — THE answer a degraded query must equal."""
+    n = data.shape[0]
+    bounds = np.linspace(0, n, SHARDS + 1).astype(np.int64)
+    mask = np.ones(n, bool)
+    for si in lost:
+        mask[bounds[si]:bounds[si + 1]] = False
+    ids_map = np.where(mask)[0]
+    bf = S.brute_force(jnp.asarray(queries),
+                       jnp.asarray(data[mask]), k)
+    return ids_map[np.asarray(bf.ids)], np.asarray(bf.dists)
+
+
+# ------------------------------------------------------- injector units
+def test_injector_times_and_after():
+    inj = FaultInjector().fail("gather", shard=1, times=2, after=1)
+    inj.check("gather", shard=1)  # 'after' swallows the first match
+    for _ in range(2):
+        with pytest.raises(FaultInjected):
+            inj.check("gather", shard=1)
+    inj.check("gather", shard=1)  # times exhausted
+    inj.check("gather", shard=0)  # other shard never matched
+    inj.check("score", shard=1)   # other point never matched
+
+
+def test_injector_wildcard_and_replica_position():
+    inj = FaultInjector().kill_shard(2, replica=0)
+    with pytest.raises(FaultInjected):
+        inj.check("shard", shard=2, replica=0)
+    with pytest.raises(FaultInjected):  # permanent: fires again
+        inj.check("gather", shard=2, replica=0)
+    inj.check("gather", shard=2, replica=1)  # non-owner copy survives
+    inj.clear()
+    inj.check("shard", shard=2, replica=0)
+
+
+def test_injector_delay_sleeps_instead_of_raising():
+    c = obs.REGISTRY.counter("fault.delayed", point="gather", shard="3")
+    c.mark()
+    inj = FaultInjector().delay("gather", shard=3, seconds=0.002,
+                                times=1)
+    t0 = obs.now()
+    inj.check("gather", shard=3)  # sleeps, does not raise
+    assert obs.now() - t0 >= 0.002
+    assert c.since_mark == 1
+    inj.check("gather", shard=3)  # times exhausted: no sleep
+
+
+def test_injector_training_backcompat():
+    from repro.train.fault import FaultInjector as TrainInjector
+    assert TrainInjector is FaultInjector  # one shared class
+    inj = FaultInjector(fail_at=[12])
+    inj.maybe_fail(11)
+    with pytest.raises(RuntimeError, match="step 12"):
+        inj.maybe_fail(12)
+    inj.maybe_fail(12)  # fires once per step, exactly as before
+
+
+# ------------------------------------------------- policy/breaker units
+def test_retry_policy_backoff_caps():
+    p = RetryPolicy(backoff_base_s=0.01, backoff_cap_s=0.04)
+    assert p.backoff_s(0) == 0.01
+    assert p.backoff_s(1) == 0.02
+    assert p.backoff_s(10) == 0.04  # capped
+
+
+def test_circuit_breaker_opens_half_opens_reopens(monkeypatch):
+    t = [0.0]
+    monkeypatch.setattr(obs, "now", lambda: t[0])
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0)
+    key = (0, "copyA")
+    br.record_failure(key)
+    assert br.allow(key)          # below threshold
+    br.record_failure(key)
+    assert not br.allow(key)      # open
+    t[0] = 11.0
+    assert br.allow(key)          # cooldown elapsed: half-open probe
+    br.record_failure(key)        # failed probe re-opens IMMEDIATELY
+    assert not br.allow(key)
+    t[0] = 22.0
+    assert br.allow(key)
+    br.record_success(key)        # successful probe fully resets
+    br.record_failure(key)
+    assert br.allow(key)          # needs threshold failures again
+
+
+def test_fault_context_deadline_raises_shard_timeout():
+    ctx = FaultContext(shard=0, deadline=obs.now() - 1.0)
+    with pytest.raises(ShardTimeout):
+        ctx.check("gather")
+
+
+# --------------------------------------------- failover-loop units
+def test_failover_retries_then_serves_replica(tmp_path):
+    calls = []
+
+    def attempt(d, ctx):
+        calls.append((d, ctx.replica))
+        if ctx.replica == 0:
+            raise RuntimeError("owner down")
+        return f"served:{d}"
+
+    c_fail = obs.REGISTRY.counter("fault.attempt_failed", shard="7")
+    c_over = obs.REGISTRY.counter("fault.failovers", shard="7")
+    c_fail.mark()
+    c_over.mark()
+    hist = obs.REGISTRY.histogram("fault.failover_latency_ms",
+                                  shard="7")
+    n0 = hist.count
+    out, info = serve_shard_with_failover(
+        attempt, shard=7, replica_dirs=("a", "b"),
+        policy=RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    assert out == "served:b"
+    assert (info.retries, info.failovers, info.served_replica) == \
+        (1, 1, 1)
+    assert calls == [("a", 0), ("b", 1)]
+    assert c_fail.since_mark == 1 and c_over.since_mark == 1
+    assert hist.count == n0 + 1
+
+
+def test_failover_exhaustion_raises_shard_lost():
+    c = obs.REGISTRY.counter("fault.shard_lost", shard="9")
+    c.mark()
+
+    def attempt(d, ctx):
+        raise ValueError("always")
+
+    with pytest.raises(ShardLost) as exc:
+        serve_shard_with_failover(
+            attempt, shard=9, replica_dirs=("only",),
+            policy=RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    assert exc.value.shard == 9
+    assert isinstance(exc.value.cause, ValueError)
+    assert c.since_mark == 1
+
+
+def test_failover_skips_open_circuit():
+    br = CircuitBreaker(threshold=1, cooldown_s=1000.0)
+    br.record_failure((5, "a"))  # circuit for the owner copy is open
+    c = obs.REGISTRY.counter("fault.breaker_skip", shard="5")
+    c.mark()
+    served = []
+
+    def attempt(d, ctx):
+        served.append(d)
+        return d
+
+    out, info = serve_shard_with_failover(
+        attempt, shard=5, replica_dirs=("a", "b"), breaker=br,
+        policy=RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    assert out == "b" and served == ["b"]
+    assert info.failovers == 1
+    assert c.since_mark == 1
+
+
+def test_every_attempt_budget_covers_all_replicas():
+    # max_attempts=1 but 3 copies: every copy still gets a shot
+    seen = []
+
+    def attempt(d, ctx):
+        seen.append(d)
+        if len(seen) < 3:
+            raise RuntimeError("nope")
+        return d
+
+    out, _ = serve_shard_with_failover(
+        attempt, shard=0, replica_dirs=("a", "b", "c"),
+        policy=RetryPolicy(max_attempts=1, backoff_base_s=0.0))
+    assert out == "c" and seen == ["a", "b", "c"]
+
+
+# ------------------------------------------------- degradation math
+def test_effective_delta_after_loss_math(spill):
+    from repro.core.histogram import f_of
+    from repro.store import load_index
+    store = load_index(os.path.join(spill, "shard_0000"),
+                       resident="summaries")
+    hist = store.resident.hist
+    kth = np.asarray([0.5, 1.0, 2.0], np.float64)
+    delta, eps, n_lost = 0.9, 0.5, 128
+    got = effective_delta_after_loss(hist, kth, n_lost, delta=delta,
+                                     epsilon=eps)
+    p_hit = np.asarray(f_of(hist, kth / (1 + eps)), np.float64)
+    want = delta * np.min((1 - p_hit) ** n_lost)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+    # boundary cases: nothing lost -> prior delta; an unfilled lane
+    # (inf kth) kills every probabilistic claim
+    assert effective_delta_after_loss(hist, kth, 0, delta=delta) == delta
+    assert effective_delta_after_loss(
+        hist, np.asarray([np.inf]), 1, delta=delta) == 0.0
+
+
+# ------------------------------------------------- engine: no faults
+def test_concurrent_owners_match_brute_force(corpus, engine):
+    data, queries = corpus
+    bf = S.brute_force(jnp.asarray(queries), jnp.asarray(data), K)
+    res = engine.query(jnp.asarray(queries), K, Guarantee())
+    assert np.array_equal(np.asarray(res.ids), np.asarray(bf.ids))
+    st = engine.last_ooc_stats
+    assert st is not None and not st.degraded
+    assert st.effective_delta == 1.0 and st.shards_lost == 0
+    assert len(st.shards) == SHARDS
+    # completion-order independence: the sequential fold is bit-exact
+    seq = engine.query(jnp.asarray(queries), K, Guarantee(),
+                       ooc_opts={"workers": 1})
+    assert np.array_equal(np.asarray(res.ids), np.asarray(seq.ids))
+    assert np.array_equal(np.asarray(res.dists), np.asarray(seq.dists))
+
+
+# ------------------------------------------------- engine: chaos
+def test_shard_killed_past_replicas_degrades_bit_exact(corpus, engine):
+    data, queries = corpus
+    lost_shard = 1
+    inj = FaultInjector().kill_shard(lost_shard)  # every copy, forever
+    c_deg = obs.REGISTRY.counter("engine.degraded_queries")
+    c_lost = obs.REGISTRY.counter("engine.shards_lost")
+    c_deg.mark()
+    c_lost.mark()
+    with pytest.warns(UserWarning, match="lost past retries"):
+        res = engine.query(
+            jnp.asarray(queries), K, Guarantee(),
+            ooc_opts={"fault": inj,
+                      "retry": RetryPolicy(max_attempts=2,
+                                           backoff_base_s=0.0)})
+    st = engine.last_ooc_stats
+    assert st.degraded and st.shards_lost == 1
+    # bit-exact against the surviving-shards oracle
+    o_ids, o_dists = surviving_oracle(data, queries, K, [lost_shard])
+    assert np.array_equal(np.asarray(res.ids), o_ids)
+    # ids are exact; dists take a different accumulation path than
+    # the brute-force oracle (per-leaf device scoring), so compare to
+    # float32 accumulation tolerance
+    np.testing.assert_allclose(np.asarray(res.dists), o_dists,
+                               rtol=1e-4, atol=1e-4)
+    # the reported delta IS the histogram recomputation, n_lost = the
+    # killed shard's row count
+    from repro.store import load_index
+    hist = load_index(os.path.join(
+        engine.shard_dirs[0]), resident="summaries").resident.hist
+    want = effective_delta_after_loss(
+        hist, np.asarray(res.dists[:, K - 1]), N // SHARDS,
+        delta=1.0, epsilon=0.0)
+    assert st.effective_delta == want
+    assert 0.0 <= st.effective_delta < 1.0
+    assert c_deg.since_mark == 1 and c_lost.since_mark == 1
+    # the injector's firings were recorded
+    assert obs.REGISTRY.counter(
+        "fault.injected", point="shard",
+        shard=str(lost_shard)).value >= 1
+
+
+def test_owner_kill_fails_over_to_replica_full_answer(corpus, engine):
+    data, queries = corpus
+    clean = engine.query(jnp.asarray(queries), K, Guarantee())
+    inj = FaultInjector().kill_shard(1, replica=0)  # owner copy only
+    c_over = obs.REGISTRY.counter("fault.failovers", shard="1")
+    c_over.mark()
+    res = engine.query(
+        jnp.asarray(queries), K, Guarantee(),
+        ooc_opts={"fault": inj,
+                  "retry": RetryPolicy(max_attempts=2,
+                                       backoff_base_s=0.0)})
+    st = engine.last_ooc_stats
+    assert not st.degraded and st.shards_lost == 0
+    assert st.failovers >= 1 and st.retries >= 1
+    assert c_over.since_mark >= 1
+    # the replica is byte-identical: full answer, bit for bit
+    assert np.array_equal(np.asarray(res.ids), np.asarray(clean.ids))
+    assert np.array_equal(np.asarray(res.dists),
+                          np.asarray(clean.dists))
+
+
+def test_slow_owner_deadline_fails_over(corpus, engine):
+    data, queries = corpus
+    clean = engine.query(jnp.asarray(queries), K, Guarantee())
+    # one oversized stall on the OWNER copy's first gather; the
+    # deadline is generous for healthy shards (their attempts run in
+    # milliseconds on warm jits) but the stalled attempt overruns it
+    # at the very next cooperative check and fails over
+    inj = FaultInjector().delay("gather", shard=2, replica=0,
+                                seconds=0.4, times=1)
+    res = engine.query(
+        jnp.asarray(queries), K, Guarantee(),
+        ooc_opts={"fault": inj,
+                  "retry": RetryPolicy(max_attempts=2,
+                                       backoff_base_s=0.0,
+                                       attempt_deadline_s=0.3)})
+    st = engine.last_ooc_stats
+    assert not st.degraded and st.failovers >= 1
+    assert np.array_equal(np.asarray(res.ids), np.asarray(clean.ids))
+
+
+def test_mid_query_kill_degrades(corpus, engine):
+    """The kill lands AFTER the shard did real work (after=1 skips the
+    first gather), on every copy — the answer must still be the exact
+    surviving-shards fold."""
+    data, queries = corpus
+    inj = FaultInjector().fail("gather", shard=2, after=1,
+                               times=np.inf)
+    with pytest.warns(UserWarning, match="lost past retries"):
+        res = engine.query(
+            jnp.asarray(queries), K, Guarantee(),
+            ooc_opts={"fault": inj,
+                      "retry": RetryPolicy(max_attempts=2,
+                                           backoff_base_s=0.0)})
+    assert engine.last_ooc_stats.degraded
+    o_ids, _ = surviving_oracle(data, queries, K, [2])
+    assert np.array_equal(np.asarray(res.ids), o_ids)
+
+
+def test_all_shards_lost_raises(corpus, engine):
+    _, queries = corpus
+    inj = FaultInjector()
+    for si in range(SHARDS):
+        inj.kill_shard(si)
+    with pytest.raises(ShardLost, match="every shard"):
+        engine.query(
+            jnp.asarray(queries), K, Guarantee(),
+            ooc_opts={"fault": inj,
+                      "retry": RetryPolicy(max_attempts=2,
+                                           backoff_base_s=0.0)})
+
+
+# ------------------------------------------------- engine lifecycle
+def test_close_idempotent_and_rebuild_bit_exact(corpus, spill, engine):
+    _, queries = corpus
+    first = engine.query(jnp.asarray(queries), K, Guarantee())
+    engine.close()
+    engine.close()  # idempotent
+    again = engine.query(jnp.asarray(queries), K, Guarantee())
+    assert np.array_equal(np.asarray(first.ids), np.asarray(again.ids))
+    fresh = DistributedEngine.open_spill(spill)
+    try:
+        re = fresh.query(jnp.asarray(queries), K, Guarantee())
+        assert np.array_equal(np.asarray(first.ids),
+                              np.asarray(re.ids))
+        assert np.array_equal(np.asarray(first.dists),
+                              np.asarray(re.dists))
+    finally:
+        fresh.close()
+
+
+def test_close_racing_inflight_query(corpus, engine):
+    """close() from another thread mid-query: the query keeps its own
+    cache references and must finish with the correct answer."""
+    data, queries = corpus
+    bf = S.brute_force(jnp.asarray(queries), jnp.asarray(data), K)
+    inj = FaultInjector().delay("score", seconds=0.005)  # slow it down
+    out, err = [], []
+
+    def run():
+        try:
+            out.append(engine.query(jnp.asarray(queries), K,
+                                    Guarantee(),
+                                    ooc_opts={"fault": inj}))
+        except BaseException as e:  # re-raised on the main thread below
+            err.append(e)
+
+    th = threading.Thread(target=run)
+    th.start()
+    time.sleep(0.01)
+    engine.close()  # lands mid-query (or harmlessly after)
+    th.join(timeout=60)
+    assert not th.is_alive()
+    assert not err, err
+    assert np.array_equal(np.asarray(out[0].ids), np.asarray(bf.ids))
+
+
+# ------------------------------------------------- prefetcher surfacing
+class _BlockingStore:
+    """Minimal LeafStore stand-in whose read_leaf blocks on an event —
+    drives the prefetcher's deadline/close paths deterministically."""
+
+    def __init__(self):
+        self.release = threading.Event()
+
+    def read_leaf(self, leaf):
+        self.release.wait(timeout=30)
+        return np.zeros((4, 4), np.float32)
+
+    def leaf_nbytes(self, leaf):
+        return 64
+
+
+def _quiesce_counter(p, site):
+    return obs.REGISTRY.counter("store.prefetch.quiesce_timeout",
+                                site=site, prefetch=p.name)
+
+
+def test_prefetch_take_deadline_is_surfaced():
+    from repro.store import LeafPrefetcher
+    store = _BlockingStore()
+    p = LeafPrefetcher(store, depth=2)
+    try:
+        p.schedule([0])
+        c = _quiesce_counter(p, "take")
+        c.mark()
+        with pytest.warns(RuntimeWarning, match="gave up"):
+            assert p.take(0, timeout=0.02) is None
+        assert c.since_mark == 1
+        # an UNSCHEDULED leaf is a silent None — no false positive
+        c.mark()
+        assert p.take(99, timeout=0.02) is None
+        assert c.since_mark == 0
+    finally:
+        store.release.set()
+        p.close()
+
+
+def test_prefetch_reset_quiesce_timeout_is_surfaced():
+    from repro.store import LeafPrefetcher
+    store = _BlockingStore()
+    p = LeafPrefetcher(store, depth=2)
+    try:
+        p.schedule([0])
+        deadline = obs.now() + 5
+        while p._reading is None:  # wait for the read to start
+            assert obs.now() < deadline
+            time.sleep(0.001)
+        c = _quiesce_counter(p, "reset")
+        c.mark()
+        with pytest.warns(RuntimeWarning, match="quiesce timed out"):
+            p.reset_counters(timeout=0.02)
+        assert c.since_mark == 1
+    finally:
+        store.release.set()
+        p.close()
+
+
+def test_prefetch_close_leak_is_surfaced():
+    from repro.store import LeafPrefetcher
+    store = _BlockingStore()
+    p = LeafPrefetcher(store, depth=2)
+    p.schedule([0])
+    deadline = obs.now() + 5
+    while p._reading is None:
+        assert obs.now() < deadline
+        time.sleep(0.001)
+    c = obs.REGISTRY.counter("store.prefetch.close_leaked",
+                             prefetch=p.name)
+    c.mark()
+    with pytest.warns(RuntimeWarning, match="still alive"):
+        p.close(timeout=0.02)
+    assert c.since_mark == 1
+    store.release.set()  # let the daemon thread drain
+
+
+# ------------------------------------------------- supervisor surfacing
+def _trivial_sup(ckpt, **kw):
+    from repro.train.fault import Supervisor
+
+    def train_step(params, opt_state, batch):
+        return params, opt_state, {"loss": float(batch)}
+
+    return Supervisor(train_step, lambda step: float(step), ckpt,
+                      **kw)
+
+
+def test_supervisor_history_clamped_for_predated_checkpoint(tmp_path):
+    """A checkpoint PREDATING start_step (left by an earlier run of
+    the same dir) used to make the restore slice negative and the
+    replayed steps double-append — the loss history must be exactly
+    this run's steps."""
+    from repro.train.checkpoint import Checkpointer
+    ck = Checkpointer(str(tmp_path))
+    _trivial_sup(ck, ckpt_every=3).run(
+        np.zeros(2, np.float32), np.zeros(2, np.float32), 0, 4)
+    ck.wait()
+    assert ck.latest_step() == 3  # predates the next run's start
+    c = obs.REGISTRY.counter("train.restarts")
+    c.mark()
+    out = _trivial_sup(
+        Checkpointer(str(tmp_path)), ckpt_every=100,
+        injector=FaultInjector(fail_at=[8])).run(
+            np.zeros(2, np.float32), np.zeros(2, np.float32), 5, 5)
+    assert out["restarts"] == 1
+    assert c.since_mark == 1
+    assert out["losses"] == [5.0, 6.0, 7.0, 8.0, 9.0]
+
+
+def test_supervisor_straggler_counter(tmp_path):
+    from repro.train.checkpoint import Checkpointer
+
+    def make_batch(step):
+        if step == 2:
+            time.sleep(0.02)
+        return float(step)
+
+    from repro.train.fault import Supervisor
+
+    def train_step(params, opt_state, batch):
+        return params, opt_state, {"loss": float(batch)}
+
+    c = obs.REGISTRY.counter("train.stragglers")
+    c.mark()
+    out = Supervisor(train_step, make_batch,
+                     Checkpointer(str(tmp_path)), ckpt_every=100,
+                     straggler_factor=1.5).run(
+        np.zeros(2, np.float32), np.zeros(2, np.float32), 0, 4)
+    assert out["stragglers"] >= 1
+    assert c.since_mark == out["stragglers"]
+
+
+# ------------------------------------------------- serving surfacing
+def test_run_retrieval_surfaces_degradation():
+    from repro.core.search import SearchResult
+    from repro.obs import OocStats
+    from repro.serve.batching import Request, Scheduler
+
+    class StubEngine:
+        def __init__(self, stats):
+            self.last_ooc_stats = stats
+
+        def query(self, qs, k, g):
+            b = qs.shape[0]
+            return SearchResult(
+                dists=jnp.zeros((b, k), jnp.float32),
+                ids=jnp.zeros((b, k), jnp.int32),
+                leaves_visited=jnp.zeros(b, jnp.int32),
+                rows_scanned=jnp.zeros(b, jnp.int32),
+                lb_computed=jnp.int32(0))
+
+    reqs = [Request(uid=0, prompt=np.zeros(4, np.int32),
+                    series=np.zeros(DIM, np.float32))]
+    st = OocStats(degraded=True, shards_lost=1, effective_delta=0.42)
+    c = obs.REGISTRY.counter("serve.degraded", kind="exact")
+    c.mark()
+    out = Scheduler().run_retrieval(StubEngine(st), reqs, k=3)
+    e = out[0]
+    assert e["degraded"] and e["kind"] == "delta-epsilon"
+    assert e["requested_kind"] == "exact"
+    assert e["effective_delta"] == 0.42 and e["shards_lost"] == 1
+    assert c.since_mark == 1
+    # undegraded stats leave the entry untouched
+    out = Scheduler().run_retrieval(StubEngine(OocStats()), reqs, k=3)
+    assert out[0]["kind"] == "exact" and "degraded" not in out[0]
