@@ -1,0 +1,281 @@
+"""Closed-loop latency-vs-load bench: static barrier front vs the
+continuous-batching front (benchmarks the PR 9 tentpole).
+
+BENCH_pr5 reported serving throughput as ONE number — requests/s with
+every request already queued. That cannot express the thing a serving
+front is for: what happens to latency as offered load rises. This
+bench drives BOTH fronts with an open-loop paced submitter (requests
+arrive at a fixed rate whether or not the server keeps up — the
+industry-standard way to expose queueing collapse) and sweeps the
+arrival rate across multiples of the calibrated base service rate:
+
+  static      a Scheduler drained one batch at a time on a single
+              server thread — drain, group by guarantee, serve each
+              group to completion, repeat (the barrier loop
+              launch/serve.serve_requests models).
+  continuous  serve/loop.ServeFront — per-guarantee lanes refilling
+              as engine calls complete, admission control (depth cap
+              + reject), hysteresis shedding degrading tiers under
+              sustained pressure.
+
+Per load point and mode it reports p50/p99 end-to-end latency (submit
+-> answer, on the one obs.now clock, quantiles via the repro.obs
+log-bucketed histograms), achieved throughput, the DEGRADED-TIER
+fraction (answers whose final tier is below the tier their submitted
+deadline nominally buys — remaining-budget remapping + shedding make
+this the quality price of load), and rejected counts. The summary
+compares the fronts at the top load point: the continuous front must
+beat the static barrier on p99 there (or the snapshot gate fails —
+benchmarks/compare.py `serve_load` section).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_load [--scale default]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.engine import DistributedEngine
+from repro.serve.admission import AdmissionController
+from repro.serve.batching import (Request, Scheduler,
+                                  guarantee_for_deadline)
+from repro.serve.loop import Rejected, ServeFront
+
+from .common import dataset
+
+# the deadline mix every load point cycles through: no-deadline
+# (exact tier), relaxed (epsilon-tier budget), moderate
+# (delta-epsilon), tight (ng)
+DEADLINE_MIX = (None, 80.0, 40.0, 10.0)
+TIER_RANK = {"exact": 0, "epsilon": 0, "delta-epsilon": 1, "ng": 2}
+LOAD_FACTORS = (0.5, 1.0, 2.0, 4.0)
+SMOKE_FACTORS = (1.0, 4.0)
+POINT_TIMEOUT_S = 180.0
+
+
+def _degraded(nominal_kind: str, final_kind: str) -> bool:
+    return TIER_RANK[final_kind] > TIER_RANK[nominal_kind]
+
+
+def _mk_request(uid: int, q: np.ndarray, dl: Optional[float]) -> Request:
+    # Request stamps submitted_at on construction (obs.now) — build it
+    # at its paced arrival instant, never ahead of time
+    return Request(uid=uid, prompt=np.zeros(4, np.int32),
+                   deadline_ms=dl, series=q)
+
+
+def _paced_submit(n_reqs: int, queries: np.ndarray, rate_rps: float,
+                  submit_one) -> None:
+    """Open-loop arrivals: request i is submitted at start + i/rate
+    regardless of server progress (late submitters never slow the
+    offered load down — that would be closed-loop coordination
+    masking the queueing collapse this bench exists to show)."""
+    start = obs.now()
+    for i in range(n_reqs):
+        target = start + i / rate_rps
+        delay = target - obs.now()
+        if delay > 0:
+            time.sleep(delay)
+        dl = DEADLINE_MIX[i % len(DEADLINE_MIX)]
+        submit_one(_mk_request(i, queries[i % len(queries)], dl))
+
+
+def _point_summary(lat_ms: Dict[int, float],
+                   kinds: Dict[int, str],
+                   nominal: Dict[int, str],
+                   n_offered: int, wall_s: float,
+                   rejected: int) -> Dict[str, Any]:
+    hist = obs.Histogram("bench.serve_load.latency_ms", ())
+    for v in lat_ms.values():
+        hist.record(v)
+    answered = len(lat_ms)
+    degraded = sum(1 for u in kinds if _degraded(nominal[u], kinds[u]))
+    qn = hist.quantiles((0.5, 0.99))
+    return {
+        "answered": answered,
+        "rejected": rejected,
+        "achieved_rps": round(answered / wall_s, 1) if wall_s else 0.0,
+        "p50_ms": round(qn["p50"], 3) if answered else None,
+        "p99_ms": round(qn["p99"], 3) if answered else None,
+        "degraded_frac": round(degraded / answered, 4) if answered
+        else None,
+    }
+
+
+def _static_point(eng, queries, k, n_reqs, rate_rps,
+                  max_batch) -> Dict[str, Any]:
+    """The barrier loop: one server thread drains one batch at a time
+    and serves it to completion before the next drain."""
+    sched = Scheduler(max_batch=max_batch)
+    done: Dict[int, Dict[str, Any]] = {}
+    done_at: Dict[int, float] = {}
+    submit_at: Dict[int, float] = {}
+    done_lock = threading.Lock()
+    submitted = threading.Event()
+
+    def submit_one(r: Request):
+        submit_at[r.uid] = r.submitted_at
+        sched.submit(r)
+
+    def server():
+        while True:
+            nb = sched.next_batch()
+            if nb is None:
+                if submitted.is_set():
+                    with done_lock:
+                        if len(done) >= n_reqs:
+                            return
+                time.sleep(0.0005)
+                continue
+            _bucket, batch = nb
+            out = sched.run_retrieval(eng, batch, k)
+            t = obs.now()
+            with done_lock:
+                for uid, entry in out.items():
+                    done[uid] = entry
+                    done_at[uid] = t
+
+    srv = threading.Thread(target=server, daemon=True)
+    srv.start()
+    t0 = obs.now()
+    _paced_submit(n_reqs, queries, rate_rps, submit_one)
+    submitted.set()
+    srv.join(timeout=POINT_TIMEOUT_S)
+    wall_s = max(obs.now() - t0, 1e-9)
+    lat = {u: (done_at[u] - submit_at[u]) * 1e3 for u in done}
+    kinds = {u: done[u]["kind"] for u in done}
+    nominal = {u: guarantee_for_deadline(
+        DEADLINE_MIX[u % len(DEADLINE_MIX)]).kind for u in done}
+    return _point_summary(lat, kinds, nominal, n_reqs, wall_s, 0)
+
+
+def _continuous_point(eng, queries, k, n_reqs, rate_rps, max_batch,
+                      max_depth) -> Dict[str, Any]:
+    tickets: Dict[int, Any] = {}
+    rejected = [0]
+    front = ServeFront(
+        eng, k, max_batch=max_batch,
+        admission=AdmissionController(max_depth=max_depth)).start()
+
+    def submit_one(r: Request):
+        try:
+            tickets[r.uid] = (r.submitted_at, front.submit(r))
+        except Rejected:
+            rejected[0] += 1
+
+    t0 = obs.now()
+    try:
+        _paced_submit(n_reqs, queries, rate_rps, submit_one)
+        outs = {u: (sub, t.result(timeout=POINT_TIMEOUT_S))
+                for u, (sub, t) in tickets.items()}
+    finally:
+        front.stop(drain=True)
+    wall_s = max(obs.now() - t0, 1e-9)
+    outs = {u: (sub, o) for u, (sub, o) in outs.items()
+            if "error" not in o}
+    lat = {u: (o["done_at"] - sub) * 1e3 for u, (sub, o) in outs.items()}
+    kinds = {u: o["kind"] for u, (_s, o) in outs.items()}
+    nominal = {u: guarantee_for_deadline(
+        DEADLINE_MIX[u % len(DEADLINE_MIX)]).kind for u in outs}
+    return _point_summary(lat, kinds, nominal, n_reqs, wall_s,
+                          rejected[0])
+
+
+def run(scale: str = "default", smoke: bool = False,
+        engine=None) -> Dict[str, Any]:
+    """Collect the ``serve_load`` snapshot section: the latency-vs-
+    load curve for both fronts plus the head-to-head summary."""
+    data, q, _bf, p = dataset(scale)
+    k = p["k"]
+    q = np.asarray(q, np.float32)
+    factors = SMOKE_FACTORS if smoke else LOAD_FACTORS
+    n_reqs = max(16, len(q)) if smoke else 2 * len(q)
+    max_batch = 8
+
+    own_engine = engine is None
+    tmp = None
+    if own_engine:
+        tmp = tempfile.TemporaryDirectory()
+        mesh = jax.make_mesh((1,), ("data",))
+        engine = DistributedEngine(mesh, method="dstree")
+        engine.build(data, leaf_cap=256,
+                     spill_dir=os.path.join(tmp.name, "sp"),
+                     codec="bf16", keep_resident=False)
+    try:
+        # warm the leaf caches AND the per-kind lane-bucket shapes the
+        # paced runs will drain (groups of 1, 2, 4, ... per kind —
+        # requests must be freshly stamped per warm call, or the
+        # remaining-budget remap maps their spent deadlines to ng
+        # only), then calibrate the base service rate from a
+        # back-to-back serve of the full mix
+        sched = Scheduler(max_batch=max_batch)
+        size = 1
+        while size <= max_batch:
+            wreqs = [_mk_request(i, q[i % len(q)],
+                                 DEADLINE_MIX[i % len(DEADLINE_MIX)])
+                     for i in range(size * len(DEADLINE_MIX))]
+            sched.run_retrieval(engine, wreqs, k)
+            size *= 2
+        warm = [_mk_request(i, q[i % len(q)],
+                            DEADLINE_MIX[i % len(DEADLINE_MIX)])
+                for i in range(max(len(q), 8))]
+        t0 = obs.now()
+        sched.run_retrieval(engine, warm, k)
+        base_rate = len(warm) / max(obs.now() - t0, 1e-9)
+
+        points: List[Dict[str, Any]] = []
+        for f in factors:
+            rate = f * base_rate
+            stat = _static_point(engine, q, k, n_reqs, rate, max_batch)
+            cont = _continuous_point(engine, q, k, n_reqs, rate,
+                                     max_batch,
+                                     max_depth=max(4 * max_batch, 32))
+            points.append({"load_factor": f,
+                           "offered_rps": round(rate, 1),
+                           "static": stat, "continuous": cont})
+        top = points[-1]
+        beats = (top["continuous"]["p99_ms"] is not None
+                 and top["static"]["p99_ms"] is not None
+                 and top["continuous"]["p99_ms"]
+                 <= top["static"]["p99_ms"])
+        return {
+            "base_rate_rps": round(base_rate, 1),
+            "n_requests": n_reqs,
+            "deadline_mix_ms": list(DEADLINE_MIX),
+            "points": points,
+            "summary": {
+                "top_load_factor": top["load_factor"],
+                "static_p99_ms": top["static"]["p99_ms"],
+                "continuous_p99_ms": top["continuous"]["p99_ms"],
+                "continuous_beats_static": bool(beats),
+            },
+        }
+    finally:
+        if own_engine:
+            engine.close()
+            tmp.cleanup()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", default="default",
+                    choices=("small", "default", "large"))
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    out = run(args.scale, smoke=args.smoke)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

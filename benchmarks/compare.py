@@ -22,13 +22,23 @@ metrics — the ones a code regression actually moves — are held tight:
   ratio metrics    merge/selection speedups vs their retained
                    full-sort baselines: must keep >= RATIO_KEEP of the
                    baseline speedup (a fused kernel silently falling
-                   back to the materializing path shows up here).
+                   back to the materializing path shows up here);
+                   cross-scale runs use the looser
+                   CROSS_SCALE_RATIO_KEEP floor — the sort references
+                   grow superlinearly with scale, the fused paths
+                   don't, so the ratio itself is scale-dependent.
   structural       bytes-read, dataset bytes, shard counts, the
-                   pq_fused_memory no-materialization flag: byte-exact
-                   scale-independent invariants -> tight relative tol
-                   (bytes move only when the access pattern changes).
-  timings          us_per_call / queries_per_s / requests_per_s: must
-                   not degrade by more than TIME_FACTOR x.
+                   pq_fused_memory no-materialization flag, the
+                   serve_load degraded-tier fractions (+/- DEGRADED_TOL
+                   absolute) and its continuous-beats-static headline
+                   flag (baseline flag always; fresh flag at the
+                   baseline's scale, where queueing — not front
+                   overhead — dominates p99): tight tol, they move
+                   only when the access pattern or the shedding/remap
+                   policy changes.
+  timings          us_per_call / queries_per_s / requests_per_s and
+                   the serve_load per-load-point p50/p99: must not
+                   degrade by more than TIME_FACTOR x.
 
 ``--smoke`` collects at the small scale, where absolute values differ
 from the (default-scale) baseline by construction — so scale-dependent
@@ -45,8 +55,16 @@ import re
 import sys
 
 RATIO_KEEP = 0.5     # keep >= 50% of the baseline speedup
+# across scales the speedups are NOT constants — the full-sort
+# references grow superlinearly in pool width while the fused merges
+# stay linear, so a small-scale fresh run legitimately keeps less of a
+# default-scale baseline's ratio. The cross-scale floor only has to
+# catch the failure it exists for: a fused kernel silently falling
+# back to its materializing/full-sort path collapses the ratio to ~1x.
+CROSS_SCALE_RATIO_KEEP = 0.25
 TIME_FACTOR = 3.0    # absolute timings may degrade <= 3x
 BYTES_TOL = 0.05     # structural byte counts move <= 5%
+DEGRADED_TOL = 0.05  # degraded-tier fraction moves <= 5% ABSOLUTE
 
 # sections this gate knows how to diff; anything else found in either
 # snapshot is SKIPPED with a log line, never a crash — future PRs add
@@ -54,7 +72,7 @@ BYTES_TOL = 0.05     # structural byte counts move <= 5%
 KNOWN_SECTIONS = {
     "snapshot", "scale", "backend", "kernels_us",
     "merge_speedup_vs_full_sort", "pq_fused_memory", "query_memory",
-    "query_disk", "engine_ooc", "serve", "obs_overhead",
+    "query_disk", "engine_ooc", "serve", "serve_load", "obs_overhead",
 }
 
 
@@ -104,7 +122,8 @@ def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
             _check(f"speedup/{key}", False, "missing in fresh run",
                    failures, lines)
             continue
-        need = RATIO_KEEP * bval
+        keep = RATIO_KEEP if same_scale else CROSS_SCALE_RATIO_KEEP
+        need = keep * bval
         _check(f"speedup/{key}", fval >= need,
                f"{fval:.2f}x vs baseline {bval:.2f}x "
                f"(floor {need:.2f}x)", failures, lines)
@@ -122,10 +141,81 @@ def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
                    str(fmem.get("materializes_full_matrix")),
                    failures, lines)
 
+    # --- serve_load headline flag: the COMMITTED baseline must claim
+    #     the win — the continuous front beats the static barrier at
+    #     the top load point (PR 9 acceptance). Checked against the
+    #     baseline because it is deterministic at any collection
+    #     scale; the fresh run's flag is only meaningful at the
+    #     baseline's scale (at the small scale engine calls are cheap
+    #     enough that front overhead, not queueing, dominates p99) so
+    #     it is enforced in the same-scale section below.
+    bsl = base.get("serve_load") or {}
+    fsl = fresh.get("serve_load") or {}
+    if bsl:
+        _check("serve_load/continuous_beats_static[baseline]",
+               bool((bsl.get("summary") or {})
+                    .get("continuous_beats_static")),
+               f"baseline summary: {bsl.get('summary')}",
+               failures, lines)
+        if not fsl:
+            _check("serve_load", False, "missing in fresh run",
+                   failures, lines)
+
     if not same_scale:
         lines.append("  (scale differs: scale-dependent metrics "
                      "skipped)")
         return failures, lines
+
+    # --- serve_load curve: per load point, per front — p50/p99 under
+    #     the loose timing tolerance, degraded-tier fraction held to a
+    #     tight ABSOLUTE band (it is a structural quality metric: it
+    #     moves when the shedding/remap policy changes, not when the
+    #     box is merely slow) ---
+    if bsl and fsl:
+        _check("serve_load/continuous_beats_static",
+               bool((fsl.get("summary") or {})
+                    .get("continuous_beats_static")),
+               f"fresh summary: {fsl.get('summary')}",
+               failures, lines)
+        fpts = {p.get("load_factor"): p for p in fsl.get("points", [])}
+        for bp in bsl.get("points", []):
+            lf = bp.get("load_factor")
+            fp = fpts.get(lf)
+            if fp is None:
+                _check(f"serve_load/x{lf}", False,
+                       "load point missing in fresh run",
+                       failures, lines)
+                continue
+            for mode in ("static", "continuous"):
+                bm = bp.get(mode) or {}
+                fm = fp.get(mode) or {}
+                for qk in ("p50_ms", "p99_ms"):
+                    bval = bm.get(qk)
+                    if bval is None:
+                        continue
+                    fval = fm.get(qk)
+                    if fval is None:
+                        _check(f"serve_load/x{lf}/{mode}/{qk}", False,
+                               "missing in fresh run", failures, lines)
+                        continue
+                    hi = bval * TIME_FACTOR
+                    _check(f"serve_load/x{lf}/{mode}/{qk}",
+                           fval <= hi,
+                           f"{fval:.2f}ms vs baseline {bval:.2f}ms "
+                           f"(ceiling {hi:.2f}ms)", failures, lines)
+                bd = bm.get("degraded_frac")
+                fd = fm.get("degraded_frac")
+                if bd is None:
+                    continue
+                if fd is None:
+                    _check(f"serve_load/x{lf}/{mode}/degraded_frac",
+                           False, "missing in fresh run",
+                           failures, lines)
+                    continue
+                _check(f"serve_load/x{lf}/{mode}/degraded_frac",
+                       abs(fd - bd) <= DEGRADED_TOL,
+                       f"{fd:.3f} vs baseline {bd:.3f} "
+                       f"(tol +/-{DEGRADED_TOL})", failures, lines)
 
     # --- structural bytes: tight, same scale only ---
     for sec, key in (("query_disk", "bytes_read_cold_solo"),

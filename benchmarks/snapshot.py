@@ -44,7 +44,7 @@ from repro.store import DeviceLeafCache
 from . import bench_kernels
 from .common import dataset, timeit
 
-SNAPSHOT_NAME = "BENCH_pr6.json"
+SNAPSHOT_NAME = "BENCH_pr9.json"
 
 
 def _repo_root_path(name: str = None) -> str:
@@ -116,12 +116,13 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         eng.query(qj, k, g)  # warm caches + compile
         t0 = time.perf_counter()
         for _ in range(repeats):
-            jax.block_until_ready(eng.query(qj, k, g).dists)
+            res = eng.query(qj, k, g)
+            jax.block_until_ready(res.dists)
         dt = (time.perf_counter() - t0) / repeats
         engine_ooc = {
             "codec": "bf16", "epsilon": 1.0,
             "queries_per_s": round(len(q) / dt, 1),
-            "bytes_read_warm": eng.last_ooc_stats["bytes_read"],
+            "bytes_read_warm": res.stats["bytes_read"],
             "shards": len(eng.shard_dirs),
         }
 
@@ -151,6 +152,12 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
                            for key, val in qn.items()},
         }
 
+        # --- the latency-vs-load curve: static barrier front vs the
+        #     continuous-batching front over the SAME warm engine ---
+        from . import bench_serve_load
+        serve_load = bench_serve_load.run(scale, smoke=smoke,
+                                          engine=eng)
+
     return {
         "snapshot": SNAPSHOT_NAME,
         "scale": scale,
@@ -166,6 +173,7 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         "query_disk": disk,
         "engine_ooc": engine_ooc,
         "serve": serve,
+        "serve_load": serve_load,
         "obs_overhead": obs_overhead,
     }
 

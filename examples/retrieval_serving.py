@@ -105,8 +105,12 @@ with tempfile.TemporaryDirectory() as tmp:
         print(f"{uid:3d} {dls:>9s} {ret['kind']:>14s} "
               f"{m['avg_recall']:9.2f} {tok_str:>24s}")
 
-    mb = engine.last_ooc_stats["bytes_read"] / 1e6
-    print(f"\nserved {len(results)} requests out-of-core (last batch "
+    # per-query I/O accounting rides each result entry's stats
+    # (QueryResult.stats) — summed here over every request's own group
+    mb = sum(r["retrieval"]["stats"]["bytes_read"]
+             for r in results.values()
+             if r.get("retrieval", {}).get("stats") is not None) / 1e6
+    print(f"\nserved {len(results)} requests out-of-core (groups "
           f"read {mb:.2f} MB from disk) — tight deadlines degraded "
           "through delta-epsilon to ng(nprobe) retrieval instead of "
           "dropping (paper Fig. 8: the first bsf is already "

@@ -56,7 +56,7 @@ def main() -> int:
             warnings.simplefilter("ignore", UserWarning)
             res = eng.query(qj, K, Guarantee(),
                             ooc_opts={"fault": inj, "retry": retry})
-        st = eng.last_ooc_stats
+        st = res.stats
         assert st.degraded and st.shards_lost == 1, st
         bounds = np.linspace(0, N, SHARDS + 1).astype(np.int64)
         mask = np.ones(N, bool)
@@ -78,7 +78,7 @@ def main() -> int:
         inj2 = FaultInjector().kill_shard(1, replica=0)
         res2 = eng.query(qj, K, Guarantee(),
                          ooc_opts={"fault": inj2, "retry": retry})
-        st2 = eng.last_ooc_stats
+        st2 = res2.stats
         assert not st2.degraded and st2.failovers >= 1, st2
         assert np.array_equal(np.asarray(res2.ids),
                               np.asarray(clean.ids))

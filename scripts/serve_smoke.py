@@ -1,12 +1,16 @@
 """Serve-path smoke for scripts/verify.sh: Scheduler -> engine.query
-over a tiny spilled store.
+over a tiny spilled store, plus the continuous-batching front.
 
 Builds a small DistributedEngine, spills it (keep_resident=False so
 every query MUST run the out-of-core path), pushes a mixed-deadline
 request batch through the Scheduler retrieval front, and checks the
-full-budget group's answers against brute force. Fails loudly if the
-deadline->guarantee mapping, the per-group engine dispatch, or the
-spilled-shard serving path stops working.
+full-budget group's answers against brute force. Then drives the SAME
+engine through the continuous front (serve/loop.ServeFront): mixed
+deadlines submitted from the caller thread, lane workers answering
+concurrently, every no-deadline (exact-tier) answer checked against
+brute force, admission depth back to zero after drain. Fails loudly
+if the deadline->guarantee mapping, the per-group engine dispatch,
+the spilled-shard serving path, or the lane loop stops working.
 
 Runs with span tracing ENABLED; when ``OBS_CHROME_TRACE`` is set the
 collected spans are written there as Chrome trace-event JSON and
@@ -30,6 +34,38 @@ from repro import obs
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.serve.batching import Request, Scheduler
+from repro.serve.loop import ServeFront
+
+
+def _continuous_section(eng, queries, truth):
+    """Drive the continuous front over the already-built engine:
+    mixed deadlines, answers via tickets, exact tier vs brute force."""
+    deadlines = [None, 40.0, 8.0, None, 2.0, 40.0, None, 8.0]
+    reqs = [Request(uid=100 + i, prompt=np.zeros(4, np.int32),
+                    deadline_ms=deadlines[i], series=queries[i])
+            for i in range(len(deadlines))]
+    with ServeFront(eng, k=5, max_batch=4) as front:
+        tickets = [front.submit(r) for r in reqs]
+        outs = {t.uid: t.result(timeout=60.0) for t in tickets}
+    assert sorted(outs) == [100 + i for i in range(len(reqs))], \
+        "continuous front dropped requests"
+    assert not any("error" in o for o in outs.values()), outs
+    # no-deadline requests keep the exact tier no matter the queue
+    # wait — their answers must equal brute force bit for bit
+    for i, dl in enumerate(deadlines):
+        if dl is None:
+            assert outs[100 + i]["kind"] == "exact", outs[100 + i]
+            assert np.array_equal(outs[100 + i]["ids"],
+                                  np.asarray(truth.ids[i])), i
+    # tight deadlines map to lower tiers (possibly lower than the
+    # nominal tier — queue wait spends the budget)
+    assert outs[104]["kind"] == "ng", outs[104]
+    assert front.admission.depth == 0
+    assert obs.REGISTRY.gauge("serve.queue_depth").value == 0
+    acc = sum(c.value for c in obs.REGISTRY.collect(
+        "serve.admission.accepted"))
+    assert acc >= len(reqs), acc
+    return outs
 
 
 def main() -> int:
@@ -42,9 +78,6 @@ def main() -> int:
     truth = S.brute_force(jnp.asarray(queries), jnp.asarray(data), 5)
 
     deadlines = [None, None, 40.0, 40.0, 12.0, 2.0, None, 12.0]
-    reqs = [Request(uid=i, prompt=np.zeros(4, np.int32),
-                    deadline_ms=deadlines[i], series=queries[i])
-            for i in range(len(deadlines))]
 
     obs.enable()
     try:
@@ -53,7 +86,15 @@ def main() -> int:
             eng = DistributedEngine(mesh, method="dstree").build(
                 data, leaf_cap=32, spill_dir=os.path.join(tmp, "spill"),
                 codec="f32", keep_resident=False)
+            # stamp the requests AFTER the (seconds-long) build:
+            # guarantees map from the budget REMAINING at drain time,
+            # so a request submitted before the build would drain with
+            # its deadline already spent
+            reqs = [Request(uid=i, prompt=np.zeros(4, np.int32),
+                            deadline_ms=deadlines[i], series=queries[i])
+                    for i in range(len(deadlines))]
             out = Scheduler().run_retrieval(eng, reqs, k=5)
+            cont = _continuous_section(eng, queries, truth)
     finally:
         obs.disable()
 
@@ -65,8 +106,11 @@ def main() -> int:
     for u in (0, 1, 6):
         assert np.array_equal(out[u]["ids"],
                               np.asarray(truth.ids[u])), u
-    assert eng.last_ooc_stats is not None \
-        and eng.last_ooc_stats["bytes_read"] > 0
+    # per-query stats ride the result entries (QueryResult.stats);
+    # groups after the first may serve fully from the warm cache, so
+    # the I/O accounting check is over the whole batch
+    assert all(out[u]["stats"] is not None for u in out)
+    assert sum(out[u]["stats"]["bytes_read"] for u in out) > 0
     # every retrieval group carries its own timed latency
     assert all(out[u]["retrieval_ms"] > 0 for u in out)
 
@@ -95,7 +139,9 @@ def main() -> int:
     obs.clear()
     print("serve smoke OK: scheduler -> engine.query over spilled "
           f"shards ({len(out)} requests, kinds: "
-          f"{sorted(set(kinds.values()))})")
+          f"{sorted(set(kinds.values()))}); continuous front answered "
+          f"{len(cont)} requests across lanes "
+          f"{sorted({o['kind'] for o in cont.values()})}")
     return 0
 
 

@@ -32,7 +32,7 @@ run_fast() {
   python -m pytest -q -m tier1 "${WFLAGS[@]}"
   echo "== verify: bench snapshot smoke (compile-only, small scale) =="
   python -m benchmarks.run --snapshot --smoke
-  echo "== verify: serve smoke (Scheduler -> engine.query, spilled store) =="
+  echo "== verify: serve smoke (static Scheduler + continuous ServeFront, spilled store) =="
   python scripts/serve_smoke.py
   echo "== verify: obs smoke (span tree vs counters, bit-exact) =="
   python scripts/obs_smoke.py

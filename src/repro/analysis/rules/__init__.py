@@ -4,5 +4,5 @@ check with ``@core.rule(...)``, import it below, and give it a
 positive + negative fixture in tests/test_analysis.py (the meta test
 fails otherwise). docs/ANALYSIS.md is the catalog."""
 
-from . import (broad_except, clock, guarded_by, jax_traps,  # noqa: F401
-               stats_schema)
+from . import (broad_except, clock, engine_state,  # noqa: F401
+               guarded_by, jax_traps, stats_schema)

@@ -1,0 +1,51 @@
+"""engine-stats: per-query engine state must travel on the result.
+
+PR 9 removed ``DistributedEngine.last_ooc_stats``: a mutable
+per-query field on a shared engine misattributes stats the moment two
+``query()`` calls run concurrently (the continuous-batching front has
+one in flight per guarantee lane), and the serving code that read it
+after ``query`` returned raced exactly that way
+(serve/batching.run_retrieval). Stats now ride the returned
+``QueryResult.stats``. This rule keeps the old channel from growing
+back: ANY attribute access spelled ``.last_ooc_stats`` — read, write,
+or getattr-by-name — outside ``repro/core/engine.py`` is an error,
+and inside the engine too (the field is gone; the only allowed
+mentions are docstrings). ``getattr(x, "last_ooc_stats", ...)`` is
+caught as well: that spelling is how the race hid from review the
+first time.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .. import core
+from ..core import Finding, Project
+
+FIELD = "last_ooc_stats"
+
+
+@core.rule("engine-stats",
+           "per-query engine state read through the removed "
+           "last_ooc_stats channel instead of QueryResult.stats")
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr == FIELD:
+                yield Finding(
+                    "engine-stats", mod.path, node.lineno,
+                    f"'.{FIELD}' is a removed per-query mutable "
+                    "engine channel — stats travel on the result "
+                    "(core.engine.QueryResult.stats)")
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id in ("getattr", "setattr", "hasattr")
+                  and len(node.args) >= 2
+                  and isinstance(node.args[1], ast.Constant)
+                  and node.args[1].value == FIELD):
+                yield Finding(
+                    "engine-stats", mod.path, node.lineno,
+                    f"{node.func.id}(..., '{FIELD}') reads the "
+                    "removed per-query engine channel — use "
+                    "QueryResult.stats on the returned result")

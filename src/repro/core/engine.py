@@ -42,7 +42,7 @@ import shutil
 import threading
 import warnings
 from concurrent.futures import ThreadPoolExecutor, as_completed
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +59,27 @@ from .histogram import DistanceHistogram, build_histogram
 from .index import FrozenIndex
 from .indexes import dstree, isax, vafile
 from .search import SearchResult, search_impl
+
+
+class QueryResult(NamedTuple):
+    """What :meth:`DistributedEngine.query` returns: the SearchResult
+    fields plus the per-query :class:`OocStats` traveling WITH the
+    answer. Stats used to be published through the mutable
+    ``engine.last_ooc_stats`` field, which misattributes them the
+    moment two ``query()`` calls run concurrently (the continuous-
+    batching serving front has one in flight per lane) — so the field
+    is gone and the ``engine-stats`` analysis rule keeps it gone
+    (docs/ANALYSIS.md). ``stats`` is None on the resident shard_map
+    path (no I/O to account) and an aggregated OocStats on the
+    out-of-core path (per-shard schemas under ``.stats.shards``,
+    degradation triple when shards were lost — docs/FAULT.md)."""
+
+    dists: jax.Array           # [B, k] Euclidean distances, ascending
+    ids: jax.Array             # [B, k] global row ids (-1 = missing)
+    leaves_visited: jax.Array  # [B] int32, summed over shards
+    rows_scanned: jax.Array    # [B] int32, summed over shards
+    lb_computed: jax.Array     # scalar int32
+    stats: Optional[OocStats] = None
 
 _BUILDERS = {
     "isax2+": isax.build,
@@ -114,7 +135,9 @@ class DistributedEngine:
     shard_replica_dirs: Optional[Tuple[Tuple[str, ...], ...]] = None
     # jitted query fns keyed by (k, guarantee, batch shape, ...): the
     # shard_map body closes over those values, so a fresh closure per
-    # call would defeat jit's compile cache
+    # call would defeat jit's compile cache. Lock-free on purpose:
+    # dict get/set are GIL-atomic and two threads racing to build the
+    # same key produce interchangeable callables (last one wins)
     _query_fns: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
     # out-of-core serving state: per-shard LeafStore handles + warm
@@ -124,14 +147,20 @@ class DistributedEngine:
         default_factory=dict, repr=False, compare=False)
     _shard_caches: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
-    # aggregated OocStats of the last out-of-core query (typed schema,
-    # Mapping-style access preserved; per-shard schemas under .shards)
-    last_ooc_stats: Optional[OocStats] = dataclasses.field(
-        default=None, repr=False, compare=False)
     # serializes _stores/_shard_caches mutation against concurrent
     # shard owners and close(); per-shard search runs OUTSIDE it
     _ooc_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
+    # per shard-store-copy serving locks: CONCURRENT query() calls
+    # (one per serving lane) share the warm per-copy DeviceLeafCache,
+    # whose slot pool is only consistent for one query at a time (a
+    # second query's get_slots may evict a slot the first is about to
+    # gather) — so one query's use of one copy is one critical
+    # section. Distinct shards/copies still serve fully in parallel;
+    # lock order is copy lock -> _ooc_lock -> cache._lock (acyclic,
+    # asserted by the lockorder stress test)
+    _copy_locks: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
     # persistent per-(shard, copy) circuit breaker (serve/fault.py),
     # created lazily on the first fault-tolerant OOC query
     _breaker: Optional[object] = dataclasses.field(
@@ -313,7 +342,7 @@ class DistributedEngine:
         self, queries, k: int, g: Guarantee = Guarantee(),
         visit_batch: int = 1, sync_bsf: bool = False,
         ooc: Optional[bool] = None, ooc_opts: Optional[dict] = None,
-    ) -> SearchResult:
+    ) -> QueryResult:
         """Batched distributed k-NN with the requested guarantee.
 
         Spill-built shards are first class: when the engine has no
@@ -328,11 +357,15 @@ class DistributedEngine:
         ``retry`` (a serve.fault.RetryPolicy), ``workers`` (shard
         owner pool width; default min(n_shards, 8), 1 = the
         sequential fold). Per-shard caches stay warm across queries.
-        Aggregate per-shard stats land in ``self.last_ooc_stats`` —
-        including the degradation block (degraded / shards_lost /
-        effective_delta) when a shard was lost past its replicas."""
-        self.last_ooc_stats = None  # stale stats must not outlive
-        #                             a query that takes another path
+
+        Re-entrant: concurrent ``query()`` calls (the continuous-
+        batching serving lanes each keep one in flight) return answers
+        bit-exact to serial execution — per-query state travels on the
+        returned :class:`QueryResult` (``.stats`` carries the
+        aggregate per-shard OocStats, including the degradation block
+        when a shard was lost past its replicas), and shared warm
+        caches are serialized per shard copy so two queries never
+        interleave on one slot pool."""
         if ooc is None:
             ooc = self.stacked is None and self.shard_dirs is not None
         if ooc:
@@ -423,12 +456,15 @@ class DistributedEngine:
         return self._run_resident(fn, idx, queries, k, b)
 
     def _run_resident(self, fn, idx, queries, k: int, b: int
-                      ) -> SearchResult:
+                      ) -> QueryResult:
         """Dispatch the (cached) shard_map'ed resident query, wrapped
         in a span when tracing is enabled. The block_until_ready is
-        span-only: the untraced path keeps its async dispatch."""
+        span-only: the untraced path keeps its async dispatch. The
+        resident path has no I/O to account, so ``stats`` is None —
+        thread-safe by construction (eager shard_map dispatch touches
+        no per-query engine state)."""
         if not obs.enabled():
-            return fn(idx, queries)
+            return QueryResult(*fn(idx, queries))
         with obs.span("engine.query", path="resident", lanes=b, k=k,
                       shards=self.n_shards) as sp:
             res = fn(idx, queries)
@@ -436,9 +472,25 @@ class DistributedEngine:
             sp.set(leaves_visited=int(np.asarray(
                        res.leaves_visited).sum()),
                    rows_scanned=int(np.asarray(res.rows_scanned).sum()))
-        return res
+        return QueryResult(*res)
 
     # ------------------------------------------------------------------
+    def _copy_lock(self, d: str) -> threading.RLock:
+        """The serving lock for one shard store copy (lazily created
+        under ``_ooc_lock``, held for a whole per-shard search):
+        concurrent queries — serving lanes each keep one in flight —
+        serialize per copy because the warm DeviceLeafCache slot pool
+        is single-query state (another query's get_slots may evict a
+        slot this one is about to gather from, which would break the
+        bit-exact-vs-serial contract). Within one query the shard
+        owners touch DISTINCT copies, so PR 8's concurrent fold is
+        unaffected."""
+        with self._ooc_lock:
+            lk = self._copy_locks.get(d)
+            if lk is None:
+                lk = self._copy_locks[d] = threading.RLock()
+            return lk
+
     def _store(self, d: str):
         """The (lazily opened, cached) store for one shard copy —
         lock-guarded: concurrent shard owners open their stores in
@@ -490,7 +542,7 @@ class DistributedEngine:
                 self._shard_caches[d] = cache
             else:
                 # warm CONTENTS persist across queries (the serving
-                # regime); counters reset so last_ooc_stats reports
+                # regime); counters reset so QueryResult.stats reports
                 # this query's bytes, not the cache's lifetime
                 cache.reset_counters()
             if prefetch:
@@ -522,7 +574,7 @@ class DistributedEngine:
                 cache.prefetcher = None
 
     def _query_ooc(self, queries, k: int, g: Guarantee,
-                   visit_batch: int, opts: dict) -> SearchResult:
+                   visit_batch: int, opts: dict) -> QueryResult:
         """Serve the query batch from the spilled shard stores:
         CONCURRENT shard owners (one worker per shard, pool width
         ``workers``) each drive the host refinement loop over their
@@ -550,8 +602,8 @@ class DistributedEngine:
         host loop, a persistent circuit breaker skipping copies that
         keep failing. A shard lost past every copy degrades the
         answer instead of failing the query: the fold completes over
-        the survivors and ``last_ooc_stats`` carries ``degraded`` /
-        ``shards_lost`` / ``effective_delta`` with delta recomputed
+        the survivors and the returned ``QueryResult.stats`` carries
+        ``degraded`` / ``shards_lost`` / ``effective_delta`` with delta recomputed
         from the global histogram mass the missing rows own
         (core.guarantees.effective_delta_after_loss)."""
         from repro.serve import fault as sfault
@@ -582,22 +634,31 @@ class DistributedEngine:
 
         def attempt_for(si):
             def attempt(d, fctx):
-                store = self._store(d)
-                cache = self._shard_cache(
-                    d, store, b * visit_batch, cache_leaves,
-                    prefetch_depth=prefetch_depth, prefetch=prefetch)
-                # the child ooc.query span carries the shard's
-                # bytes_read attr — one subtree level owns each
-                # numeric attr, so QueryProfile.total() never
-                # double-counts. Worker-thread spans root their own
-                # per-thread subtree (obs/trace.py).
-                with obs.span("engine.shard", shard=si,
-                              copy=fctx.replica):
-                    return search_ooc(
-                        store, qj, k, delta=g.delta,
-                        epsilon=g.epsilon, nprobe=g.nprobe,
-                        visit_batch=visit_batch, cache=cache,
-                        fault=fctx, **opts)
+                # one query's use of one copy is one critical section
+                # (_copy_lock): cache revalidation, counter window and
+                # slot-pool occupancy stay single-query even when
+                # serving lanes race on the same shard. An attempt
+                # that waits out its deadline here fails on its first
+                # in-loop check and falls over to another copy — a
+                # DIFFERENT lock — instead of queueing forever.
+                with self._copy_lock(d):
+                    store = self._store(d)
+                    cache = self._shard_cache(
+                        d, store, b * visit_batch, cache_leaves,
+                        prefetch_depth=prefetch_depth,
+                        prefetch=prefetch)
+                    # the child ooc.query span carries the shard's
+                    # bytes_read attr — one subtree level owns each
+                    # numeric attr, so QueryProfile.total() never
+                    # double-counts. Worker-thread spans root their
+                    # own per-thread subtree (obs/trace.py).
+                    with obs.span("engine.shard", shard=si,
+                                  copy=fctx.replica):
+                        return search_ooc(
+                            store, qj, k, delta=g.delta,
+                            epsilon=g.epsilon, nprobe=g.nprobe,
+                            visit_batch=visit_batch, cache=cache,
+                            fault=fctx, **opts)
             return attempt
 
         def serve_one(si):
@@ -681,12 +742,12 @@ class DistributedEngine:
                          effective_delta=stats.effective_delta)
             root.set(bytes_read_total=stats.bytes_read,
                      iterations=stats.iterations)
-        self.last_ooc_stats = stats
-        return SearchResult(
+        return QueryResult(
             dists=top_d, ids=top_i,
             leaves_visited=jnp.asarray(leaves, jnp.int32),
             rows_scanned=jnp.asarray(rows, jnp.int32),
             lb_computed=jnp.int32(lbs),
+            stats=stats,
         )
 
     def _degrade(self, stats: OocStats, lost, infos, top_d, k: int,

@@ -28,6 +28,17 @@ Per-request components land in the metrics registry as
 ``serve.deadline.{hit,miss}{kind=...}`` counters, and each drained
 batch is a ``serve.batch`` span when tracing is enabled
 (docs/OBSERVABILITY.md).
+
+Two fronts (docs/SERVING.md): :func:`serve_requests` is the STATIC
+barrier loop — drain a batch, decode it, retrieve for it, repeat; a
+request's retrieval waits for its whole batch round.
+:func:`serve_requests_continuous` routes retrieval through the
+continuous-batching :class:`repro.serve.loop.ServeFront` instead:
+retrieval is submitted at REQUEST-submit time into per-guarantee
+lanes that refill as engine calls complete, overlapping decode, with
+admission control and shedding. The static loop stays as the bench
+baseline (benchmarks/bench_serve_load.py measures both sides of the
+latency-vs-load curve).
 """
 
 from __future__ import annotations
@@ -41,6 +52,7 @@ import numpy as np
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.serve.batching import Request, Scheduler, guarantee_for_deadline
+from repro.serve.loop import Rejected, ServeFront
 from repro.serve.serve_step import generate
 
 
@@ -120,6 +132,7 @@ def serve_requests(
                     entry["retrieval"] = {
                         "ids": hit_r["ids"], "dists": hit_r["dists"],
                         "kind": hit_r["kind"],
+                        "stats": hit_r.get("stats"),
                     }
                     if hit_r.get("degraded"):
                         # shard(s) lost past retries/replicas: the
@@ -134,3 +147,121 @@ def serve_requests(
                             hit_r["shards_lost"]
                 results[r.uid] = entry
     return results
+
+
+def serve_requests_continuous(
+    params,
+    cfg: ModelConfig,
+    requests: List[Request],
+    *,
+    engine=None,
+    retrieval_k: int = 5,
+    max_batch: int = 8,
+    guarantee_kw: Optional[dict] = None,
+    admission=None,
+) -> Dict[int, Dict[str, Any]]:
+    """Serve a request list with retrieval on the continuous front.
+
+    Retrieval is submitted to a :class:`ServeFront` the moment a
+    request enters the system, so engine calls overlap the decode
+    batches instead of serializing after them (the static loop's
+    barrier). Each request's ``latency_ms`` is the LATER of its decode
+    completion and its retrieval completion minus its submit stamp —
+    the component breakdown (queue_wait / generate / retrieval) is
+    unchanged, but retrieval time the decode path already covered
+    costs nothing extra. A request rejected by admission control
+    (``admission`` caps in-system retrieval depth) still decodes;
+    its entry carries ``retrieval_rejected`` with the reason. The
+    front remaps guarantees from the REMAINING deadline budget at
+    drain time and degrades tiers under shedding — the ``retrieval``
+    entry's ``kind`` is the tier actually honored."""
+    sched = Scheduler(max_batch=max_batch)
+    gkw = dict(guarantee_kw or {})
+    tickets: Dict[int, Any] = {}
+    rejected: Dict[int, str] = {}
+    front = None
+    if engine is not None:
+        front = ServeFront(engine, retrieval_k, max_batch=max_batch,
+                           admission=admission,
+                           guarantee_kw=gkw).start()
+    try:
+        for r in requests:
+            sched.submit(r)
+            if front is not None and r.series is not None:
+                try:
+                    tickets[r.uid] = front.submit(r)
+                except Rejected as e:
+                    rejected[r.uid] = e.reason
+        results: Dict[int, Dict[str, Any]] = {}
+        decode_done: Dict[int, float] = {}
+        while True:
+            nb = sched.next_batch()
+            if nb is None:
+                break
+            bucket, reqs = nb
+            with obs.span("serve.batch", bucket=bucket,
+                          requests=len(reqs)):
+                t_drain = obs.now()
+                prompts = jnp.asarray(sched.pad_prompts(bucket, reqs))
+                n_new = max(r.max_new_tokens for r in reqs)
+                with obs.span("serve.generate", tokens=n_new):
+                    t0 = obs.now()
+                    toks, aux = generate(params, cfg, prompts, n_new)
+                    toks = jax.block_until_ready(toks)
+                    generate_ms = (obs.now() - t0) * 1e3
+                for i, r in enumerate(reqs):
+                    queue_wait_ms = max(
+                        (t_drain - r.submitted_at) * 1e3, 0.0)
+                    results[r.uid] = {
+                        "tokens": np.asarray(
+                            toks[i, : r.max_new_tokens]),
+                        "queue_wait_ms": queue_wait_ms,
+                        "generate_ms": generate_ms,
+                        "retrieval_ms": 0.0,
+                    }
+                    decode_done[r.uid] = obs.now()
+        if front is not None:
+            front.stop(drain=True)
+            front = None
+        reg = obs.REGISTRY
+        for r in requests:
+            entry = results[r.uid]
+            done = decode_done[r.uid]
+            kind = guarantee_for_deadline(r.deadline_ms, **gkw).kind
+            if r.uid in tickets:
+                hit_r = tickets[r.uid].result()
+                if "error" in hit_r:
+                    entry["retrieval_error"] = hit_r["error"]
+                else:
+                    entry["retrieval_ms"] = hit_r["retrieval_ms"]
+                    done = max(done, hit_r["done_at"])
+                    kind = hit_r["kind"]
+                    entry["retrieval"] = {
+                        k: hit_r[k] for k in
+                        ("ids", "dists", "kind", "nominal_kind",
+                         "stats")}
+                    for extra in ("shed", "degraded", "requested_kind",
+                                  "effective_delta", "shards_lost"):
+                        if extra in hit_r:
+                            entry["retrieval"][extra] = hit_r[extra]
+            elif r.uid in rejected:
+                entry["retrieval_rejected"] = rejected[r.uid]
+            latency_ms = max((done - r.submitted_at) * 1e3, 0.0)
+            entry["latency_ms"] = latency_ms
+            entry["guarantee"] = kind
+            reg.histogram("serve.queue_wait_ms").record(
+                entry["queue_wait_ms"])
+            reg.histogram("serve.generate_ms").record(
+                entry["generate_ms"])
+            reg.histogram("serve.latency_ms", kind=kind).record(
+                latency_ms)
+            if r.deadline_ms is not None:
+                hit = latency_ms <= r.deadline_ms
+                entry["deadline_hit"] = bool(hit)
+                reg.counter(
+                    "serve.deadline.hit" if hit
+                    else "serve.deadline.miss", kind=kind).inc()
+        return results
+    finally:
+        if front is not None:
+            front.stop(drain=False)

@@ -1,7 +1,10 @@
 """OocStats — THE typed per-query out-of-core telemetry schema.
 
 Replaces the free-form dicts that used to flow out of
-``search_ooc(...).stats`` and ``DistributedEngine.last_ooc_stats``:
+``search_ooc(...).stats`` and the engine (today:
+``DistributedEngine.query(...)`` returns it on ``QueryResult.stats``;
+the old mutable ``last_ooc_stats`` channel is gone — the
+``engine-stats`` analysis rule fails any read of it):
 every field is declared once here, the SAME instance feeds the span
 tree (``search_ooc`` sets its fields as root-span attributes) and the
 metrics registry, so the three views can never drift. Mapping-style

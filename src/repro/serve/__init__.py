@@ -1,3 +1,3 @@
-from . import batching, serve_step
+from . import admission, batching, loop, serve_step
 
-__all__ = ["batching", "serve_step"]
+__all__ = ["admission", "batching", "loop", "serve_step"]

@@ -91,16 +91,37 @@ def guarantee_for_deadline(
     return Guarantee(nprobe=max(nprobe_floor, nprobe))
 
 
+def remaining_budget_ms(r: Request, at: float) -> Optional[float]:
+    """The deadline budget a request has LEFT at time ``at`` (an
+    ``obs.now`` stamp): ``deadline_ms`` minus the queue wait already
+    spent. None (no deadline) stays None; a fully-spent budget clamps
+    to ~0 and maps to the bottom ng tier instead of going negative."""
+    if r.deadline_ms is None:
+        return None
+    waited_ms = (at - r.submitted_at) * 1e3
+    return max(r.deadline_ms - waited_ms, 1e-3)
+
+
 def retrieval_groups(
-    reqs: Sequence[Request], **gkw,
+    reqs: Sequence[Request], at: Optional[float] = None, **gkw,
 ) -> List[Tuple[Guarantee, List[Request]]]:
     """Partition a drained batch by its deadline-mapped guarantee
     (insertion-ordered, deterministic): the engine takes ONE guarantee
     per query batch, so mixed-deadline batches fan out into one
-    engine call per distinct guarantee."""
+    engine call per distinct guarantee.
+
+    ``at`` (an ``obs.now`` stamp) switches the mapping from the
+    SUBMITTED deadline to the budget REMAINING at drain time: a
+    request that already burned 40ms of a 50ms budget in the queue
+    maps from the 10ms it has left, not the tier it could have hit had
+    it drained instantly. The drain loops pass their drain timestamp;
+    the default (None) keeps this function pure for callers that want
+    the submitted-deadline partition."""
     groups: Dict[Guarantee, List[Request]] = {}
     for r in reqs:
-        g = guarantee_for_deadline(r.deadline_ms, **gkw)
+        budget = (r.deadline_ms if at is None
+                  else remaining_budget_ms(r, at))
+        g = guarantee_for_deadline(budget, **gkw)
         groups.setdefault(g, []).append(r)
     return list(groups.items())
 
@@ -128,13 +149,26 @@ class Scheduler:
             self.queues[bucket].append(req)
 
     def next_batch(self) -> Optional[Tuple[int, List[Request]]]:
+        """Drain up to ``max_batch`` requests from the bucket whose HEAD
+        request has waited longest. Draining buckets in sorted-key
+        order (the old policy) starves large prompts: under sustained
+        small-request load the smallest bucket never empties, so a
+        request in a bigger bucket waits forever. Oldest-head-first is
+        FIFO across buckets (each bucket is FIFO internally), so every
+        bucket drains within one max_batch round of its head's turn."""
         with self._lock:
-            for bucket, q in sorted(self.queues.items()):
-                if q:
-                    take = q[: self.max_batch]
-                    self.queues[bucket] = q[len(take):]
-                    return bucket, take
-        return None
+            best = None
+            for bucket, q in self.queues.items():
+                if q and (best is None
+                          or q[0].submitted_at
+                          < self.queues[best][0].submitted_at):
+                    best = bucket
+            if best is None:
+                return None
+            q = self.queues[best]
+            take = q[: self.max_batch]
+            self.queues[best] = q[len(take):]
+            return best, take
 
     def pad_prompts(self, bucket: int, reqs: List[Request]) -> np.ndarray:
         out = np.zeros((len(reqs), bucket), np.int32)
@@ -157,12 +191,19 @@ class Scheduler:
         time (each group is timed to completion separately), so
         per-request latency attribution never charges a request for
         another group's work. Group times also land in the registry
-        as ``serve.retrieval_ms{kind=...}`` histograms."""
+        as ``serve.retrieval_ms{kind=...}`` histograms.
+
+        Guarantees are mapped from the budget REMAINING at drain time
+        (``retrieval_groups(..., at=drain_stamp)``): queue wait spends
+        the deadline, so a request that waited 40ms of a 50ms budget
+        gets the tier its 10ms can still honor."""
         import jax.numpy as jnp
 
         out: Dict[int, Dict[str, Any]] = {}
+        drained_at = obs.now()
         for g, group in retrieval_groups(
-                [r for r in reqs if r.series is not None], **gkw):
+                [r for r in reqs if r.series is not None],
+                at=drained_at, **gkw):
             qs = np.stack([np.asarray(r.series, np.float32)
                            for r in group])
             lanes = bucket_of(qs.shape[0], 1)
@@ -184,8 +225,12 @@ class Scheduler:
             # lost shards past retries and replicas, the answer's
             # honest guarantee is delta-epsilon with the recomputed
             # effective_delta — surface that per request instead of
-            # echoing the requested tier
-            stats = getattr(engine, "last_ooc_stats", None)
+            # echoing the requested tier. Stats travel ON the result
+            # (QueryResult.stats): reading mutable engine state here
+            # misattributed degradation the moment lane workers ran
+            # query() concurrently. getattr tolerates plain
+            # SearchResult from stub engines in tests.
+            stats = getattr(res, "stats", None)
             degraded = bool(stats is not None and stats.degraded)
             kind = "delta-epsilon" if degraded else g.kind
             if degraded:
@@ -198,6 +243,7 @@ class Scheduler:
                     "guarantee": g,
                     "kind": kind,
                     "retrieval_ms": group_ms,
+                    "stats": stats,
                 }
                 if degraded:
                     entry["degraded"] = True

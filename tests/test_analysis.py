@@ -229,6 +229,19 @@ FIXTURES = {
                     return None
             """)},
     },
+    "engine-stats": {
+        "positive": {"repro/fx/engstat_pos.py": _fix("""
+            def degraded(engine, res):
+                a = engine.last_ooc_stats
+                b = getattr(engine, "last_ooc_stats", None)
+                return a, b
+            """)},
+        "negative": {"repro/fx/engstat_neg.py": _fix("""
+            def degraded(res):
+                stats = getattr(res, "stats", None)
+                return stats is not None and stats.degraded
+            """)},
+    },
     "stats-schema": {
         "positive": {"repro/fx/stats_pos.py": _fix("""
             def report(a, b, c):

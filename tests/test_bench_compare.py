@@ -1,0 +1,101 @@
+"""benchmarks/compare.py gating semantics over hand-built snapshots.
+
+The bench gate is pure dict-in / failures-out (``compare(base, fresh,
+same_scale=...)``), so its tolerance policy — the thing CI trusts to
+catch a perf regression — is unit-testable without running a single
+benchmark. These tests pin the PR 9 ``serve_load`` rules and the
+cross-scale ratio floor.
+"""
+
+import pytest
+
+from benchmarks import compare as C
+
+pytestmark = pytest.mark.tier1
+
+
+def _point(lf, static_p99, cont_p99, *, static_deg=0.4, cont_deg=0.4):
+    return {
+        "load_factor": lf,
+        "static": {"p50_ms": static_p99 / 2, "p99_ms": static_p99,
+                   "degraded_frac": static_deg},
+        "continuous": {"p50_ms": cont_p99 / 2, "p99_ms": cont_p99,
+                       "degraded_frac": cont_deg},
+    }
+
+
+def _snap(*, beats=True, points=None):
+    points = points if points is not None else [_point(4.0, 1000.0, 800.0)]
+    top = points[-1]
+    return {
+        "serve_load": {
+            "points": points,
+            "summary": {
+                "top_load_factor": top["load_factor"],
+                "static_p99_ms": top["static"]["p99_ms"],
+                "continuous_p99_ms": top["continuous"]["p99_ms"],
+                "continuous_beats_static": beats,
+            },
+        },
+    }
+
+
+def _failed(base, fresh, *, same_scale):
+    failures, _lines = C.compare(base, fresh, same_scale=same_scale)
+    return failures
+
+
+def test_baseline_flag_checked_even_cross_scale():
+    # a committed curve where continuous LOSES must fail the gate no
+    # matter what scale the fresh run collected at
+    fails = _failed(_snap(beats=False), _snap(), same_scale=False)
+    assert any("continuous_beats_static[baseline]" in f for f in fails)
+    assert not _failed(_snap(), _snap(), same_scale=False)
+
+
+def test_fresh_flag_enforced_only_same_scale():
+    # at the small smoke scale engine calls are cheap enough that
+    # front overhead, not queueing, dominates p99 — the fresh flag is
+    # only meaningful at the baseline's own scale
+    losing = _snap(beats=False)
+    assert not [f for f in _failed(_snap(), losing, same_scale=False)
+                if f == "serve_load/continuous_beats_static"]
+    fails = _failed(_snap(), losing, same_scale=True)
+    assert "serve_load/continuous_beats_static" in fails
+
+
+def test_per_point_p99_ceiling_and_degraded_band():
+    base = _snap()
+    slow = _snap(points=[_point(
+        4.0, 1000.0 * C.TIME_FACTOR * 1.1, 800.0)])
+    fails = _failed(base, slow, same_scale=True)
+    assert "serve_load/x4.0/static/p99_ms" in fails
+    shifted = _snap(points=[_point(
+        4.0, 1000.0, 800.0, cont_deg=0.4 + C.DEGRADED_TOL + 0.01)])
+    fails = _failed(base, shifted, same_scale=True)
+    assert "serve_load/x4.0/continuous/degraded_frac" in fails
+    within = _snap(points=[_point(
+        4.0, 1000.0 * 1.5, 800.0, cont_deg=0.4 + C.DEGRADED_TOL / 2)])
+    assert not _failed(base, within, same_scale=True)
+
+
+def test_missing_load_point_fails_same_scale():
+    base = _snap(points=[_point(1.0, 500.0, 400.0),
+                         _point(4.0, 1000.0, 800.0)])
+    fresh = _snap(points=[_point(4.0, 1000.0, 800.0)])
+    fails = _failed(base, fresh, same_scale=True)
+    assert "serve_load/x1.0" in fails
+
+
+def test_ratio_floor_loosens_cross_scale():
+    # the sort references grow superlinearly with scale, the fused
+    # paths don't — so a small-scale fresh run legitimately keeps
+    # less than RATIO_KEEP of a default-scale baseline's ratio, while
+    # a silent fallback to the full-sort path (ratio ~1x) still trips
+    base = {"merge_speedup_vs_full_sort": {"topk_merge_speedup": 100.0}}
+    mid = {"merge_speedup_vs_full_sort": {"topk_merge_speedup":
+           100.0 * (C.RATIO_KEEP + C.CROSS_SCALE_RATIO_KEEP) / 2}}
+    assert _failed(base, mid, same_scale=True)
+    assert not _failed(base, mid, same_scale=False)
+    fallback = {"merge_speedup_vs_full_sort": {"topk_merge_speedup": 1.0}}
+    assert _failed(base, fallback, same_scale=False)

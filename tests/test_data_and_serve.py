@@ -77,10 +77,14 @@ def test_scheduler_buckets_and_padding():
     padded = s.pad_prompts(bucket, reqs)
     assert padded.shape == (2, 8)
     assert padded[0, :3].sum() == 0  # left-padded
+    # oldest-head-first across buckets: uid 2 (bucket 32) was
+    # submitted before uid 3 (bucket 8), so the big bucket drains
+    # next — under the old smallest-bucket-first policy sustained
+    # small-prompt load starved it forever
     bucket2, reqs2 = s.next_batch()
-    assert bucket2 == 8 and [r.uid for r in reqs2] == [3]
+    assert bucket2 == 32 and [r.uid for r in reqs2] == [2]
     bucket3, reqs3 = s.next_batch()
-    assert bucket3 == 32 and [r.uid for r in reqs3] == [2]
+    assert bucket3 == 8 and [r.uid for r in reqs3] == [3]
 
 
 def test_deadline_maps_to_guarantee():

@@ -275,7 +275,7 @@ def test_concurrent_owners_match_brute_force(corpus, engine):
     bf = S.brute_force(jnp.asarray(queries), jnp.asarray(data), K)
     res = engine.query(jnp.asarray(queries), K, Guarantee())
     assert np.array_equal(np.asarray(res.ids), np.asarray(bf.ids))
-    st = engine.last_ooc_stats
+    st = res.stats
     assert st is not None and not st.degraded
     assert st.effective_delta == 1.0 and st.shards_lost == 0
     assert len(st.shards) == SHARDS
@@ -301,7 +301,7 @@ def test_shard_killed_past_replicas_degrades_bit_exact(corpus, engine):
             ooc_opts={"fault": inj,
                       "retry": RetryPolicy(max_attempts=2,
                                            backoff_base_s=0.0)})
-    st = engine.last_ooc_stats
+    st = res.stats
     assert st.degraded and st.shards_lost == 1
     # bit-exact against the surviving-shards oracle
     o_ids, o_dists = surviving_oracle(data, queries, K, [lost_shard])
@@ -339,7 +339,7 @@ def test_owner_kill_fails_over_to_replica_full_answer(corpus, engine):
         ooc_opts={"fault": inj,
                   "retry": RetryPolicy(max_attempts=2,
                                        backoff_base_s=0.0)})
-    st = engine.last_ooc_stats
+    st = res.stats
     assert not st.degraded and st.shards_lost == 0
     assert st.failovers >= 1 and st.retries >= 1
     assert c_over.since_mark >= 1
@@ -364,7 +364,7 @@ def test_slow_owner_deadline_fails_over(corpus, engine):
                   "retry": RetryPolicy(max_attempts=2,
                                        backoff_base_s=0.0,
                                        attempt_deadline_s=0.3)})
-    st = engine.last_ooc_stats
+    st = res.stats
     assert not st.degraded and st.failovers >= 1
     assert np.array_equal(np.asarray(res.ids), np.asarray(clean.ids))
 
@@ -382,7 +382,7 @@ def test_mid_query_kill_degrades(corpus, engine):
             ooc_opts={"fault": inj,
                       "retry": RetryPolicy(max_attempts=2,
                                            backoff_base_s=0.0)})
-    assert engine.last_ooc_stats.degraded
+    assert res.stats.degraded
     o_ids, _ = surviving_oracle(data, queries, K, [2])
     assert np.array_equal(np.asarray(res.ids), o_ids)
 
@@ -582,22 +582,27 @@ def test_supervisor_straggler_counter(tmp_path):
 
 # ------------------------------------------------- serving surfacing
 def test_run_retrieval_surfaces_degradation():
-    from repro.core.search import SearchResult
+    from repro.core.engine import QueryResult
     from repro.obs import OocStats
     from repro.serve.batching import Request, Scheduler
 
     class StubEngine:
+        """Stats ride the RESULT (QueryResult.stats) — the serving
+        front must never read them off the engine (engine-stats
+        analysis rule)."""
+
         def __init__(self, stats):
-            self.last_ooc_stats = stats
+            self._stats = stats
 
         def query(self, qs, k, g):
             b = qs.shape[0]
-            return SearchResult(
+            return QueryResult(
                 dists=jnp.zeros((b, k), jnp.float32),
                 ids=jnp.zeros((b, k), jnp.int32),
                 leaves_visited=jnp.zeros(b, jnp.int32),
                 rows_scanned=jnp.zeros(b, jnp.int32),
-                lb_computed=jnp.int32(0))
+                lb_computed=jnp.int32(0),
+                stats=self._stats)
 
     reqs = [Request(uid=0, prompt=np.zeros(4, np.int32),
                     series=np.zeros(DIM, np.float32))]

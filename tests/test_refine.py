@@ -398,7 +398,7 @@ def test_engine_spilled_shard_serving_parity(codec, walk_data,
             np.testing.assert_array_equal(
                 np.asarray(res.dists), np.asarray(ooc.dists),
                 err_msg=str(g))
-        assert eng.last_ooc_stats["bytes_read"] > 0
+        assert ooc.stats["bytes_read"] > 0
 
 
 def test_engine_open_spill_serves_without_resident(walk_data,
@@ -422,12 +422,12 @@ def test_engine_open_spill_serves_without_resident(walk_data,
                                   np.asarray(got.ids))
     np.testing.assert_array_equal(np.asarray(ref.dists),
                                   np.asarray(got.dists))
-    cold = eng.last_ooc_stats["bytes_read"]
+    cold = got.stats["bytes_read"]
     got2 = eng.query(queries_mod, 5, Guarantee(epsilon=1.0),
                      ooc_opts=opts)
     np.testing.assert_array_equal(np.asarray(got.ids),
                                   np.asarray(got2.ids))
-    warm = eng.last_ooc_stats["bytes_read"]
+    warm = got2.stats["bytes_read"]
     assert cold > 0 and warm == 0  # caches stay warm across queries
 
 
