@@ -8,6 +8,7 @@ from typing import List
 
 import jax.numpy as jnp
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import dstree, graph, imi, isax, srs, vafile
 from repro.core.metrics import workload_metrics
@@ -31,19 +32,19 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
                        f"mre={m['mre']:.3f}"))
 
     di = dstree.build(data, leaf_cap=256)
-    record("dstree", S.search(di, qj, k, nprobe=16))
+    record("dstree", S.search(di, qj, k, G.ng(16)))
     xi = isax.build(data, leaf_cap=256)
-    record("isax2+", S.search(xi, qj, k, nprobe=16))
+    record("isax2+", S.search(xi, qj, k, G.ng(16)))
     vi = vafile.build(data)
-    record("va+file", S.search(vi, qj, k, nprobe=1024, visit_batch=64))
+    record("va+file", S.search(vi, qj, k, G.ng(1024), visit_batch=64))
     gi = graph.build(data, m_links=8)
     record("hnsw", graph.query(gi, qj, k, efs=64))
     si = srs.build(data, m=16)
-    record("srs", srs.query(si, qj, k, delta=0.9))
+    record("srs", srs.query(si, qj, k, G.Guarantee(delta=0.9)))
     ii = imi.build(data, kc=16, m=16, kmeans_iters=10)
-    record("imi", imi.query(ii, qj, k, nprobe=32),
+    record("imi", imi.query(ii, qj, k, G.ng(32)),
            note="ADC only — no raw re-rank (paper C4)")
-    record("imi+refine", imi.query(ii, qj, k, nprobe=32, refine=True),
+    record("imi+refine", imi.query(ii, qj, k, G.ng(32), refine=True),
            note="beyond-paper: raw re-rank closes the gap")
     emit(rows, out_dir, "bench_accuracy_measures")
     return rows

@@ -8,6 +8,7 @@ from typing import List
 
 import jax.numpy as jnp
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import dstree, isax
 from repro.core.metrics import workload_metrics
@@ -29,7 +30,7 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     for name, idx in variants.items():
         for eps in (5.0, 2.0, 1.0, 0.5, 0.0):
             fn = lambda idx=idx, e=eps: S.search(
-                idx, qj, k, delta=0.99, epsilon=e)
+                idx, qj, k, G.delta_epsilon(0.99, e))
             res = fn()
             sec = timeit(fn, repeats=3)
             m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)

@@ -8,6 +8,7 @@ from typing import List
 
 import jax.numpy as jnp
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import dstree, isax
 from repro.core.metrics import workload_metrics
@@ -27,7 +28,8 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     # (a-c) epsilon sweep at delta=1
     for name, idx in built.items():
         for eps in (0.0, 0.5, 1.0, 2.0, 3.0, 5.0, 10.0):
-            fn = lambda idx=idx, e=eps: S.search(idx, qj, k, epsilon=e)
+            fn = lambda idx=idx, e=eps: S.search(idx, qj, k,
+                                                 G.epsilon(e))
             res = fn()
             sec = timeit(fn, repeats=3)
             m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
@@ -40,7 +42,8 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     # (d-e) delta sweep at epsilon=0
     for name, idx in built.items():
         for delta in (0.5, 0.8, 0.9, 0.99, 1.0):
-            fn = lambda idx=idx, d=delta: S.search(idx, qj, k, delta=d)
+            fn = lambda idx=idx, d=delta: S.search(
+                idx, qj, k, G.Guarantee(delta=d))
             res = fn()
             sec = timeit(fn, repeats=3)
             m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)

@@ -7,6 +7,7 @@ from typing import List
 
 import jax.numpy as jnp
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import dstree, isax
 
@@ -23,7 +24,8 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     }
     for name, idx in built.items():
         for k in (1, 10, 25, 50, 100):
-            fn = lambda idx=idx, kk=k: S.search(idx, qj, kk, epsilon=1.0)
+            fn = lambda idx=idx, kk=k: S.search(idx, qj, kk,
+                                                G.epsilon(1.0))
             res = fn()
             sec = timeit(fn, repeats=3)
             rows.append({

@@ -31,6 +31,7 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree, imi, isax, vafile
@@ -54,7 +55,7 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
 
     def timed_ooc(store, cache, vb, eps, share=False):
         t0 = time.perf_counter()
-        out = S.search_ooc(store, qj, k, delta=0.99, epsilon=eps,
+        out = S.search_ooc(store, qj, k, G.delta_epsilon(0.99, eps),
                            visit_batch=vb, cache=cache,
                            share_gathers=share)
         jax.block_until_ready(out.result.dists)
@@ -160,7 +161,8 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
         for depth in (1, 2, 4):
             cache = DeviceLeafCache(store, cap)
             t0 = time.perf_counter()
-            out = S.search_ooc(store, qj, k, delta=0.99, epsilon=1.0,
+            out = S.search_ooc(store, qj, k,
+                               G.delta_epsilon(0.99, 1.0),
                                visit_batch=vb, cache=cache,
                                prefetch_depth=depth)
             jax.block_until_ready(out.result.dists)
@@ -192,7 +194,7 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     # IMI has no leaf store yet: keep the paper's proxy counters
     ii = imi.build(data, kc=16, m=16, kmeans_iters=10)
     for nprobe in (8, 64):
-        res = imi.query(ii, qj, k, nprobe=nprobe)
+        res = imi.query(ii, qj, k, G.ng(nprobe))
         m = workload_metrics(res.ids, res.dists, bf.ids, bf.dists)
         frac = float(res.rows_scanned.mean()) / n
         gathers = float(res.leaves_visited.mean())

@@ -7,6 +7,7 @@ from typing import List
 
 import jax.numpy as jnp
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import dstree, graph, imi, isax, srs, vafile
 from repro.core.metrics import workload_metrics
@@ -42,11 +43,11 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
         for nprobe in (1, 4, 16, 64):
             record(name, "ng", f"nprobe{nprobe}",
                    lambda idx=idx, np_=nprobe, vb=vb: S.search(
-                       idx, qj, k, nprobe=np_, visit_batch=vb))
+                       idx, qj, k, G.ng(np_), visit_batch=vb))
         for eps in (5.0, 2.0, 1.0, 0.5, 0.0):
             record(name, "deltaeps", f"eps{eps}",
                    lambda idx=idx, e=eps, vb=vb: S.search(
-                       idx, qj, k, delta=0.99, epsilon=e,
+                       idx, qj, k, G.delta_epsilon(0.99, e),
                        visit_batch=vb))
 
     # --- multidimensional competitors ---
@@ -57,11 +58,11 @@ def run(scale: str = "default", out_dir=None) -> List[dict]:
     ii = imi.build(data, kc=16, m=16, kmeans_iters=10)
     for nprobe in (1, 8, 32):
         record("imi", "ng", f"nprobe{nprobe}",
-               lambda n=nprobe: imi.query(ii, qj, k, nprobe=n))
+               lambda n=nprobe: imi.query(ii, qj, k, G.ng(n)))
     si = srs.build(data, m=16)
     for delta in (0.5, 0.9, 0.99):
         record("srs", "deltaeps", f"delta{delta}",
-               lambda d=delta: srs.query(si, qj, k, delta=d,
-                                         epsilon=0.0))
+               lambda d=delta: srs.query(si, qj, k,
+                                         G.delta_epsilon(d, 0.0)))
     emit(rows, out_dir, "bench_query_memory")
     return rows

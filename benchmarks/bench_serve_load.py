@@ -46,7 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import IndexSpec, StoreSpec
 from repro.core.engine import DistributedEngine
+from repro.core.guarantees import Guarantee
 from repro.serve.admission import AdmissionController
 from repro.serve.batching import (Request, Scheduler,
                                   guarantee_for_deadline)
@@ -192,6 +194,57 @@ def _continuous_point(eng, queries, k, n_reqs, rate_rps, max_batch,
                           rejected[0])
 
 
+def _freshness_probe(engine, data: np.ndarray, k: int,
+                     n_writes: int = 16) -> Dict[str, Any]:
+    """Freshness: insert -> first-retrievable lag through the write
+    lane (docs/INGEST.md). Two stamps per write: ``applied_ms`` is
+    submit -> the write lane's ``applied_at`` (the mutation is in the
+    delta memtable), ``visible_ms`` is submit -> a query() observing
+    the new row in its answer — the metric the delta tier exists to
+    bound. Probes run against the warm engine AFTER the load curve so
+    the latency points stay a pure frozen-corpus measurement; the
+    probe rows are deleted again on the way out."""
+    rng = np.random.default_rng(11)
+    rows = np.cumsum(rng.normal(size=(n_writes, data.shape[1])),
+                     axis=1)
+    rows = ((rows - rows.mean(1, keepdims=True))
+            / (rows.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+    applied = obs.Histogram("bench.freshness.applied_ms", ())
+    visible = obs.Histogram("bench.freshness.visible_ms", ())
+    inserted: List[int] = []
+    all_seen = True
+    front = ServeFront(engine, k, max_batch=8).start()
+    try:
+        for i in range(n_writes):
+            t_sub = obs.now()
+            entry = front.submit_write(
+                "insert", rows=rows[i:i + 1]).result(
+                    timeout=POINT_TIMEOUT_S)
+            applied.record((entry["applied_at"] - t_sub) * 1e3)
+            # the probe queries for the inserted series verbatim: the
+            # first query after applied_at must already return it
+            got = engine.query(jnp.asarray(rows[i:i + 1]), 1,
+                               Guarantee())
+            visible.record((obs.now() - t_sub) * 1e3)
+            gid = int(np.asarray(entry["ids"])[0])
+            inserted.append(gid)
+            all_seen &= int(np.asarray(got.ids)[0, 0]) == gid
+    finally:
+        front.stop(drain=True)
+        if inserted:
+            engine.delete(inserted)
+    aq = applied.quantiles((0.5, 0.99))
+    vq = visible.quantiles((0.5, 0.99))
+    return {
+        "n_writes": n_writes,
+        "applied_ms_p50": round(aq["p50"], 3),
+        "applied_ms_p99": round(aq["p99"], 3),
+        "visible_ms_p50": round(vq["p50"], 3),
+        "visible_ms_p99": round(vq["p99"], 3),
+        "retrievable_immediately": bool(all_seen),
+    }
+
+
 def run(scale: str = "default", smoke: bool = False,
         engine=None) -> Dict[str, Any]:
     """Collect the ``serve_load`` snapshot section: the latency-vs-
@@ -209,9 +262,11 @@ def run(scale: str = "default", smoke: bool = False,
         tmp = tempfile.TemporaryDirectory()
         mesh = jax.make_mesh((1,), ("data",))
         engine = DistributedEngine(mesh, method="dstree")
-        engine.build(data, leaf_cap=256,
-                     spill_dir=os.path.join(tmp.name, "sp"),
-                     codec="bf16", keep_resident=False)
+        engine.build(data, index=IndexSpec("dstree", leaf_cap=256),
+                     store=StoreSpec(spill_dir=os.path.join(tmp.name,
+                                                            "sp"),
+                                     codec="bf16",
+                                     keep_resident=False))
     try:
         # warm the leaf caches AND the per-kind lane-bucket shapes the
         # paced runs will drain (groups of 1, 2, 4, ... per kind —
@@ -244,6 +299,8 @@ def run(scale: str = "default", smoke: bool = False,
             points.append({"load_factor": f,
                            "offered_rps": round(rate, 1),
                            "static": stat, "continuous": cont})
+        freshness = _freshness_probe(engine, data, k,
+                                     n_writes=4 if smoke else 16)
         top = points[-1]
         beats = (top["continuous"]["p99_ms"] is not None
                  and top["static"]["p99_ms"] is not None
@@ -254,6 +311,7 @@ def run(scale: str = "default", smoke: bool = False,
             "n_requests": n_reqs,
             "deadline_mix_ms": list(DEADLINE_MIX),
             "points": points,
+            "freshness": freshness,
             "summary": {
                 "top_load_factor": top["load_factor"],
                 "static_p99_ms": top["static"]["p99_ms"],

@@ -35,7 +35,10 @@ metrics — the ones a code regression actually moves — are held tight:
                    baseline's scale, where queueing — not front
                    overhead — dominates p99): tight tol, they move
                    only when the access pattern or the shedding/remap
-                   policy changes.
+                   policy changes. The freshness section's
+                   retrievable_immediately flag (an inserted row's
+                   first post-apply query returns it) is likewise
+                   structural and scale-free.
   timings          us_per_call / queries_per_s / requests_per_s and
                    the serve_load per-load-point p50/p99: must not
                    degrade by more than TIME_FACTOR x.
@@ -72,7 +75,8 @@ DEGRADED_TOL = 0.05  # degraded-tier fraction moves <= 5% ABSOLUTE
 KNOWN_SECTIONS = {
     "snapshot", "scale", "backend", "kernels_us",
     "merge_speedup_vs_full_sort", "pq_fused_memory", "query_memory",
-    "query_disk", "engine_ooc", "serve", "serve_load", "obs_overhead",
+    "query_disk", "engine_ooc", "serve", "serve_load", "freshness",
+    "obs_overhead",
 }
 
 
@@ -159,6 +163,28 @@ def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
                failures, lines)
         if not fsl:
             _check("serve_load", False, "missing in fresh run",
+                   failures, lines)
+
+    # --- freshness: the streaming-ingest headline (PR 10). The
+    #     retrievable_immediately flag is structural and scale-free —
+    #     an inserted row's FIRST post-apply query must return it at
+    #     any collection scale — so it is enforced on both snapshots
+    #     always; the lag quantiles are absolute timings, gated in the
+    #     same-scale section below.
+    bfr = base.get("freshness") or {}
+    ffr = fresh.get("freshness") or {}
+    if bfr:
+        _check("freshness/retrievable_immediately[baseline]",
+               bfr.get("retrievable_immediately") is True,
+               str(bfr.get("retrievable_immediately")),
+               failures, lines)
+        if not ffr:
+            _check("freshness", False, "missing in fresh run",
+                   failures, lines)
+        else:
+            _check("freshness/retrievable_immediately",
+                   ffr.get("retrievable_immediately") is True,
+                   str(ffr.get("retrievable_immediately")),
                    failures, lines)
 
     if not same_scale:
@@ -264,6 +290,24 @@ def compare(base: dict, fresh: dict, *, same_scale: bool) -> tuple:
         _check(f"{sec}/{key}", fval >= lo,
                f"{fval:.1f}/s vs baseline {bval:.1f}/s "
                f"(floor {lo:.1f}/s)", failures, lines)
+
+    # --- freshness lag quantiles: absolute timings, loose, same
+    #     scale only (insert -> applied / insert -> visible, ms) ---
+    if bfr and ffr:
+        for qk in ("applied_ms_p50", "visible_ms_p50",
+                   "visible_ms_p99"):
+            bval = bfr.get(qk)
+            if bval is None:
+                continue
+            fval = ffr.get(qk)
+            if fval is None:
+                _check(f"freshness/{qk}", False,
+                       "missing in fresh run", failures, lines)
+                continue
+            hi = bval * TIME_FACTOR
+            _check(f"freshness/{qk}", fval <= hi,
+                   f"{fval:.2f}ms vs baseline {bval:.2f}ms "
+                   f"(ceiling {hi:.2f}ms)", failures, lines)
 
     # --- serve latency quantiles: absolute timings, loose, same
     #     scale only. p50 and p99 are gated (p95 informational: it

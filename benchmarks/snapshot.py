@@ -10,8 +10,10 @@ out-of-core serving rows: engine queries/s over spill-built shards
 and the Scheduler-driven deadline-mixed retrieval front, now with
 per-request serve-latency DISTRIBUTIONS (p50/p95/p99 via the
 repro.obs log-bucketed histograms) and the tracing-disabled overhead
-row — so later PRs can diff the perf trajectory without rerunning
-whole suites.
+row, and since PR 10 the streaming-ingest freshness row (insert ->
+first-retrievable lag through the ServeFront write lane,
+docs/INGEST.md) — so later PRs can diff the perf trajectory without
+rerunning whole suites.
 ``--smoke`` compiles and runs every path once at the small scale
 without writing the file (the scripts/verify.sh regression gate: a
 snapshot that stops compiling fails verify before it rots).
@@ -33,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import IndexSpec, StoreSpec
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.core.guarantees import Guarantee
@@ -44,7 +47,7 @@ from repro.store import DeviceLeafCache
 from . import bench_kernels
 from .common import dataset, timeit
 
-SNAPSHOT_NAME = "BENCH_pr9.json"
+SNAPSHOT_NAME = "BENCH_pr10.json"
 
 
 def _repo_root_path(name: str = None) -> str:
@@ -81,7 +84,7 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
     idx = dstree.build(data, leaf_cap=256)
 
     def qfn():
-        return S.search(idx, qj, k, delta=0.99, epsilon=1.0)
+        return S.search(idx, qj, k, Guarantee(delta=0.99, epsilon=1.0))
 
     sec = timeit(qfn, repeats=repeats)
     qps = len(q) / sec
@@ -95,7 +98,8 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         for share in (False, True):
             cache = DeviceLeafCache(store, cap)
             t0 = time.perf_counter()
-            out = S.search_ooc(store, qj, k, delta=0.99, epsilon=1.0,
+            out = S.search_ooc(store, qj, k,
+                               Guarantee(delta=0.99, epsilon=1.0),
                                cache=cache, share_gathers=share)
             jax.block_until_ready(out.result.dists)
             tag = "coop" if share else "solo"
@@ -110,8 +114,9 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
     with tempfile.TemporaryDirectory() as tmp:
         mesh = jax.make_mesh((1,), ("data",))
         eng = DistributedEngine(mesh, method="dstree")
-        eng.build(data, leaf_cap=256, spill_dir=os.path.join(tmp, "sp"),
-                  codec="bf16", keep_resident=False)
+        eng.build(data, index=IndexSpec("dstree", leaf_cap=256),
+                  store=StoreSpec(spill_dir=os.path.join(tmp, "sp"),
+                                  codec="bf16", keep_resident=False))
         g = Guarantee(epsilon=1.0)
         eng.query(qj, k, g)  # warm caches + compile
         t0 = time.perf_counter()
@@ -157,6 +162,11 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         from . import bench_serve_load
         serve_load = bench_serve_load.run(scale, smoke=smoke,
                                           engine=eng)
+        # freshness is its own top-level section (the streaming-ingest
+        # headline: insert -> first-retrievable lag through the write
+        # lane, docs/INGEST.md) so compare.py can gate it
+        # independently of the latency-vs-load curve
+        freshness = serve_load.pop("freshness", None)
 
     return {
         "snapshot": SNAPSHOT_NAME,
@@ -174,6 +184,7 @@ def collect(scale: str = "default", smoke: bool = False) -> dict:
         "engine_ooc": engine_ooc,
         "serve": serve,
         "serve_load": serve_load,
+        "freshness": freshness,
         "obs_overhead": obs_overhead,
     }
 

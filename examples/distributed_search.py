@@ -16,6 +16,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import search as S  # noqa: E402
+from repro.core import IndexSpec  # noqa: E402
 from repro.core.engine import DistributedEngine  # noqa: E402
 from repro.core.guarantees import Guarantee  # noqa: E402
 from repro.core.metrics import workload_metrics  # noqa: E402
@@ -31,7 +32,7 @@ truth = S.brute_force(q, jnp.asarray(data), K)
 
 eng = DistributedEngine(mesh, axes=("data",), method="dstree")
 print(f"building dstree over {eng.n_shards} shards ...")
-eng.build(data, leaf_cap=128)
+eng.build(data, index=IndexSpec("dstree", leaf_cap=128))
 
 for name, g in [("exact", Guarantee()),
                 ("eps=1", Guarantee(epsilon=1.0)),

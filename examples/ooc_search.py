@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree
@@ -53,16 +54,16 @@ with tempfile.TemporaryDirectory() as tmp:
     cache = DeviceLeafCache(store, cap)
 
     t0 = time.perf_counter()
-    cold = S.search_ooc(store, qj, K, epsilon=1.0, cache=cache)
+    cold = S.search_ooc(store, qj, K, G.epsilon(1.0), cache=cache)
     jax.block_until_ready(cold.result.dists)
     t_cold = time.perf_counter() - t0
     cache.reset_counters()
     t0 = time.perf_counter()
-    warm = S.search_ooc(store, qj, K, epsilon=1.0, cache=cache)
+    warm = S.search_ooc(store, qj, K, G.epsilon(1.0), cache=cache)
     jax.block_until_ready(warm.result.dists)
     t_warm = time.perf_counter() - t0
 
-    ref = S.search(idx, qj, K, epsilon=1.0)
+    ref = S.search(idx, qj, K, G.epsilon(1.0))
     same = bool(np.array_equal(np.asarray(ref.ids),
                                np.asarray(cold.result.ids)))
     print(f"   identical top-{K} to the in-memory search: {same}")
@@ -78,7 +79,7 @@ with tempfile.TemporaryDirectory() as tmp:
           "the prefetcher the next depth x visit_batch windows")
     for depth in (1, 4):
         dcache = DeviceLeafCache(store, cap)
-        out = S.search_ooc(store, qj, K, epsilon=1.0, cache=dcache,
+        out = S.search_ooc(store, qj, K, G.epsilon(1.0), cache=dcache,
                            prefetch_depth=depth)
         jax.block_until_ready(out.result.dists)
         s = out.stats
@@ -96,7 +97,7 @@ with tempfile.TemporaryDirectory() as tmp:
         cstore = FrozenIndex.load(cdir, resident="summaries")
         for share in (False, True):
             ccache = DeviceLeafCache(cstore, cap)
-            out = S.search_ooc(cstore, qj, K, epsilon=1.0, cache=ccache,
+            out = S.search_ooc(cstore, qj, K, G.epsilon(1.0), cache=ccache,
                                share_gathers=share)
             jax.block_until_ready(out.result.dists)
             read = out.stats["bytes_read"]

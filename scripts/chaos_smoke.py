@@ -24,6 +24,7 @@ import warnings
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import IndexSpec, StoreSpec
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.core.guarantees import Guarantee, effective_delta_after_loss
@@ -46,8 +47,9 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as tmp:
         eng = DistributedEngine(mesh=None, method="dstree",
                                 shards=SHARDS)
-        eng.build(data, leaf_cap=32, spill_dir=tmp, codec="f32",
-                  keep_resident=False, replicas=2)
+        eng.build(data, index=IndexSpec("dstree", leaf_cap=32),
+                  store=StoreSpec(spill_dir=tmp, codec="f32",
+                                  keep_resident=False, replicas=2))
         clean = eng.query(qj, K, Guarantee())
 
         # ---- scenario 1: shard 1 lost past retries AND replicas

@@ -1,0 +1,157 @@
+"""Streaming-ingest smoke for scripts/verify.sh: the full write path
+end to end — insert -> query -> delete -> compact -> query — over a
+tiny spilled (out-of-core) engine, with the two properties the delta
+tier promises (docs/INGEST.md) asserted loudly:
+
+  Freshness.  Mutations go through the ServeFront write lane
+  (serve/loop.submit_write); the ticket's ``applied_at`` stamp is the
+  instant the rows became retrievable. The smoke measures
+  submit -> applied_at -> first retrieving query and prints the lag
+  (the same metric bench_serve_load.py snapshots into BENCH_pr10.json).
+
+  Parity.  After every mutation batch, ``engine.query`` under the
+  exact guarantee must be BIT-exact (ids and distances) against a
+  from-scratch rebuild holding the same live rows — before AND after
+  ``compact()`` re-freezes the memtable into an on-disk segment.
+
+    PYTHONPATH=src python scripts/ingest_smoke.py
+"""
+
+import os
+import sys
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import IndexSpec, StoreSpec
+from repro.core import guarantees as G
+from repro.core.engine import DistributedEngine
+from repro.serve.loop import ServeFront
+
+K = 5
+N_BASE = 256
+SERIES_LEN = 64
+
+
+def _znorm(x):
+    return ((x - x.mean(1, keepdims=True))
+            / (x.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+
+
+def _oracle(live_rows, live_ids, queries, k, spill):
+    """From-scratch rebuild over exactly the live rows, answers
+    remapped to GLOBAL ids.
+
+    ``live_ids`` must be ascending so the rebuild's array-order ids
+    tie-break the same way as the engine's (distance, global id) rule.
+    """
+    assert np.all(np.diff(live_ids) > 0)
+    oracle = DistributedEngine(mesh=None, shards=2).build(
+        live_rows,
+        index=IndexSpec("dstree", leaf_cap=32),
+        store=StoreSpec(spill_dir=spill, codec="f32",
+                        keep_resident=False))
+    r = oracle.query(jnp.asarray(queries), k, G.exact())
+    oracle.close()
+    return np.asarray(r.dists), live_ids[np.asarray(r.ids)]
+
+
+def _check_parity(eng, live_rows, live_ids, queries, tag, spill):
+    od, oi = _oracle(live_rows, live_ids, queries, K, spill)
+    out = eng.query(jnp.asarray(queries), K, G.exact())
+    ids = np.asarray(out.ids)
+    dists = np.asarray(out.dists)
+    assert np.array_equal(ids, oi), \
+        f"{tag}: ids diverge from rebuild oracle\n{ids}\nvs\n{oi}"
+    assert np.allclose(dists, od, rtol=0.0, atol=0.0), \
+        f"{tag}: distances diverge from rebuild oracle"
+    return ids, dists
+
+
+def main() -> int:
+    rng = np.random.default_rng(7)
+    base = _znorm(np.cumsum(rng.normal(size=(N_BASE, SERIES_LEN)),
+                            axis=1))
+    queries = _znorm(base[rng.choice(N_BASE, 6, replace=False)]
+                     + 0.05 * rng.normal(size=(6, SERIES_LEN)))
+    fresh_rows = _znorm(np.cumsum(
+        rng.normal(size=(8, SERIES_LEN)), axis=1))
+
+    obs.enable()
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            eng = DistributedEngine(mesh=None, shards=2).build(
+                base,
+                index=IndexSpec("dstree", leaf_cap=32),
+                store=StoreSpec(spill_dir=os.path.join(tmp, "spill"),
+                                codec="f32", keep_resident=False))
+
+            # -- insert through the serve-front write lane ----------
+            with ServeFront(eng, k=K, max_batch=4) as front:
+                t_sub = obs.now()
+                entry = front.submit_write(
+                    "insert", rows=fresh_rows).result(timeout=60.0)
+                new_ids = np.asarray(entry["ids"])
+                applied_ms = (entry["applied_at"] - t_sub) * 1e3
+
+                # freshness: the FIRST query after applied_at already
+                # retrieves the new rows (query for an inserted series
+                # verbatim -> its own id must be rank 1 at distance 0)
+                probe = eng.query(
+                    jnp.asarray(fresh_rows[:1]), 1, G.exact())
+                t_seen = obs.now()
+                assert int(np.asarray(probe.ids)[0, 0]) == new_ids[0], \
+                    "inserted row not retrievable"
+            freshness_ms = (t_seen - t_sub) * 1e3
+
+            live_rows = np.concatenate([base, fresh_rows])
+            live_ids = np.concatenate(
+                [np.arange(N_BASE), new_ids]).astype(np.int64)
+            _check_parity(eng, live_rows, live_ids, queries,
+                          "post-insert",
+                          os.path.join(tmp, "oracle1"))
+
+            # -- delete: one frozen-base row that IS a top-1 answer,
+            #    plus one of the fresh memtable rows ------------------
+            top1 = int(np.asarray(
+                eng.query(jnp.asarray(queries[:1]), 1,
+                          G.exact()).ids)[0, 0])
+            eng.delete([top1, int(new_ids[-1])])
+            keep = ~np.isin(live_ids, [top1, int(new_ids[-1])])
+            live_rows, live_ids = live_rows[keep], live_ids[keep]
+            pre_ids, pre_d = _check_parity(
+                eng, live_rows, live_ids, queries, "post-delete",
+                os.path.join(tmp, "oracle2"))
+
+            # -- compact: memtable -> on-disk segment; answers must
+            #    not move by a single bit --------------------------
+            assert eng.compact(), "compact() published no segment"
+            post_ids, post_d = _check_parity(
+                eng, live_rows, live_ids, queries, "post-compact",
+                os.path.join(tmp, "oracle3"))
+            assert np.array_equal(pre_ids, post_ids)
+            assert np.array_equal(pre_d, post_d)
+
+            ins = sum(c.value
+                      for c in obs.REGISTRY.collect("delta.inserts"))
+            cmp_n = sum(c.value for c in obs.REGISTRY.collect(
+                "delta.compactions"))
+            wr = sum(c.value
+                     for c in obs.REGISTRY.collect("serve.writes"))
+            assert ins == len(fresh_rows), ins
+            assert cmp_n >= 1, cmp_n
+            assert wr >= 1, wr
+    finally:
+        obs.disable()
+        obs.clear()
+
+    print("ingest smoke OK: insert -> query -> delete -> compact -> "
+          f"query bit-exact vs rebuild; freshness "
+          f"{freshness_ms:.1f} ms (applied in {applied_ms:.1f} ms)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

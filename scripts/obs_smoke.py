@@ -22,6 +22,7 @@ import tempfile
 import numpy as np
 
 from repro import obs
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree
@@ -49,7 +50,7 @@ def main() -> int:
         try:
             # ---- tracing disabled: no spans, stats still complete
             obs.clear()
-            out = S.search_ooc(store, queries, 5, epsilon=0.5,
+            out = S.search_ooc(store, queries, 5, G.epsilon(0.5),
                                cache=cache, prefetch_depth=2)
             assert not obs.tracer().spans(), "spans while disabled"
             assert out.stats.bytes_read > 0
@@ -57,7 +58,7 @@ def main() -> int:
             # ---- traced query over the SAME (now part-warm) cache
             cache.reset_counters()
             obs.enable()
-            out = S.search_ooc(store, queries, 5, epsilon=0.5,
+            out = S.search_ooc(store, queries, 5, G.epsilon(0.5),
                                cache=cache, prefetch_depth=2)
             obs.disable()
         finally:

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import IndexSpec, StoreSpec
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.serve.batching import Request, Scheduler
@@ -84,8 +85,9 @@ def main() -> int:
         with tempfile.TemporaryDirectory() as tmp:
             mesh = jax.make_mesh((1,), ("data",))
             eng = DistributedEngine(mesh, method="dstree").build(
-                data, leaf_cap=32, spill_dir=os.path.join(tmp, "spill"),
-                codec="f32", keep_resident=False)
+                data, index=IndexSpec("dstree", leaf_cap=32),
+                store=StoreSpec(spill_dir=os.path.join(tmp, "spill"),
+                                codec="f32", keep_resident=False))
             # stamp the requests AFTER the (seconds-long) build:
             # guarantees map from the budget REMAINING at drain time,
             # so a request submitted before the build would drain with

@@ -23,7 +23,13 @@ mode="${1:-all}"
 # Store-format deprecation warnings are errors: the repo's own code and
 # tests must never (re)generate or silently depend on pre-v2 artifacts
 # (tests that exercise v1 read-compat catch the warning explicitly).
-WFLAGS=(-W "error::repro.store.layout.StoreFormatDeprecationWarning")
+# Same precedent for the typed build/query surface (core/spec.py): the
+# loose build(spill_dir=...)/search(delta=...) spellings are a
+# one-release external shim; in-repo callers must use
+# IndexSpec/StoreSpec + Guarantee (tests that exercise the shim catch
+# the warning explicitly — docs/INGEST.md migration guide).
+WFLAGS=(-W "error::repro.store.layout.StoreFormatDeprecationWarning"
+        -W "error::repro.core.spec.APIDeprecationWarning")
 
 run_fast() {
   echo "== verify: static analysis (repro.analysis, docs/ANALYSIS.md) =="
@@ -36,6 +42,8 @@ run_fast() {
   python scripts/serve_smoke.py
   echo "== verify: obs smoke (span tree vs counters, bit-exact) =="
   python scripts/obs_smoke.py
+  echo "== verify: ingest smoke (insert -> query -> delete -> compact -> query, freshness + parity) =="
+  python scripts/ingest_smoke.py
   run_chaos
 }
 

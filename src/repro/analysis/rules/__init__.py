@@ -5,4 +5,4 @@ positive + negative fixture in tests/test_analysis.py (the meta test
 fails otherwise). docs/ANALYSIS.md is the catalog."""
 
 from . import (broad_except, clock, engine_state,  # noqa: F401
-               guarded_by, jax_traps, stats_schema)
+               guarantee_kwargs, guarded_by, jax_traps, stats_schema)

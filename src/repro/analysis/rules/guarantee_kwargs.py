@@ -1,0 +1,59 @@
+"""guarantee-kwargs: ONE spelling for a query's guarantee.
+
+The guarantee taxonomy is a first-class type (core/guarantees.py), and
+since the streaming-ingest redesign (docs/INGEST.md) every search
+entry point — ``search``, ``search_ooc``, ``engine.query`` — takes it
+as one ``Guarantee`` object. The historical loose spelling
+(``delta=``/``epsilon=``/``nprobe=`` kwargs) survives one release
+behind an APIDeprecationWarning shim for external callers, but the
+repo's OWN callers must not regress onto it: a caller mixing the two
+spellings silently loses the validation + kind classification the
+Guarantee carries, and the shim is scheduled to disappear. Flag any
+call to an entry-point name passing a loose guarantee kwarg. The
+internal ``search_impl``/``_host_refine`` layers legitimately take the
+unpacked scalars (the object is unpacked exactly once, at the public
+boundary) and are not entry-point names.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from .. import core
+from ..core import Finding, Project
+
+ENTRY_POINTS = frozenset({
+    "search", "search_ooc", "search_with_guarantee", "query",
+})
+LOOSE = frozenset({"delta", "epsilon", "nprobe"})
+
+
+def _callee(func: ast.expr) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+@core.rule("guarantee-kwargs",
+           "search entry points take g=Guarantee(...), not loose "
+           "delta=/epsilon=/nprobe= kwargs")
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _callee(node.func) not in ENTRY_POINTS:
+                continue
+            loose = sorted(kw.arg for kw in node.keywords
+                           if kw.arg in LOOSE)
+            if loose:
+                yield Finding(
+                    "guarantee-kwargs", mod.path, node.lineno,
+                    f"{_callee(node.func)}() called with loose "
+                    f"guarantee kwargs {loose} — pass one "
+                    "g=Guarantee(...) (core.guarantees constructors; "
+                    "deprecated shim is for external callers only, "
+                    "docs/INGEST.md)")

@@ -8,17 +8,21 @@ Public API:
     histogram    — F(.) estimation and r_delta
     metrics      — Avg_Recall / MAP / MRE
     engine       — DistributedSearchEngine (shard_map over the mesh)
+    spec         — IndexSpec / StoreSpec typed build+serve surface
 """
 
-from . import guarantees, histogram, index, metrics, search
-from .guarantees import EXACT, Guarantee, delta_epsilon, epsilon, exact, ng
+from . import guarantees, histogram, index, metrics, search, spec
+from .guarantees import (EXACT, Guarantee, delta_epsilon, epsilon,
+                         exact, joint_n_total, ng)
 from .index import FrozenIndex
 from .search import (SearchResult, brute_force, search_ooc,
                      search_with_guarantee)
+from .spec import APIDeprecationWarning, IndexSpec, StoreSpec
 
 __all__ = [
-    "guarantees", "histogram", "index", "metrics", "search",
-    "EXACT", "Guarantee", "delta_epsilon", "epsilon", "exact", "ng",
-    "FrozenIndex", "SearchResult", "brute_force", "search_ooc",
-    "search_with_guarantee",
+    "guarantees", "histogram", "index", "metrics", "search", "spec",
+    "EXACT", "Guarantee", "delta_epsilon", "epsilon", "exact",
+    "joint_n_total", "ng", "FrozenIndex", "SearchResult",
+    "brute_force", "search_ooc", "search_with_guarantee",
+    "APIDeprecationWarning", "IndexSpec", "StoreSpec",
 ]

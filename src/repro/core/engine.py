@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import shutil
+import tempfile
 import threading
 import warnings
 from concurrent.futures import ThreadPoolExecutor, as_completed
@@ -54,11 +55,13 @@ from repro import compat, obs
 from repro.kernels import ops
 from repro.obs import OocStats
 
-from .guarantees import Guarantee
+from .guarantees import Guarantee, joint_n_total
 from .histogram import DistanceHistogram, build_histogram
 from .index import FrozenIndex
 from .indexes import dstree, isax, vafile
 from .search import SearchResult, search_impl
+from .spec import (IndexSpec, StoreSpec, coerce_build_args,
+                   coerce_store_spec)
 
 
 class QueryResult(NamedTuple):
@@ -80,6 +83,37 @@ class QueryResult(NamedTuple):
     rows_scanned: jax.Array    # [B] int32, summed over shards
     lb_computed: jax.Array     # scalar int32
     stats: Optional[OocStats] = None
+
+class EngineSegment(NamedTuple):
+    """One compacted delta segment (docs/INGEST.md): the leaf-
+    contiguous on-disk artifact the background compactor froze out of
+    the delta tier — codec-aware through the ordinary ``save_index``
+    path, served exactly like one more shard. ``born_seq`` is the
+    delta sequence the freeze happened at: any kill with a NEWER
+    sequence masks this segment's copy of the id (store.delta kill
+    rule), which is what makes publishing safe while deletes race the
+    build. ``index`` keeps the pre-encode f32-resident FrozenIndex on
+    resident engines so segment scoring matches the resident base
+    arithmetic; out-of-core engines serve the segment from its store
+    dir (codec-faithful) instead."""
+    dir: str
+    born_seq: int
+    n_rows: int
+    ids_np: np.ndarray                  # [npad] global ids (-1 pad)
+    index: Optional[FrozenIndex] = None
+
+
+class _MutView(NamedTuple):
+    """Everything one query needs to serve a mutable-tier snapshot
+    jointly with the frozen base (docs/INGEST.md): the snapshot
+    itself, the joint r_delta row count
+    (core.guarantees.joint_n_total — inserts RAISE N, deletes never
+    lower it), and each published segment's tombstone mask under this
+    snapshot's kills. Computed once per query, immutable afterwards."""
+    snap: object                         # store.delta.DeltaSnapshot
+    joint_n: int
+    seg_dead: Tuple[np.ndarray, ...]     # per segment, [npad] bool
+
 
 _BUILDERS = {
     "isax2+": isax.build,
@@ -133,6 +167,41 @@ class DistributedEngine:
     # (build(replicas=R) / open_spill discovery); the failover loop
     # rotates the attempt order per shard for round-robin ownership
     shard_replica_dirs: Optional[Tuple[Tuple[str, ...], ...]] = None
+    # the typed build/open surface (core/spec.py): what was built and
+    # how it is served — including the delta/compaction knobs
+    index_spec: Optional[IndexSpec] = None
+    store_spec: Optional[StoreSpec] = None
+    # ---- mutable tier (docs/INGEST.md), armed by enable_writes() ----
+    _delta: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # serializes enable_writes/segment-numbering bookkeeping (the
+    # delta tier itself carries its own lock; lock order: _write_lock
+    # is a leaf, never held across delta or store calls)
+    _write_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    _seg_dir: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _seg_seq: int = dataclasses.field(
+        default=0, repr=False, compare=False)
+    _compactor: Optional[threading.Thread] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _compactor_stop: Optional[threading.Event] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # per-shard host copies of the stacked id arrays (resident
+    # engines): tombstone masks are recomputed from these when the
+    # kill set advances, without pulling device arrays per query
+    _shard_ids_host: Optional[list] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # frozen-unit dead-mask cache keyed by unit, valued
+    # (kills_version, mask). Lock-free like _query_fns: dict get/set
+    # are GIL-atomic and racing snapshots recompute from their own
+    # consistent kill copies
+    _dead_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    # (kills_version, device [S, max_rows] bool) stacked tombstones
+    # for the resident shard_map operand
+    _dead_stacked: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
     # jitted query fns keyed by (k, guarantee, batch shape, ...): the
     # shard_map body closes over those values, so a fresh closure per
     # call would defeat jit's compile cache. Lock-free on purpose:
@@ -179,75 +248,104 @@ class DistributedEngine:
         return out
 
     @classmethod
-    def open_spill(cls, spill_dir: str, *, mesh: Optional[Mesh] = None,
+    def open_spill(cls, store, *, mesh: Optional[Mesh] = None,
                    axes: Tuple[str, ...] = ("data",),
-                   method: str = "dstree") -> "DistributedEngine":
-        """Open an engine over an existing ``build(spill_dir=...)``
-        artifact WITHOUT loading any shard into HBM — the serving path
-        for collections larger than device memory (multi-host: each
-        host opens the shards it owns). ``query`` auto-detects the
-        missing resident index and serves out-of-core. Replica copies
-        persisted by ``build(replicas=R)`` (spill_dir/replicas/rN/
-        shard_NNNN) are discovered too and arm failover."""
+                   index: Optional[IndexSpec] = None,
+                   method: Optional[str] = None) -> "DistributedEngine":
+        """Open an engine over an existing spilled build artifact
+        WITHOUT loading any shard into HBM — the serving path for
+        collections larger than device memory (multi-host: each host
+        opens the shards it owns). ``store`` is a
+        :class:`~repro.core.spec.StoreSpec` (its ``spill_dir`` names
+        the artifact; its delta/compaction knobs govern
+        :meth:`enable_writes`); a bare spill-dir string and the old
+        ``method=`` kwarg keep working for one release via the
+        APIDeprecationWarning shim (core/spec.py). ``query``
+        auto-detects the missing resident index and serves
+        out-of-core. Replica copies persisted by ``build`` with
+        ``StoreSpec(replicas=R)`` (spill_dir/replicas/rN/shard_NNNN)
+        are discovered too and arm failover."""
+        ispec, sspec = coerce_store_spec(store, method=method,
+                                         index=index)
+        spill_dir = sspec.spill_dir
         shard_dirs = tuple(sorted(
             os.path.join(spill_dir, d) for d in os.listdir(spill_dir)
             if d.startswith("shard_")))
         if not shard_dirs:
             raise ValueError(f"no shard_* stores under {spill_dir!r}")
-        eng = cls(mesh=mesh, axes=tuple(axes), method=method)
+        eng = cls(mesh=mesh, axes=tuple(axes), method=ispec.method)
+        eng.index_spec = ispec
+        eng.store_spec = sspec
         eng.shard_dirs = shard_dirs
         eng.shard_replica_dirs = _discover_replicas(spill_dir,
                                                     shard_dirs)
         return eng
 
     # ------------------------------------------------------------------
-    def build(self, data: np.ndarray, key=None,
-              spill_dir: Optional[str] = None, codec: str = "f32",
-              keep_resident: bool = True, replicas: int = 1,
-              **params):
+    def build(self, data: np.ndarray, key=None, *,
+              index: Optional[IndexSpec] = None,
+              store: Optional[StoreSpec] = None, **legacy):
         """Shard rows, build per-shard indexes (embarrassingly parallel
         on hosts), stack and device_put with the shard axis mapped onto
         the mesh axes.
 
-        ``spill_dir`` additionally persists every shard as an on-disk
-        store artifact (spill_dir/shard_NNNN, global ids and global
-        n_total preserved) so shards can be served out-of-core — since
-        PR 4 directly by :meth:`query` (auto-detected, or forced with
-        ``ooc=True``), the path toward collections larger than pod
-        HBM. ``codec`` selects each shard's leaf payload encoding
-        ("f32"/"bf16"/"pq", store format v2) — compressed spill shrinks
-        every shard's bytes-read in the out-of-core serving path.
-        ``keep_resident=False`` (requires ``spill_dir``) skips stacking
-        the shards into HBM entirely: the engine holds only the spilled
-        stores and every query runs the OOC path — on a MESH-FREE
-        engine (``mesh=None`` + ``shards=N``) this is the only legal
-        mode, and the shard count comes from ``self.shards``.
+        The configuration surface is two typed specs (core/spec.py):
+        ``index=IndexSpec(method, params)`` says WHAT to build (method
+        + builder params such as ``leaf_cap``); ``store=StoreSpec(...)``
+        says WHERE/HOW to serve it. The old loose spelling —
+        ``build(spill_dir=..., codec=..., keep_resident=...,
+        replicas=..., **builder_params)`` — keeps working for one
+        release via the APIDeprecationWarning shim.
+
+        ``StoreSpec.spill_dir`` additionally persists every shard as an
+        on-disk store artifact (spill_dir/shard_NNNN, global ids and
+        global n_total preserved) so shards can be served out-of-core —
+        since PR 4 directly by :meth:`query` (auto-detected, or forced
+        with ``ooc=True``), the path toward collections larger than pod
+        HBM. ``StoreSpec.codec`` selects each shard's leaf payload
+        encoding ("f32"/"bf16"/"pq", store format v2) — compressed
+        spill shrinks every shard's bytes-read in the out-of-core
+        serving path. ``keep_resident=False`` (requires ``spill_dir``)
+        skips stacking the shards into HBM entirely: the engine holds
+        only the spilled stores and every query runs the OOC path — on
+        a MESH-FREE engine (``mesh=None`` + ``shards=N``) this is the
+        only legal mode, and the shard count comes from ``self.shards``.
         ``replicas=R`` persists R on-disk copies of every shard store
         (the primary plus R-1 byte-identical replicas under
         spill_dir/replicas/rN/ — no re-encode, so pq codebooks and
         leaf payloads match bit for bit) with round-robin owner
         assignment; a failed or timed-out shard attempt fails over to
-        the next copy before the query degrades (docs/FAULT.md)."""
-        if not keep_resident and spill_dir is None:
-            raise ValueError("keep_resident=False requires spill_dir")
+        the next copy before the query degrades (docs/FAULT.md). The
+        delta/compaction fields govern :meth:`enable_writes`
+        (docs/INGEST.md)."""
+        ispec, sspec = coerce_build_args(self.method, index, store,
+                                         legacy)
+        spill_dir, codec = sspec.spill_dir, sspec.codec
+        keep_resident, replicas = sspec.keep_resident, sspec.replicas
+        params = ispec.build_params
         if self.mesh is None and keep_resident:
             raise ValueError(
                 "mesh-free engine (mesh=None) cannot hold a resident "
-                "index: build with keep_resident=False + spill_dir")
-        if replicas < 1:
-            raise ValueError(f"replicas must be >= 1, got {replicas}")
-        if replicas > 1 and spill_dir is None:
-            raise ValueError("replicas > 1 requires spill_dir")
+                "index: build with StoreSpec(keep_resident=False, "
+                "spill_dir=...)")
         key = key if key is not None else jax.random.PRNGKey(0)
         self._query_fns.clear()  # compiled against the previous index
-        self.close()             # OOC state from the previous build
+        self.close()             # OOC state + compaction daemon from
+        #                          the previous build
+        self._delta = None       # writes belonged to the old rows
+        self._seg_dir = None
+        self._seg_seq = 0
+        self._dead_cache.clear()
+        self._dead_stacked = None
+        self.method = ispec.method
+        self.index_spec, self.store_spec = ispec, sspec
         n = data.shape[0]
         s = self.n_shards
         bounds = np.linspace(0, n, s + 1).astype(np.int64)
         sample = data[np.random.default_rng(0).choice(
             n, min(n, 100_000), replace=False)]
         hist = build_histogram(sample, key)  # GLOBAL histogram
-        builder = _BUILDERS[self.method]
+        builder = _BUILDERS[ispec.method]
 
         shards = []
         spill_dirs = []
@@ -279,6 +377,7 @@ class DistributedEngine:
             spill_dir, self.shard_dirs) if spill_dirs else None
         if not keep_resident:
             self.stacked = None
+            self._shard_ids_host = None
             return self
 
         # uniform static metadata + padded array shapes across shards
@@ -306,6 +405,9 @@ class DistributedEngine:
             # consistent with the padded data
             arrs["row_norms"].append(_pad_to(
                 np.asarray(sh.row_norms), max_rows, np.float32(0)))
+        # host copies of the per-shard id arrays: the mutable tier
+        # recomputes tombstone masks from these without device pulls
+        self._shard_ids_host = [np.asarray(a) for a in arrs["ids"]]
 
         spec0 = P(self.axes if len(self.axes) > 1 else self.axes[0])
 
@@ -337,6 +439,221 @@ class DistributedEngine:
         )
         return self
 
+    # ------------- streaming writes (docs/INGEST.md) ------------------
+    def _base_meta(self):
+        """(n_total, series_len, hist) of the frozen base — from the
+        stacked resident index when present, else from shard 0's
+        spilled store (global metadata is replicated per shard)."""
+        if self.stacked is not None:
+            idx = self.stacked
+            return int(idx.n_total), int(idx.series_len), idx.hist
+        if not self.shard_dirs:
+            raise ValueError("build() or open_spill() first")
+        res = self._store(self.shard_dirs[0]).resident
+        return int(res.n_total), int(res.series_len), res.hist
+
+    def enable_writes(self) -> "DistributedEngine":
+        """Arm the mutable tier (docs/INGEST.md): an in-memory
+        :class:`repro.store.delta.DeltaTier` absorbing ``insert`` /
+        ``delete`` at serving time — searched alongside the frozen
+        store by every subsequent :meth:`query` — plus, when
+        ``StoreSpec.auto_compact`` is set, the background daemon that
+        re-freezes the delta into leaf-contiguous on-disk segments.
+        Idempotent; ``insert``/``delete`` call it automatically."""
+        from repro.store.delta import DeltaTier
+
+        spec = self.store_spec or StoreSpec()
+        if self._delta is None:
+            # metadata reads (may open a store, takes _ooc_lock)
+            # happen BEFORE _write_lock: _write_lock stays a leaf
+            n_total, series_len, _ = self._base_meta()
+            with self._write_lock:
+                if self._delta is None:
+                    if self._seg_dir is None:
+                        if spec.spill_dir is not None:
+                            self._seg_dir = os.path.join(
+                                spec.spill_dir, "segments")
+                            os.makedirs(self._seg_dir, exist_ok=True)
+                        else:
+                            self._seg_dir = tempfile.mkdtemp(
+                                prefix="repro-segments-")
+                    self._delta = DeltaTier(series_len,
+                                            start_id=n_total)
+        if spec.auto_compact:
+            with self._write_lock:
+                if self._compactor is None \
+                        or not self._compactor.is_alive():
+                    self._compactor_stop = threading.Event()
+                    t = threading.Thread(
+                        target=self._compact_loop,
+                        name="delta-compactor", daemon=True)
+                    self._compactor = t
+                    t.start()
+        return self
+
+    def insert(self, rows, ids=None) -> np.ndarray:
+        """Absorb rows into the delta tier at serving time; they are
+        retrievable by the NEXT query() (bench_serve_load measures
+        that freshness lag). Returns the assigned global ids
+        (auto-allocated past the frozen id space when not supplied);
+        inserting an existing id supersedes every older copy."""
+        self.enable_writes()
+        return self._delta.insert(rows, ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids everywhere — frozen base shards,
+        compacted segments, and the delta memtable (kill-sequence
+        rule, docs/INGEST.md)."""
+        self.enable_writes()
+        return self._delta.delete(ids)
+
+    def compact(self) -> bool:
+        """Re-freeze the live delta memtable into one leaf-contiguous
+        on-disk segment (codec-aware via the ordinary save_index path)
+        and publish it for serving. In-flight queries keep the
+        snapshot they started with and never block; writes landing
+        during the build go to the fresh active memtable. Returns True
+        iff a segment was published. Runs on the background daemon
+        when ``StoreSpec.auto_compact`` is set; safe to call manually
+        either way (``begin_freeze`` serializes: a second concurrent
+        compaction sees the freeze in flight and returns False)."""
+        delta = self._delta
+        if delta is None:
+            return False
+        batch = delta.begin_freeze()
+        if batch is None:
+            return False
+        with obs.span("delta.compact", rows=int(batch.ids.shape[0])):
+            try:
+                seg = self._build_segment(batch)
+            except BaseException:  # re-raised: the fold-back must run even for KeyboardInterrupt/SystemExit or the frozen batch's writes would be silently lost
+                delta.abort_freeze()
+                raise
+            delta.publish_segment(seg)
+        return True
+
+    def _segment_codec(self) -> str:
+        """The leaf codec segments are persisted with: the base
+        shards' (so the rebuilt-from-scratch oracle store and the
+        frozen+delta pair encode rows identically); falls back to the
+        StoreSpec for resident-only engines."""
+        if self.shard_dirs:
+            return self._store(self.shard_dirs[0]).codec
+        return (self.store_spec or StoreSpec()).codec
+
+    def _build_segment(self, batch) -> EngineSegment:
+        """Freeze one delta batch into an on-disk segment store: build
+        a FrozenIndex over the batch rows with the SAME method/params
+        as the base and the GLOBAL histogram (per-segment r_delta
+        keeps single-node semantics, exactly like shards), re-map
+        builder-local row ids to the batch's global ids, and save
+        under segments/seg_NNNN with the base codec. Resident engines
+        additionally keep the pre-encode f32 index for serving
+        (EngineSegment docstring)."""
+        n_base, _, hist = self._base_meta()
+        ispec = self.index_spec or IndexSpec(method=self.method)
+        builder = _BUILDERS[ispec.method]
+        idx = builder(batch.rows, hist=hist,
+                      key=jax.random.PRNGKey(0), **ispec.build_params)
+        local_ids = np.asarray(idx.ids)
+        gids = np.asarray(batch.ids, np.int64)
+        ext = np.where(
+            local_ids >= 0,
+            gids[np.clip(local_ids, 0, gids.shape[0] - 1)], -1)
+        idx = dataclasses.replace(
+            idx, ids=jnp.asarray(ext, jnp.int32), n_total=n_base)
+        with self._write_lock:  # leaf: segment numbering only
+            seq = self._seg_seq
+            self._seg_seq += 1
+        d = os.path.join(self._seg_dir, f"seg_{seq:04d}")
+        codec = self._segment_codec()
+        if codec == "pq":
+            from repro.store.layout import PQ_K
+            if batch.rows.shape[0] < PQ_K:
+                # pq codebooks train one centroid per code (PQ_K of
+                # them) — a memtable smaller than that cannot train a
+                # meaningful quantizer, and pq exists to shrink the
+                # BIG frozen payload anyway: persist the small segment
+                # lossless instead of crashing the compactor
+                codec = "f32"
+        idx.save(d, codec=codec)
+        return EngineSegment(
+            dir=d, born_seq=batch.born_seq,
+            n_rows=int(batch.ids.shape[0]), ids_np=ext,
+            index=idx if self.stacked is not None else None)
+
+    def _compact_loop(self) -> None:
+        """Body of the background compaction daemon
+        (``StoreSpec.auto_compact``): poll the delta tier every
+        ``compact_interval_s`` and compact once the live memtable
+        crosses ``delta_max_rows``."""
+        spec = self.store_spec or StoreSpec()
+        stop = self._compactor_stop
+        while not stop.wait(spec.compact_interval_s):
+            delta = self._delta
+            if delta is None or not delta.freeze_threshold_reached(
+                    spec.delta_max_rows):
+                continue
+            try:
+                self.compact()
+            except Exception:  # noqa: BLE001 the daemon must outlive any one failed compaction (disk full, transient build error): the frozen batch already folded back into the memtable via abort_freeze, so count it and retry next tick
+                obs.REGISTRY.counter("delta.compaction_errors").inc()
+
+    def _stop_compactor(self) -> None:
+        """Stop the compaction daemon if running (idempotent; close()
+        and build() call it). The thread is joined OUTSIDE
+        _write_lock — its body takes that lock for segment
+        numbering."""
+        with self._write_lock:
+            t, self._compactor = self._compactor, None
+            ev, self._compactor_stop = self._compactor_stop, None
+        if ev is not None:
+            ev.set()
+        if t is not None and t.is_alive():
+            t.join(timeout=10.0)
+
+    def _mutable_view(self, snap) -> _MutView:
+        """Precompute what serving one snapshot jointly needs: the
+        joint r_delta N and every published segment's tombstone mask.
+        ``base_dead`` counts kills landing in the frozen id range
+        [0, n_base) — range-sharded build assigns exactly those ids —
+        so deletes of never-inserted ids cost nothing."""
+        n_base, _, _ = self._base_meta()
+        base_dead = 0
+        if snap.kills:
+            kid = np.fromiter(snap.kills.keys(), np.int64,
+                              count=len(snap.kills))
+            base_dead = int(((kid >= 0) & (kid < n_base)).sum())
+        seg_dead = []
+        seg_live = 0
+        for seg in snap.segments:
+            m = self._unit_dead(("seg", seg.dir), seg.ids_np,
+                                seg.born_seq, snap)
+            seg_dead.append(m)
+            seg_live += seg.n_rows - int(m.sum())
+        joint_n = joint_n_total(n_base, base_dead,
+                                seg_live + snap.live_rows)
+        return _MutView(snap=snap, joint_n=joint_n,
+                        seg_dead=tuple(seg_dead))
+
+    def _unit_dead(self, unit, ids_np, born_seq: int, snap,
+                   pad_to: Optional[int] = None) -> np.ndarray:
+        """One frozen unit's tombstone mask under this snapshot,
+        cached by kills_version (recomputing np.isin per query would
+        dominate small-batch serving between writes). Lock-free like
+        _query_fns: dict get/set are GIL-atomic, version equality
+        keys the hit, and racing queries recompute interchangeable
+        masks from their own consistent snapshots."""
+        hit = self._dead_cache.get(unit)
+        if hit is not None and hit[0] == snap.kills_version:
+            mask = hit[1]
+        else:
+            mask = snap.dead_mask(ids_np, born_seq)
+            self._dead_cache[unit] = (snap.kills_version, mask)
+        if pad_to is not None and pad_to > mask.shape[0]:
+            mask = np.pad(mask, (0, pad_to - mask.shape[0]))
+        return mask
+
     # ------------------------------------------------------------------
     def query(
         self, queries, k: int, g: Guarantee = Guarantee(),
@@ -366,6 +683,15 @@ class DistributedEngine:
         when a shard was lost past its replicas), and shared warm
         caches are serialized per shard copy so two queries never
         interleave on one slot pool."""
+        # the mutable tier is snapshotted FIRST: everything below this
+        # line — base shards, segments, memtable scan, tombstone
+        # masks, joint N — serves one consistent point in time, however
+        # many writes land while the query runs (docs/INGEST.md)
+        mut = None
+        if self._delta is not None:
+            snap = self._delta.snapshot()
+            if snap.live_rows or snap.kills or snap.segments:
+                mut = self._mutable_view(snap)
         if ooc is None:
             ooc = self.stacked is None and self.shard_dirs is not None
         if ooc:
@@ -382,10 +708,13 @@ class DistributedEngine:
                     "bytes-read/leaves-visited are not tightened).",
                     UserWarning, stacklevel=2)
             return self._query_ooc(queries, k, g, visit_batch,
-                                   dict(ooc_opts or {}))
+                                   dict(ooc_opts or {}), mut=mut)
         assert self.stacked is not None, "build() first"
         idx = self.stacked
         b = queries.shape[0]
+        if mut is not None:
+            return self._query_resident_mut(idx, queries, k, g,
+                                            visit_batch, sync_bsf, mut)
         cache_key = (k, g.delta, g.epsilon, g.nprobe, visit_batch,
                      sync_bsf, b, queries.shape[-1])
         cached = self._query_fns.get(cache_key)
@@ -473,6 +802,184 @@ class DistributedEngine:
                        res.leaves_visited).sum()),
                    rows_scanned=int(np.asarray(res.rows_scanned).sum()))
         return QueryResult(*res)
+
+    def _dead_stacked_dev(self, mut: _MutView):
+        """The [S, max_rows] stacked tombstone operand for the
+        resident shard_map (device-put with the shard axis on the
+        mesh), rebuilt only when the kill set advances — the
+        steady-state query between writes reuses the cached device
+        array. Same lock-free versioned-cache discipline as
+        _dead_cache."""
+        snap = mut.snap
+        hit = self._dead_stacked
+        if hit is not None and hit[0] == snap.kills_version:
+            return hit[1]
+        ids_host = self._shard_ids_host
+        if ids_host is None:  # e.g. checkpoint-restored stacked index
+            ids_host = [np.asarray(a)
+                        for a in np.asarray(self.stacked.ids)]
+            self._shard_ids_host = ids_host
+        masks = np.stack([
+            self._unit_dead(("rshard", si), ids, 0, snap)
+            for si, ids in enumerate(ids_host)])
+        spec0 = P(self.axes if len(self.axes) > 1 else self.axes[0])
+        dev = jax.device_put(jnp.asarray(masks),
+                             NamedSharding(self.mesh, spec0))
+        self._dead_stacked = (snap.kills_version, dev)
+        return dev
+
+    def _query_resident_mut(self, idx, queries, k: int, g: Guarantee,
+                            visit_batch: int, sync_bsf: bool,
+                            mut: _MutView) -> QueryResult:
+        """The resident path with the mutable tier armed: the same
+        eager shard_map search as :meth:`query`, plus (a) the
+        per-shard tombstone mask as a third operand and (b) the joint
+        live-N for r_delta — then the segment + memtable fold
+        (:meth:`_fold_mutable`). The closure is rebuilt per call: it
+        closes over joint_n, which moves with every insert, and
+        dispatch is eager anyway (no compile cache to protect —
+        _query_fns exists to avoid RETRACING, which eager closures
+        never do)."""
+        g.validate()
+        b = queries.shape[0]
+        axes = self.axes
+        spec_shard = P(axes if len(axes) > 1 else axes[0])
+        in_specs = (
+            FrozenIndex(
+                box_lo=spec_shard, box_hi=spec_shard, offsets=spec_shard,
+                data=spec_shard, ids=spec_shard, weights=P(),
+                hist=DistanceHistogram(edges=P(), cdf=P()),
+                kind=idx.kind, summary=idx.summary,
+                n_summary=idx.n_summary, max_leaf=idx.max_leaf,
+                n_total=idx.n_total, series_len=idx.series_len,
+                row_norms=spec_shard,
+            ),
+            spec_shard,  # [S, max_rows] tombstones, one row per shard
+            P(),         # queries replicated
+        )
+        delta, epsilon, nprobe = g.delta, g.epsilon, g.nprobe
+        joint_n = mut.joint_n
+
+        def local_mut(idx_local: FrozenIndex, dead_l, q) -> SearchResult:
+            sq = jax.tree_util.tree_map(
+                lambda a: a[0], (idx_local.box_lo, idx_local.box_hi,
+                                 idx_local.offsets, idx_local.data,
+                                 idx_local.ids, idx_local.row_norms))
+            lidx = dataclasses.replace(
+                idx_local, box_lo=sq[0], box_hi=sq[1], offsets=sq[2],
+                data=sq[3], ids=sq[4], row_norms=sq[5])
+            # search_impl, not search: an inner jit under shard_map
+            # miscompiles the refinement loop on jax 0.4.x.
+            # repro: allow[jax-while-shard-map] deliberate: dispatched ONLY through the eager compat.shard_map below (never under jit), same 0.4.37 miscompile rationale as the immutable closure above
+            res = search_impl(
+                lidx, q, k, delta=delta, epsilon=epsilon,
+                nprobe=nprobe, visit_batch=visit_batch,
+                dead=dead_l[0], n_override=joint_n,
+                sync_axes=tuple(axes) if sync_bsf else ())
+            all_d = jax.lax.all_gather(res.dists, axes[-1], tiled=False)
+            all_i = jax.lax.all_gather(res.ids, axes[-1], tiled=False)
+            if len(axes) > 1:
+                for ax in axes[:-1]:
+                    all_d = jax.lax.all_gather(all_d, ax, tiled=False)
+                    all_i = jax.lax.all_gather(all_i, ax, tiled=False)
+                all_d = all_d.reshape(-1, b, k)
+                all_i = all_i.reshape(-1, b, k)
+            md = all_d.transpose(1, 0, 2).reshape(b, -1)
+            mi = all_i.transpose(1, 0, 2).reshape(b, -1)
+            sd, si = jax.lax.sort((md, mi), num_keys=1)
+            leaves = jax.lax.psum(res.leaves_visited, axes)
+            rows = jax.lax.psum(res.rows_scanned, axes)
+            lbs = jax.lax.psum(res.lb_computed, axes)
+            return SearchResult(sd[:, :k], si[:, :k], leaves, rows, lbs)
+
+        out_specs = SearchResult(P(), P(), P(), P(), P())
+        fn = compat.shard_map(
+            local_mut, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, check=False,
+        )
+        dead_dev = self._dead_stacked_dev(mut)
+        qj = jnp.asarray(queries)
+        if not obs.enabled():
+            base = QueryResult(*fn(idx, dead_dev, qj))
+            return self._fold_mutable(base, mut, qj, k, g,
+                                      visit_batch, resident=True)
+        with obs.span("engine.query", path="resident+delta", lanes=b,
+                      k=k, shards=self.n_shards,
+                      delta_rows=mut.snap.live_rows,
+                      segments=len(mut.snap.segments)) as sp:
+            res = fn(idx, dead_dev, qj)
+            jax.block_until_ready(res.dists)
+            out = self._fold_mutable(QueryResult(*res), mut, qj, k, g,
+                                     visit_batch, resident=True)
+            sp.set(leaves_visited=int(np.asarray(
+                       out.leaves_visited).sum()),
+                   rows_scanned=int(np.asarray(out.rows_scanned).sum()))
+        return out
+
+    def _fold_mutable(self, base: QueryResult, mut: _MutView, qj,
+                      k: int, g: Guarantee, visit_batch: int, *,
+                      resident: bool) -> QueryResult:
+        """Fold the mutable tier into the frozen-base answer: every
+        published segment is served as one more shard — resident
+        engines score the kept pre-encode index with the shared eager
+        search_impl (same arithmetic as the resident base), OOC
+        engines serve the segment's on-disk store through search_ooc
+        (codec-faithful) — and the memtable snapshot is brute-scored
+        last (store.delta.search_snapshot), all through
+        ``ops.topk_merge_unique``. The kill rule guarantees at most
+        one live copy of any id across the operands, the merge's
+        distinct-id precondition; the merge is a commutative
+        (d, id)-lex selection, so this staged fold equals the
+        from-scratch rebuild's single sort bit for bit."""
+        from repro.store.delta import search_snapshot
+        from repro.store.ooc import search_ooc
+
+        snap = mut.snap
+        top_d, top_i = base.dists, base.ids
+        leaves = np.asarray(base.leaves_visited, np.int64).copy()
+        rows = np.asarray(base.rows_scanned, np.int64).copy()
+        lbs = int(base.lb_computed)
+        b = qj.shape[0]
+        for seg, dead in zip(snap.segments, mut.seg_dead):
+            dead_arg = jnp.asarray(dead) if dead.any() else None
+            if resident and seg.index is not None:
+                res = search_impl(
+                    seg.index, qj, k, delta=g.delta,
+                    epsilon=g.epsilon, nprobe=g.nprobe,
+                    visit_batch=visit_batch, dead=dead_arg,
+                    n_override=mut.joint_n)
+                sd, si = res.dists, res.ids
+                leaves += np.asarray(res.leaves_visited, np.int64)
+                rows += np.asarray(res.rows_scanned, np.int64)
+                lbs += int(res.lb_computed)
+            else:
+                with self._copy_lock(seg.dir):
+                    store = self._store(seg.dir)
+                    cache = self._shard_cache(
+                        seg.dir, store, b * visit_batch, None,
+                        prefetch_depth=1, prefetch=True)
+                    out = search_ooc(
+                        store, qj, k, g, visit_batch=visit_batch,
+                        cache=cache, dead=dead_arg,
+                        n_override=mut.joint_n)
+                r = out.result
+                sd, si = r.dists, r.ids
+                leaves += np.asarray(r.leaves_visited, np.int64)
+                rows += np.asarray(r.rows_scanned, np.int64)
+                lbs += int(r.lb_computed)
+            top_d, top_i = ops.topk_merge_unique(sd, si, top_d, top_i)
+        sd, si = search_snapshot(
+            snap, qj, k,
+            codec="f32" if resident else self._segment_codec())
+        top_d, top_i = ops.topk_merge_unique(sd, si, top_d, top_i)
+        rows += snap.live_rows  # the memtable scan touches every row
+        return QueryResult(
+            dists=top_d, ids=top_i,
+            leaves_visited=jnp.asarray(leaves, jnp.int32),
+            rows_scanned=jnp.asarray(rows, jnp.int32),
+            lb_computed=jnp.int32(lbs),
+            stats=base.stats,
+        )
 
     # ------------------------------------------------------------------
     def _copy_lock(self, d: str) -> threading.RLock:
@@ -563,7 +1070,11 @@ class DistributedEngine:
         engine. Idempotent and thread-safe: state is snapshotted and
         detached under the lock, prefetcher threads are joined outside
         it (a query in flight keeps its own cache reference and falls
-        back to demand reads once its prefetcher stops)."""
+        back to demand reads once its prefetcher stops). The delta
+        tier's DATA survives a close — only the compaction daemon
+        stops (a later insert()/enable_writes() restarts it);
+        build() additionally resets the tier for the new rows."""
+        self._stop_compactor()
         with self._ooc_lock:
             caches = list(self._shard_caches.values())
             self._shard_caches.clear()
@@ -574,7 +1085,8 @@ class DistributedEngine:
                 cache.prefetcher = None
 
     def _query_ooc(self, queries, k: int, g: Guarantee,
-                   visit_batch: int, opts: dict) -> QueryResult:
+                   visit_batch: int, opts: dict,
+                   mut: Optional[_MutView] = None) -> QueryResult:
         """Serve the query batch from the spilled shard stores:
         CONCURRENT shard owners (one worker per shard, pool width
         ``workers``) each drive the host refinement loop over their
@@ -647,6 +1159,18 @@ class DistributedEngine:
                         d, store, b * visit_batch, cache_leaves,
                         prefetch_depth=prefetch_depth,
                         prefetch=prefetch)
+                    dead = None
+                    n_over = None
+                    if mut is not None:
+                        # replica copies are byte-identical to the
+                        # primary (same ids array), so the mask is
+                        # keyed by SHARD, shared across copies
+                        m = self._unit_dead(
+                            ("sshard", si),
+                            np.asarray(store.resident.ids), 0,
+                            mut.snap, pad_to=store.mmap.shape[0])
+                        dead = m if m.any() else None
+                        n_over = mut.joint_n
                     # the child ooc.query span carries the shard's
                     # bytes_read attr — one subtree level owns each
                     # numeric attr, so QueryProfile.total() never
@@ -655,10 +1179,10 @@ class DistributedEngine:
                     with obs.span("engine.shard", shard=si,
                                   copy=fctx.replica):
                         return search_ooc(
-                            store, qj, k, delta=g.delta,
-                            epsilon=g.epsilon, nprobe=g.nprobe,
+                            store, qj, k, g,
                             visit_batch=visit_batch, cache=cache,
-                            fault=fctx, **opts)
+                            fault=fctx, dead=dead,
+                            n_override=n_over, **opts)
             return attempt
 
         def serve_one(si):
@@ -742,13 +1266,17 @@ class DistributedEngine:
                          effective_delta=stats.effective_delta)
             root.set(bytes_read_total=stats.bytes_read,
                      iterations=stats.iterations)
-        return QueryResult(
+        out = QueryResult(
             dists=top_d, ids=top_i,
             leaves_visited=jnp.asarray(leaves, jnp.int32),
             rows_scanned=jnp.asarray(rows, jnp.int32),
             lb_computed=jnp.int32(lbs),
             stats=stats,
         )
+        if mut is not None:
+            out = self._fold_mutable(out, mut, qj, k, g, visit_batch,
+                                     resident=False)
+        return out
 
     def _degrade(self, stats: OocStats, lost, infos, top_d, k: int,
                  g: Guarantee, effective_delta_after_loss) -> None:

@@ -65,6 +65,26 @@ def ng(nprobe: int = 1) -> Guarantee:
     return Guarantee(nprobe=nprobe).validate()
 
 
+def joint_n_total(base_n_total: int, frozen_dead: int,
+                  delta_live: int) -> int:
+    """The row count N to evaluate r_delta against when the frozen
+    store is served JOINTLY with a mutable delta tier
+    (docs/INGEST.md).
+
+    The live collection has ``base - frozen_dead + delta_live`` rows,
+    but r_delta = F^{-1}(1 - delta^{1/N}) is DECREASING in N — a
+    larger N SHRINKS the early-stop ball — so under-counting N
+    (ignoring inserts) would stop early too often and break the delta
+    guarantee, while over-counting (ignoring deletes) only tightens
+    the stop radius and is conservative. Hence the joint
+    N is the live count floored at the frozen N: inserts always raise
+    it, deletes never lower it below what the frozen store was built
+    for.
+    """
+    live = base_n_total - int(frozen_dead) + int(delta_live)
+    return max(int(base_n_total), live, 1)
+
+
 def effective_delta_after_loss(
     hist, kth_dists, n_lost: int, *, delta: float = 1.0,
     epsilon: float = 0.0,

@@ -106,8 +106,34 @@ def build(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "refine"))
 def query(
+    idx: IMIIndex, queries: jax.Array, k: int, g=None, *,
+    refine: bool = False, **legacy,
+) -> SearchResult:
+    """Guarantee-carrying entry point: IMI is an ng-only method
+    (Table 1) — ``g`` must be an ng guarantee (``g.nprobe`` cells
+    probed; default ng(16), the module's historical default). The
+    loose ``nprobe=`` kwarg is the one-release deprecated shim
+    (core/spec.py); delta/epsilon guarantees are rejected."""
+    from ..spec import coerce_guarantee
+
+    g = coerce_guarantee(g, legacy, caller="imi.query")
+    if legacy:
+        raise TypeError(
+            f"imi.query() got unexpected keyword arguments "
+            f"{sorted(legacy)}")
+    if g.nprobe is None:
+        if g.delta < 1.0 or g.epsilon > 0.0:
+            raise ValueError("imi is ng-only: pass g=ng(nprobe), not "
+                             "a delta/epsilon guarantee")
+        nprobe = 16
+    else:
+        nprobe = g.nprobe
+    return _query_impl(idx, queries, k, nprobe=nprobe, refine=refine)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "refine"))
+def _query_impl(
     idx: IMIIndex, queries: jax.Array, k: int, *, nprobe: int = 16,
     refine: bool = False,
 ) -> SearchResult:

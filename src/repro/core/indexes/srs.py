@@ -53,9 +53,38 @@ def build(data: np.ndarray, *, m: int = 16, key=None) -> SRSIndex:
                     n_total=data.shape[0])
 
 
+def query(
+    idx: SRSIndex, queries: jax.Array, k: int, g=None, *,
+    chunk: int = 256, max_scan: Optional[int] = None, **legacy,
+) -> SearchResult:
+    """Guarantee-carrying entry point: ``g`` is a
+    :class:`repro.core.guarantees.Guarantee` (default: the module's
+    historical delta-epsilon operating point, delta=0.95); loose
+    ``delta=``/``epsilon=`` kwargs are the one-release deprecated shim
+    (core/spec.py). SRS is a delta-epsilon method — ``g.nprobe`` is
+    rejected (Table 1 categorization)."""
+    from ..guarantees import Guarantee
+    from ..spec import coerce_guarantee
+
+    if g is None and not any(kw in legacy
+                             for kw in ("delta", "epsilon", "nprobe")):
+        g = Guarantee(delta=0.95)
+    g = coerce_guarantee(g, legacy, caller="srs.query")
+    if legacy:
+        raise TypeError(
+            f"srs.query() got unexpected keyword arguments "
+            f"{sorted(legacy)}")
+    if g.nprobe is not None:
+        raise ValueError("srs is a delta-epsilon method: it has no "
+                         "nprobe-bounded (ng) mode")
+    return _query_impl(idx, queries, k, delta=g.delta,
+                       epsilon=g.epsilon, chunk=chunk,
+                       max_scan=max_scan)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "chunk", "max_scan"))
-def query(
+def _query_impl(
     idx: SRSIndex, queries: jax.Array, k: int, *,
     delta: float = 0.95, epsilon: float = 0.0,
     chunk: int = 256, max_scan: Optional[int] = None,

@@ -233,6 +233,10 @@ class ScoreCtx(NamedTuple):
     ids: jax.Array                 # [npad] int32 global row ids
     norms: Optional[jax.Array]     # [npad] f32 squared row norms (raw)
     luts: Optional[jax.Array]      # [B, m, K] ADC tables (pq only)
+    dead: Optional[jax.Array] = None  # [npad] bool row tombstones
+    #   (docs/INGEST.md): True rows are superseded by the delta tier
+    #   (deleted or re-inserted) and must never surface from this
+    #   frozen unit. None = immutable store, zero masking cost.
 
 
 class Gathered(NamedTuple):
@@ -270,8 +274,15 @@ def refine_step(ctx: ScoreCtx, pool: jax.Array, gather_idx: jax.Array,
     For share=True the caller passes the coop_mask'ed validity (the
     distinct-id precondition); candidates are ids for raw codecs and
     padded row positions for pq — masked slots are -1 in both, which
-    is the fused kernels' masking convention."""
+    is the fused kernels' masking convention.
+
+    Tombstones (ctx.dead, docs/INGEST.md) are folded into validity
+    BEFORE candidates are formed: a dead row scores inf / candidate -1
+    on every branch of the dispatch, identically in both residencies,
+    so a deleted frozen row can never enter any running top-k."""
     k = top_d.shape[1]
+    if ctx.dead is not None:
+        valid = valid & ~ctx.dead[row_idx]
     if pq:
         cand = jnp.where(valid, row_idx, -1)
     else:

@@ -80,6 +80,8 @@ def search_impl(
     sync_axes: tuple = (),
     share_gathers: bool = False,
     frontier: Optional[int] = None,
+    dead: Optional[jax.Array] = None,
+    n_override: Optional[int] = None,
 ) -> SearchResult:
     """Batched Algorithm 2 body (see module docstring for semantics).
 
@@ -105,13 +107,23 @@ def search_impl(
     frontier: lazy leaf-frontier width F (ranks partially selected per
     refill; None -> default_frontier). Any width yields the SAME visit
     order — the stable argsort order — it only tunes how much lookahead
-    each refill materializes."""
+    each refill materializes.
+
+    dead / n_override (mutable tier, docs/INGEST.md): ``dead`` is a
+    [n_padded] bool tombstone mask over this index's row positions —
+    masked rows score inf in refine_step and never surface.
+    ``n_override`` substitutes the LIVE joint row count for
+    ``index.n_total`` in the delta-guarantee radius r_delta (inserts
+    must RAISE N: r_delta shrinks with N, so a stale smaller N would be
+    anti-conservative)."""
     b, n = queries.shape
     L = index.num_leaves
     v = visit_batch
 
     src = refine.ResidentSource(index, force_pallas=force_pallas)
     ctx = src.query_ctx(queries)
+    if dead is not None:
+        ctx = ctx._replace(dead=dead)
 
     # ---- filter: lower bound to every leaf ----
     lb_sq = refine.leaf_lower_bounds(index, queries,
@@ -123,7 +135,8 @@ def search_impl(
         else min(max(int(frontier), v + 1), L)
 
     eps_mult = jnp.float32((1.0 + epsilon) ** 2)
-    rd = r_delta(index.hist, delta, index.n_total)
+    rd = r_delta(index.hist, delta,
+                 index.n_total if n_override is None else n_override)
     rd_sq = (rd * rd).astype(jnp.float32)
     max_rank = L if nprobe is None else min(nprobe, L)
 
@@ -210,19 +223,28 @@ def search_impl(
 _search_jit = jax.jit(
     search_impl,
     static_argnames=("k", "nprobe", "visit_batch", "force_pallas",
-                     "sync_axes", "share_gathers", "frontier"),
+                     "sync_axes", "share_gathers", "frontier",
+                     "n_override"),
 )
 
 
 def search(index: FrozenIndex, queries: jax.Array, k: int,
-           **kw) -> SearchResult:
-    """Public jitted entry point (`search_impl` semantics). When span
-    tracing is enabled (repro.obs) the call is wrapped in a
-    ``core.search`` span — blocking on the result so the span measures
-    the device work; untraced calls keep jit's async dispatch and pay
-    only this one flag check."""
+           g: Optional[Guarantee] = None, **kw) -> SearchResult:
+    """Public jitted entry point (`search_impl` semantics). The
+    guarantee is ONE object — ``g=Guarantee(...)`` (constructors in
+    core.guarantees: exact/epsilon/delta_epsilon/ng); the historical
+    loose ``delta=``/``epsilon=``/``nprobe=`` kwargs still work for one
+    release via a shim that emits APIDeprecationWarning (an error under
+    scripts/verify.sh, and the ``guarantee-kwargs`` analysis rule fails
+    in-repo callers). When span tracing is enabled (repro.obs) the call
+    is wrapped in a ``core.search`` span — blocking on the result so
+    the span measures the device work; untraced calls keep jit's async
+    dispatch and pay only this one flag check."""
     from repro import obs
+    from .spec import coerce_guarantee
 
+    g = coerce_guarantee(g, kw, caller="search")
+    kw.update(delta=g.delta, epsilon=g.epsilon, nprobe=g.nprobe)
     if not obs.enabled():
         return _search_jit(index, queries, k, **kw)
     with obs.span("core.search", lanes=queries.shape[0], k=k,
@@ -234,31 +256,32 @@ def search(index: FrozenIndex, queries: jax.Array, k: int,
     return res
 
 
-def search_ooc(store, queries: jax.Array, k: int, **kw):
+def search_ooc(store, queries: jax.Array, k: int,
+               g: Optional[Guarantee] = None, **kw):
     """Out-of-core Algorithm 2 over a LeafStore (see repro.store):
     identical visit order and stopping predicates to :func:`search` —
     only residency differs, so every guarantee transfers (exception:
     the lossy codec="pq" payload supports the epsilon/delta-epsilon
     checks via its exact re-rank but not exact epsilon=0 search, and
-    warns if asked). Accepts
-    delta/epsilon/nprobe/visit_batch plus cache/cache_leaves/prefetch,
-    share_gathers (cooperative scoring, as in :func:`search_impl`),
-    frontier (lazy visit-order window width, as in :func:`search_impl`),
-    prefetch_depth (speculative lookahead in visit windows) and rerank
-    (codec="pq" exact re-rank pool multiplier); returns
-    OocResult(result=SearchResult, stats={bytes_read, hit_rate,
-    codec, ...})."""
+    warns if asked). The guarantee is one ``g=Guarantee(...)`` object
+    (loose delta/epsilon/nprobe kwargs are the deprecated shim, as in
+    :func:`search`); also accepts visit_batch plus
+    cache/cache_leaves/prefetch, share_gathers (cooperative scoring,
+    as in :func:`search_impl`), frontier (lazy visit-order window
+    width), prefetch_depth (speculative lookahead in visit windows),
+    rerank (codec="pq" exact re-rank pool multiplier), and
+    dead/n_override (tombstones + live-N joint guarantee,
+    docs/INGEST.md); returns OocResult(result=SearchResult,
+    stats=OocStats)."""
     from repro.store.ooc import search_ooc as impl
 
-    return impl(store, queries, k, **kw)
+    return impl(store, queries, k, g, **kw)
 
 
 def search_with_guarantee(
     index: FrozenIndex, queries: jax.Array, k: int, g: Guarantee, **kw
 ) -> SearchResult:
-    g.validate()
-    return search(index, queries, k, delta=g.delta, epsilon=g.epsilon,
-                  nprobe=g.nprobe, **kw)
+    return search(index, queries, k, g, **kw)
 
 
 def brute_force(queries: jax.Array, data: jax.Array, k: int,

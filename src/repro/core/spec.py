@@ -1,0 +1,211 @@
+"""Typed build/open specs: the engine's configuration surface.
+
+``DistributedEngine.build`` grew one keyword at a time — ``spill_dir``,
+``codec``, ``keep_resident``, ``replicas``, plus ``**params`` silently
+forwarded to whichever index builder the engine was constructed with.
+The streaming-ingest tier (docs/INGEST.md) would have added four more
+knobs to that sprawl, so the surface is redesigned around two frozen
+dataclasses:
+
+  IndexSpec   WHAT to build: the method and its per-method build
+              params (leaf_cap and friends) — everything that shapes
+              the frozen artifact.
+  StoreSpec   WHERE and HOW to serve it: spill directory, leaf codec,
+              residency, replica count, and the delta-tier /
+              compaction knobs that govern writes at serving time.
+
+Old kwarg spellings keep working for one release through a shim that
+constructs the spec and emits :class:`APIDeprecationWarning`
+(``scripts/verify.sh`` turns it into an error, mirroring the v1-store
+format precedent, so the repo's own callers can never regress onto the
+deprecated surface). The same warning class covers the OTHER redesign
+riding this release: ``search`` / ``search_ooc`` take a
+:class:`repro.core.guarantees.Guarantee` object instead of loose
+``delta=``/``epsilon=``/``nprobe=`` kwargs (the ``guarantee-kwargs``
+analysis rule fails in-repo callers still on the loose spelling —
+docs/ANALYSIS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+
+class APIDeprecationWarning(DeprecationWarning):
+    """Emitted by the one-release back-compat shims: loose build/open
+    kwargs instead of IndexSpec/StoreSpec, and loose delta/epsilon/
+    nprobe kwargs instead of a Guarantee. An error under
+    scripts/verify.sh."""
+
+
+def _warn(msg: str, stacklevel: int = 3) -> None:
+    warnings.warn(msg, APIDeprecationWarning, stacklevel=stacklevel)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """What to build: a method name plus its per-method build params
+    (forwarded verbatim to the builder — e.g. ``leaf_cap`` for the
+    tree methods). ``params`` is stored as a sorted item tuple so the
+    spec stays hashable/frozen; read it back via :attr:`build_params`.
+    """
+
+    method: str = "dstree"
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def __init__(self, method: str = "dstree",
+                 params: Optional[Mapping[str, Any]] = None, **kw):
+        object.__setattr__(self, "method", method)
+        merged = dict(params or {})
+        merged.update(kw)
+        object.__setattr__(self, "params",
+                           tuple(sorted(merged.items())))
+
+    @property
+    def build_params(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """Where/how the built shards are served, plus the mutable-tier
+    knobs (docs/INGEST.md):
+
+      spill_dir        persist every shard as an on-disk store (and
+                       host the compacted delta segments under
+                       ``spill_dir/segments/``); None = resident only.
+      codec            leaf payload encoding ("f32"/"bf16"/"pq",
+                       store format v2) for shards AND segments.
+      keep_resident    stack the shards into HBM (False requires
+                       spill_dir: pure out-of-core serving).
+      replicas         on-disk copies per shard (failover,
+                       docs/FAULT.md).
+      delta_max_rows   live delta rows at which auto-compaction
+                       triggers (writes always succeed; this bounds
+                       the brute-scanned tier, not the write rate).
+      auto_compact     run the background compaction daemon
+                       (engine.enable_writes starts it; a manual
+                       ``engine.compact()`` works either way).
+      compact_interval_s  daemon poll period between threshold checks.
+    """
+
+    spill_dir: Optional[str] = None
+    codec: str = "f32"
+    keep_resident: bool = True
+    replicas: int = 1
+    delta_max_rows: int = 8192
+    auto_compact: bool = False
+    compact_interval_s: float = 0.05
+
+    def validate(self) -> "StoreSpec":
+        if self.replicas < 1:
+            raise ValueError(
+                f"replicas must be >= 1, got {self.replicas}")
+        if self.replicas > 1 and self.spill_dir is None:
+            raise ValueError("replicas > 1 requires spill_dir")
+        if not self.keep_resident and self.spill_dir is None:
+            raise ValueError("keep_resident=False requires spill_dir")
+        if self.delta_max_rows < 1:
+            raise ValueError(
+                f"delta_max_rows must be >= 1, got {self.delta_max_rows}")
+        return self
+
+
+# kwargs the old build() signature consumed itself; everything else in
+# **legacy was builder params (IndexSpec territory)
+_LEGACY_STORE_KEYS = ("spill_dir", "codec", "keep_resident", "replicas")
+
+
+def coerce_build_args(
+    method: str,
+    index: Optional[IndexSpec],
+    store: Optional[StoreSpec],
+    legacy: Dict[str, Any],
+) -> Tuple[IndexSpec, StoreSpec]:
+    """Resolve ``build(data, index=..., store=...)`` against the
+    deprecated kwarg spelling. Specs win; any legacy kwarg present
+    emits :class:`APIDeprecationWarning` and is folded into the spec
+    it belongs to. Mixing a spec with legacy kwargs for the SAME spec
+    is an error (ambiguous precedence)."""
+    store_kw = {k: legacy.pop(k) for k in _LEGACY_STORE_KEYS
+                if k in legacy}
+    if legacy and index is not None:
+        raise TypeError(
+            f"build(): both index=IndexSpec and loose builder params "
+            f"{sorted(legacy)} — put the params in the IndexSpec")
+    if store_kw and store is not None:
+        raise TypeError(
+            f"build(): both store=StoreSpec and loose store kwargs "
+            f"{sorted(store_kw)} — put them in the StoreSpec")
+    if store_kw or legacy:
+        _warn(
+            "build(spill_dir=/codec=/keep_resident=/replicas=/"
+            "**builder_params) is deprecated: pass "
+            "index=IndexSpec(method, params) and store=StoreSpec(...) "
+            "(docs/INGEST.md migration guide)", stacklevel=4)
+    if index is None:
+        index = IndexSpec(method=method, params=legacy)
+    if store is None:
+        store = StoreSpec(**store_kw)
+    return index, store.validate()
+
+
+def coerce_store_spec(store, *, method: Optional[str] = None,
+                      index: Optional[IndexSpec] = None
+                      ) -> Tuple[IndexSpec, StoreSpec]:
+    """Resolve ``open_spill``'s first argument: a StoreSpec (new), or
+    a bare spill-dir string (deprecated shim). ``method=`` (the old
+    kwarg) is deprecated in favor of ``index=IndexSpec(method=...)``.
+    """
+    if index is not None and method is not None:
+        raise TypeError("open_spill(): pass index=IndexSpec(...) OR "
+                        "the deprecated method=, not both")
+    if method is not None:
+        _warn("open_spill(method=...) is deprecated: pass "
+              "index=IndexSpec(method=...)", stacklevel=4)
+        index = IndexSpec(method=method)
+    if index is None:
+        index = IndexSpec()
+    if isinstance(store, StoreSpec):
+        if store.spill_dir is None:
+            raise ValueError("open_spill(StoreSpec): spill_dir is "
+                             "required")
+        return index, store.validate()
+    if isinstance(store, str):
+        _warn("open_spill(spill_dir_str) is deprecated: pass a "
+              "StoreSpec(spill_dir=...) (docs/INGEST.md migration "
+              "guide)", stacklevel=4)
+        return index, StoreSpec(spill_dir=store,
+                                keep_resident=False).validate()
+    raise TypeError(f"open_spill(): expected StoreSpec or str, got "
+                    f"{type(store).__name__}")
+
+
+def coerce_guarantee(g, kw: Dict[str, Any], *, caller: str):
+    """Resolve a search entry point's guarantee: ``g`` (a Guarantee,
+    new spelling) or loose ``delta=``/``epsilon=``/``nprobe=`` kwargs
+    popped from ``kw`` (deprecated shim). Mutates ``kw`` (pops the
+    loose keys) and returns the Guarantee."""
+    from .guarantees import Guarantee
+
+    loose = {key: kw.pop(key) for key in ("delta", "epsilon", "nprobe")
+             if key in kw}
+    if g is not None:
+        if loose:
+            raise TypeError(
+                f"{caller}(): both a Guarantee and loose "
+                f"{sorted(loose)} kwargs — pass only the Guarantee")
+        return g.validate()
+    if loose:
+        _warn(
+            f"{caller}(delta=/epsilon=/nprobe=) is deprecated: pass "
+            f"g=Guarantee(...) (core.guarantees constructors; "
+            "docs/INGEST.md migration guide)", stacklevel=4)
+        return Guarantee(
+            delta=loose.get("delta", 1.0),
+            epsilon=loose.get("epsilon", 0.0),
+            nprobe=loose.get("nprobe"),
+        ).validate()
+    return Guarantee()

@@ -56,9 +56,16 @@ from .admission import AdmissionController
 from .batching import (Request, bucket_of, guarantee_for_deadline,
                        retrieval_groups)
 
-__all__ = ["LANES", "Rejected", "ServeFront", "Ticket", "lane_of"]
+__all__ = ["LANES", "Rejected", "ServeFront", "Ticket", "WRITE_LANE",
+           "lane_of"]
 
 LANES = ("epsilon", "delta-epsilon", "ng")
+# the WRITE lane (docs/INGEST.md): mutations ride their own worker so
+# a burst of inserts never queues behind an expensive epsilon batch —
+# and vice versa. Writes are O(rows) memtable updates (store/delta.py),
+# not engine queries, so the lane needs no admission slot: admission
+# protects retrieval deadlines, which writes cannot miss.
+WRITE_LANE = "write"
 
 
 def lane_of(kind: str) -> str:
@@ -131,7 +138,8 @@ class ServeFront:
             lock = lock_recorder.wrap(lock, "serve.front._cond")
         self._cond = threading.Condition(lock)
         self._lanes: Dict[str, deque] = {
-            ln: deque() for ln in LANES}              # guarded_by: _cond
+            ln: deque()
+            for ln in LANES + (WRITE_LANE,)}          # guarded_by: _cond
         self._stopping = False                        # guarded_by: _cond
         self._drain_on_stop = True                    # guarded_by: _cond
         self._workers: List[threading.Thread] = []
@@ -140,7 +148,7 @@ class ServeFront:
     def start(self) -> "ServeFront":
         if self._workers:
             return self
-        for ln in LANES:
+        for ln in LANES + (WRITE_LANE,):
             t = threading.Thread(target=self._worker, args=(ln,),
                                  name=f"serve-lane-{ln}", daemon=True)
             self._workers.append(t)
@@ -182,6 +190,31 @@ class ServeFront:
             self._cond.notify_all()
         return ticket
 
+    def submit_write(self, op: str, rows=None, ids=None,
+                     uid: int = -1) -> Ticket:
+        """Enqueue one mutation on the write lane (docs/INGEST.md):
+        ``op='insert'`` with ``rows`` (optionally ``ids``), or
+        ``op='delete'`` with ``ids``. Returns a :class:`Ticket` whose
+        entry reports the assigned global ids and the ``applied_at``
+        stamp — the instant the rows became retrievable, which the
+        freshness metric (benchmarks/bench_serve_load.py) measures
+        against. Safe from any thread; writes skip admission (module
+        constant rationale)."""
+        if op not in ("insert", "delete"):
+            raise ValueError(f"op must be 'insert'|'delete', got {op!r}")
+        if op == "insert" and rows is None:
+            raise ValueError("insert needs rows")
+        if op == "delete" and ids is None:
+            raise ValueError("delete needs ids")
+        ticket = Ticket(uid)
+        with self._cond:
+            if self._stopping:
+                raise Rejected("stopped")
+            self._lanes[WRITE_LANE].append(
+                ((op, rows, ids, obs.now()), ticket))
+            self._cond.notify_all()
+        return ticket
+
     # -------------------------------------------------------- drain
     def _take(self, lane: str) -> Optional[List[Tuple[Request, Ticket]]]:
         """Block until this lane has work (or the front stops).
@@ -197,7 +230,8 @@ class ServeFront:
                 q.clear()
                 for _r, t in batch:
                     t._complete({"error": "stopped"})
-                self.admission.release(len(batch))
+                if lane != WRITE_LANE:  # writes hold no admission slot
+                    self.admission.release(len(batch))
                 return None
             batch = [q.popleft() for _ in range(min(len(q),
                                                     self.max_batch))]
@@ -211,7 +245,10 @@ class ServeFront:
             obs.REGISTRY.histogram(
                 "serve.lane.batch_size", lane=lane).record(len(batch))
             try:
-                self._process(batch)
+                if lane == WRITE_LANE:
+                    self._process_writes(batch)
+                else:
+                    self._process(batch)
             except Exception as e:  # noqa: BLE001 — a lane worker must outlive any single batch: complete its tickets with the error and keep serving
                 obs.REGISTRY.counter(
                     "serve.loop.errors", lane=lane).inc()
@@ -219,7 +256,33 @@ class ServeFront:
                     if not t.done():
                         t._complete({"error": repr(e)})
             finally:
-                self.admission.release(len(batch))
+                if lane != WRITE_LANE:  # writes hold no admission slot
+                    self.admission.release(len(batch))
+
+    def _process_writes(self, batch) -> None:
+        """Apply one drained write-lane batch in submission order:
+        ``engine.insert`` / ``engine.delete`` are O(rows) memtable
+        updates (store/delta.py), so the write lane stays cheap and
+        never holds a retrieval lane's resources. The completion entry
+        carries ``applied_at`` — from that instant the next query()
+        snapshot sees the mutation (freshness, docs/INGEST.md)."""
+        for (op, rows, ids, submitted), t in batch:
+            t0 = obs.now()
+            if op == "insert":
+                out_ids = np.asarray(self.engine.insert(rows, ids))
+                n = int(out_ids.shape[0])
+            else:
+                out_ids = np.asarray(ids, np.int64).reshape(-1)
+                self.engine.delete(out_ids)
+                n = int(out_ids.shape[0])
+            done = obs.now()
+            obs.REGISTRY.counter("serve.writes", op=op).inc(n)
+            t._complete({
+                "op": op, "ids": out_ids, "applied_at": done,
+                "queue_wait_ms": max((t0 - submitted) * 1e3, 0.0),
+                "latency_ms": max((done - submitted) * 1e3, 0.0),
+                "done_at": done,
+            })
 
     def _process(self, batch: List[Tuple[Request, Ticket]]) -> None:
         """Answer one drained lane batch: remap guarantees from the

@@ -53,14 +53,24 @@ workload instead of a hardware-neutral proxy. Design (one screen):
   bytes-read drops as the batch grows.
 
   Out-of-core serving (core/engine.DistributedEngine.query, PR 4).
-  Spill-built shards (``build(spill_dir=..., codec=...,
-  keep_resident=False)`` or ``DistributedEngine.open_spill``) are
-  served directly: a host-driven refinement loop per shard over warm
-  per-shard caches, merged across shards with ops.topk_merge_unique —
-  bit-exact to the HBM-resident shard_map path for lossless codecs.
-  The deadline-aware front (serve/batching.Scheduler.run_retrieval)
-  drives it per guarantee group; docs/ARCHITECTURE.md diagrams the
-  whole stack.
+  Spill-built shards (``build(store=StoreSpec(spill_dir=...,
+  codec=..., keep_resident=False))`` or
+  ``DistributedEngine.open_spill``) are served directly: a
+  host-driven refinement loop per shard over warm per-shard caches,
+  merged across shards with ops.topk_merge_unique — bit-exact to the
+  HBM-resident shard_map path for lossless codecs. The deadline-aware
+  front (serve/batching.Scheduler.run_retrieval) drives it per
+  guarantee group; docs/ARCHITECTURE.md diagrams the whole stack.
+
+  Mutable delta tier (delta.py, docs/INGEST.md).  An LSM-style
+  in-memory write buffer over the frozen stores: ``engine.insert`` /
+  ``engine.delete`` land in a locked memtable, queries snapshot it
+  and fold its brute-scored live rows (plus background-compacted
+  on-disk segments) into the frozen answer through
+  ops.topk_merge_unique — bit-exact against a from-scratch rebuild
+  holding the same live rows. Tombstones mask superseded frozen rows
+  inside refine_step; the delta guarantee is re-evaluated against the
+  joint live row count (core.guarantees.joint_n_total).
 
 Follow-ups tracked in ROADMAP "Open items": zstd-compressed leaves,
 NUMA-aware read scheduling, true multi-HOST spill (shards opened on
@@ -68,6 +78,8 @@ the host that owns them + a collective merge).
 """
 
 from .cache import DeviceLeafCache
+from .delta import (DeltaSnapshot, DeltaTier, FreezeBatch,
+                    search_snapshot)
 from .layout import (FORMAT_VERSION, LeafStore,
                      StoreFormatDeprecationWarning, load_index,
                      save_index)
@@ -76,8 +88,9 @@ from .ooc import (CachedStoreSource, OocResult, PQSource, make_source,
 from .prefetch import LeafPrefetcher
 
 __all__ = [
-    "CachedStoreSource", "DeviceLeafCache", "FORMAT_VERSION",
-    "LeafStore", "LeafPrefetcher", "OocResult", "PQSource",
+    "CachedStoreSource", "DeltaSnapshot", "DeltaTier",
+    "DeviceLeafCache", "FORMAT_VERSION", "FreezeBatch", "LeafStore",
+    "LeafPrefetcher", "OocResult", "PQSource",
     "StoreFormatDeprecationWarning", "load_index", "make_source",
-    "save_index", "search_ooc",
+    "save_index", "search_ooc", "search_snapshot",
 ]

@@ -1,0 +1,307 @@
+"""The mutable tier: an LSM-style in-memory delta over frozen stores.
+
+Everything below the engine is frozen-at-build (docs/ARCHITECTURE.md);
+production serving needs writes at serving time (ROADMAP.md). This
+module is the write-absorbing tier (docs/INGEST.md):
+
+  active      a dict memtable absorbing ``insert(rows)`` /
+              ``delete(ids)`` under one lock; reads never block on it
+              longer than a snapshot copy.
+  immutable   the memtable frozen by ``begin_freeze`` while background
+              compaction builds it into a leaf-contiguous segment
+              (codec-aware, through the ordinary ``save_index`` path —
+              the engine owns that step); still served from snapshots
+              until the segment is published.
+  kills       id -> kill-sequence map. BOTH ``delete(id)`` and
+              insert-of-an-existing-id record a kill at the current
+              global sequence: every older copy of the id — in the
+              frozen base shards (born at seq 0), in any compacted
+              segment (born at its freeze seq), or in the immutable
+              memtable (each row carries its insert seq) — is
+              superseded. A frozen unit's copy of ``id`` is dead iff
+              ``kills[id] > born_seq``; delete-then-reinsert needs no
+              special case (the reinsert's kill masks the old copies,
+              the new active row is newest by construction).
+
+Search-side contract: :func:`search_snapshot` brute-scores a
+snapshot's live rows with the SAME per-codec arithmetic as the frozen
+store of that codec (fused expanded-form L2 over the f32 or bfloat16
+image with image-space norms; the direct-difference form for pq, which
+is what the exact re-rank reports) and returns sqrt'd (dists, ids)
+shaped exactly like one more shard's answer — the engine folds it
+through ``ops.topk_merge_unique``, whose distinct-id precondition the
+kill rule guarantees (at most one live copy of any id across base +
+segments + snapshot). That is what makes frozen+delta answers
+bit-exact against a from-scratch rebuild holding the same live rows
+(tests/test_delta.py).
+
+Thread safety: every mutable field is guarded by ``_lock``; snapshots
+copy out under the lock and are immutable afterwards, so queries never
+hold the lock while scoring and compaction never blocks in-flight
+queries (it swaps published state under the same lock).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.kernels import ops
+
+
+class DeltaSnapshot(NamedTuple):
+    """A consistent point-in-time view for ONE query: the live delta
+    rows (active + still-live immutable), the kill map as of the same
+    instant (masks for the frozen units MUST come from the same state
+    the rows were read at, or a superseded base row and its
+    replacement could both vanish), and the published segment list.
+    Immutable after construction — scored without any lock."""
+    rows: np.ndarray          # [m, n] f32 live delta rows
+    ids: np.ndarray           # [m] int32
+    kills: Dict[int, int]     # id -> kill seq (copy)
+    kills_version: int        # monotone; keys per-unit dead-mask caches
+    segments: Tuple           # published engine segment handles
+    live_rows: int            # m
+
+    def dead_mask(self, unit_ids: np.ndarray, born_seq: int,
+                  pad_to: Optional[int] = None) -> np.ndarray:
+        """[len(unit_ids)] bool: which of a frozen unit's rows this
+        snapshot supersedes (kill seq newer than the unit's birth).
+        ``pad_to`` right-pads with False up to a store's padded row
+        count so ``ScoreCtx.dead[row_idx]`` can never index short."""
+        uids = np.asarray(unit_ids)
+        if not self.kills:
+            mask = np.zeros(uids.shape[0], bool)
+        else:
+            kid = np.fromiter(self.kills.keys(), np.int64,
+                              count=len(self.kills))
+            kseq = np.fromiter(self.kills.values(), np.int64,
+                               count=len(self.kills))
+            killed = kid[kseq > born_seq]
+            mask = np.isin(uids, killed) if killed.size \
+                else np.zeros(uids.shape[0], bool)
+        if pad_to is not None and pad_to > mask.shape[0]:
+            mask = np.pad(mask, (0, pad_to - mask.shape[0]))
+        return mask
+
+
+class FreezeBatch(NamedTuple):
+    """What ``begin_freeze`` hands the compactor: the immutable
+    memtable's live rows and the birth sequence the resulting segment
+    must carry. Deletes/reinserts that land DURING the build simply
+    have kill seqs > born_seq and mask the published segment's copies
+    — publishing stale rows is safe, never wrong."""
+    rows: np.ndarray   # [m, n] f32
+    ids: np.ndarray    # [m] int32
+    born_seq: int
+
+
+class DeltaTier:
+    """The engine's write buffer. All public methods are thread-safe;
+    ``insert``/``delete`` are O(rows) dict updates (no device work),
+    so the serve front's write lane stays cheap."""
+
+    def __init__(self, series_len: int, *, start_id: int = 0):
+        self.series_len = int(series_len)
+        self._lock = threading.RLock()
+        self._seq = 0             # guarded_by: _lock (global mutation seq)
+        self._active: Dict[int, tuple] = {}   # guarded_by: _lock id -> (row, seq)
+        self._immutable: Optional[Dict[int, tuple]] = None  # guarded_by: _lock
+        self._immutable_born = 0  # guarded_by: _lock
+        self._kills: Dict[int, int] = {}      # guarded_by: _lock
+        self._kills_version = 0   # guarded_by: _lock
+        self._segments: Tuple = ()            # guarded_by: _lock
+        self._next_id = int(start_id)         # guarded_by: _lock
+
+    # ------------------------------------------------------------ writes
+    def insert(self, rows, ids=None) -> np.ndarray:
+        """Absorb rows; returns their ids (auto-allocated past the
+        frozen id space when not supplied). Inserting an id that
+        already exists ANYWHERE records a kill at the new sequence —
+        the newest copy wins everywhere, older frozen copies are
+        masked, an older active copy is simply replaced."""
+        rows = np.ascontiguousarray(np.asarray(rows, np.float32))
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        if rows.shape[1] != self.series_len:
+            raise ValueError(
+                f"insert: rows have length {rows.shape[1]}, "
+                f"store serves length {self.series_len}")
+        with self._lock:
+            if ids is None:
+                ids = np.arange(self._next_id,
+                                self._next_id + rows.shape[0],
+                                dtype=np.int64)
+                self._next_id += rows.shape[0]
+            else:
+                ids = np.asarray(ids, np.int64).reshape(-1)
+                if ids.shape[0] != rows.shape[0]:
+                    raise ValueError("insert: len(ids) != len(rows)")
+                self._next_id = max(self._next_id, int(ids.max()) + 1)
+            killed = 0
+            for i, rid in enumerate(ids.tolist()):
+                self._seq += 1
+                # supersede any older copy of this id (frozen base,
+                # segment, immutable — a fresh id's kill masks nothing)
+                self._kills[rid] = self._seq
+                killed += 1
+                self._active[rid] = (rows[i], self._seq)
+            self._kills_version += killed
+        obs.REGISTRY.counter("delta.inserts").inc(rows.shape[0])
+        obs.REGISTRY.gauge("delta.live_rows").set(self.live_rows())
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids everywhere (base, segments, memtables).
+        Returns the number of ids processed; deleting an id that was
+        never inserted is a no-op kill (masks nothing)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        with self._lock:
+            for rid in ids.tolist():
+                self._seq += 1
+                self._kills[rid] = self._seq
+                self._active.pop(rid, None)
+            self._kills_version += ids.shape[0]
+        obs.REGISTRY.counter("delta.deletes").inc(ids.shape[0])
+        obs.REGISTRY.gauge("delta.live_rows").set(self.live_rows())
+        return int(ids.shape[0])
+
+    # ------------------------------------------------------------- reads
+    def _live_items(self):
+        """(id, row) pairs still live: all of active (newest by
+        construction) + immutable rows whose insert seq outruns any
+        kill. Takes the (reentrant) lock itself so callers already
+        holding it stay atomic and bare callers stay safe."""
+        with self._lock:
+            out = []
+            for rid, (row, seq) in self._active.items():
+                out.append((rid, row))
+            if self._immutable:
+                for rid, (row, seq) in self._immutable.items():
+                    if self._kills.get(rid, -1) <= seq:
+                        out.append((rid, row))
+            return out
+
+    def live_rows(self) -> int:
+        with self._lock:
+            return len(self._live_items())
+
+    def snapshot(self) -> DeltaSnapshot:
+        with self._lock:
+            items = self._live_items()
+            if items:
+                ids = np.asarray([rid for rid, _ in items], np.int64)
+                rows = np.stack([row for _, row in items])
+            else:
+                ids = np.zeros((0,), np.int64)
+                rows = np.zeros((0, self.series_len), np.float32)
+            return DeltaSnapshot(
+                rows=rows, ids=ids.astype(np.int32),
+                kills=dict(self._kills),
+                kills_version=self._kills_version,
+                segments=self._segments,
+                live_rows=int(ids.shape[0]))
+
+    # -------------------------------------------------------- compaction
+    def freeze_threshold_reached(self, max_rows: int) -> bool:
+        with self._lock:
+            return len(self._active) >= max_rows \
+                and self._immutable is None
+
+    def begin_freeze(self) -> Optional[FreezeBatch]:
+        """Swap the active memtable to immutable and hand its live
+        rows to the compactor. Returns None when there is nothing to
+        compact or a freeze is already in flight (one compaction at a
+        time)."""
+        with self._lock:
+            if self._immutable is not None or not self._active:
+                return None
+            self._immutable, self._active = self._active, {}
+            self._immutable_born = self._seq
+            live = [(rid, row) for rid, (row, seq)
+                    in self._immutable.items()
+                    if self._kills.get(rid, -1) <= seq]
+            if not live:
+                self._immutable = None
+                return None
+            ids = np.asarray([rid for rid, _ in live], np.int64)
+            rows = np.stack([row for _, row in live])
+            return FreezeBatch(rows=rows, ids=ids.astype(np.int32),
+                               born_seq=self._immutable_born)
+
+    def publish_segment(self, segment) -> None:
+        """Swap the built segment in for the immutable memtable —
+        one lock-held tuple append, so in-flight queries (their
+        snapshots are copies) and new queries (they see segment OR
+        immutable, never both, never neither) are both consistent."""
+        with self._lock:
+            self._segments = self._segments + (segment,)
+            self._immutable = None
+        obs.REGISTRY.counter("delta.compactions").inc()
+        obs.REGISTRY.gauge("delta.live_rows").set(self.live_rows())
+
+    def abort_freeze(self) -> None:
+        """Compaction failed: fold the immutable memtable back into
+        active (newest copy of an id wins) so no write is lost."""
+        with self._lock:
+            if self._immutable is None:
+                return
+            imm, self._immutable = self._immutable, None
+            for rid, (row, seq) in imm.items():
+                cur = self._active.get(rid)
+                if cur is None or cur[1] < seq:
+                    self._active[rid] = (row, seq)
+
+    @property
+    def kills_version(self) -> int:
+        with self._lock:
+            return self._kills_version
+
+    def segments(self) -> Tuple:
+        with self._lock:
+            return self._segments
+
+
+# ------------------------------------------------------------- scoring
+def search_snapshot(snap: DeltaSnapshot, queries, k: int,
+                    *, codec: str = "f32"):
+    """Brute-score a snapshot's live rows as one more "shard": sqrt'd
+    ([B, k] dists, [B, k] ids, -1 padded), ready for the engine's
+    ``ops.topk_merge_unique`` fold. Per-codec arithmetic mirrors the
+    frozen store of the same codec so frozen+delta equals a
+    from-scratch rebuild bit-for-bit:
+
+      f32    fused expanded-form L2 over f32 rows with f32 norms
+             (refine_step's solo-raw corner over a resident pool).
+      bf16   the same over the bfloat16 IMAGE of the rows, norms
+             computed over the image — exactly what save_index
+             persists and CachedStoreSource scores.
+      pq     the direct-difference form — pq answers are reported by
+             the exact re-rank (store/ooc._exact_rerank), which uses
+             the cancellation-free difference form, and delta rows are
+             trivially "exactly re-ranked".
+    """
+    b = queries.shape[0]
+    qf = jnp.asarray(queries, jnp.float32)
+    top_d = jnp.full((b, k), jnp.inf, jnp.float32)
+    top_i = jnp.full((b, k), -1, jnp.int32)
+    if snap.live_rows == 0:
+        return top_d, top_i
+    with obs.span("delta.search", lanes=b, rows=snap.live_rows):
+        cand = jnp.broadcast_to(
+            jnp.asarray(snap.ids, jnp.int32)[None, :],
+            (b, snap.live_rows))
+        if codec == "pq":
+            diff = jnp.asarray(snap.rows) - qf[:, None, :]
+            d = jnp.sum(diff * diff, axis=-1)
+        else:
+            rows = jnp.asarray(snap.rows)
+            if codec == "bf16":
+                rows = rows.astype(jnp.bfloat16)
+            d = ops.sq_l2(qf, rows, ops.row_sq_norms(rows))
+        top_d, top_i = ops.topk_merge(d, cand, top_d, top_i)
+    return jnp.sqrt(top_d), top_i

@@ -237,6 +237,7 @@ def _host_refine(
     src, queries: jax.Array, k: int, *, delta: float, epsilon: float,
     nprobe: Optional[int], visit_batch: int, share_gathers: bool,
     frontier: Optional[int], prefetch_depth: int, fault=None,
+    dead: Optional[jax.Array] = None, n_override: Optional[int] = None,
 ):
     """The host-driven refinement loop over a LeafSource — the same
     Algorithm 2 iteration search_impl runs under lax.while_loop,
@@ -255,7 +256,12 @@ def _host_refine(
     before every device scoring step, which is where injected faults
     fire and cooperative per-attempt deadlines are polled
     (docs/FAULT.md). ``fault=None`` (every non-chaos caller) adds no
-    work to the loop."""
+    work to the loop.
+
+    ``dead``/``n_override`` are the mutable-tier hooks
+    (docs/INGEST.md): a [npad] bool tombstone mask folded into
+    refine_step's validity, and the live joint row count substituted
+    into r_delta (same contract as core.search.search_impl)."""
     res = src.resident
     b, n = queries.shape
     L = res.num_leaves
@@ -264,6 +270,8 @@ def _host_refine(
     traced = obs.enabled()
 
     ctx = src.query_ctx(queries)
+    if dead is not None:
+        ctx = ctx._replace(dead=jnp.asarray(dead))
     with obs.span("ooc.filter", leaves=L, lanes=b):
         lb_sq = _filter_stage(res, queries)  # [B, L], stays on device
         if traced:  # make the span cover the device work it launched
@@ -284,7 +292,9 @@ def _host_refine(
     fr = refine.frontier_init(b, F)
 
     eps_mult = np.float32((1.0 + epsilon) ** 2)
-    rd = float(r_delta(res.hist, delta, res.n_total))
+    rd = float(r_delta(
+        res.hist, delta,
+        res.n_total if n_override is None else n_override))
     rd_sq = np.float32(rd) * np.float32(rd)
     max_rank = L if nprobe is None else min(nprobe, L)
 
@@ -455,10 +465,8 @@ def search_ooc(
     store: LeafStore,
     queries: jax.Array,  # [B, n]
     k: int,
+    g=None,
     *,
-    delta: float = 1.0,
-    epsilon: float = 0.0,
-    nprobe: Optional[int] = None,
     visit_batch: int = 1,
     cache: Optional[DeviceLeafCache] = None,
     cache_leaves: Optional[int] = None,
@@ -468,9 +476,17 @@ def search_ooc(
     frontier: Optional[int] = None,
     prefetch_depth: int = 1,
     fault=None,
+    dead: Optional[jax.Array] = None,
+    n_override: Optional[int] = None,
+    **legacy,
 ) -> OocResult:
     """k-NN over an on-disk index without device-resident raw data.
 
+    The guarantee is ONE object — ``g=Guarantee(...)`` (constructors
+    in core.guarantees); the historical loose ``delta=``/``epsilon=``/
+    ``nprobe=`` kwargs still work for one release via the
+    APIDeprecationWarning shim (core/spec.py — an error under
+    scripts/verify.sh).
     Pass ``cache`` to reuse (and warm) a cache across calls, or
     ``cache_leaves`` to size a fresh one; default is 1/8 of the leaves
     (clamped to at least one iteration's working set).
@@ -493,7 +509,17 @@ def search_ooc(
     loop (checked before every gather and score — docs/FAULT.md);
     injected faults and attempt deadlines propagate out of this call
     as exceptions for the engine's failover loop to catch.
+    ``dead``/``n_override`` thread the mutable tier's tombstone mask
+    and live joint row count into the host loop (docs/INGEST.md).
     """
+    from repro.core.spec import coerce_guarantee
+
+    g = coerce_guarantee(g, legacy, caller="search_ooc")
+    if legacy:
+        raise TypeError(
+            f"search_ooc() got unexpected keyword arguments "
+            f"{sorted(legacy)}")
+    delta, epsilon, nprobe = g.delta, g.epsilon, g.nprobe
     res = store.resident
     b, n = queries.shape
     L = res.num_leaves
@@ -538,7 +564,8 @@ def search_ooc(
                 src, queries, k, delta=delta, epsilon=epsilon,
                 nprobe=nprobe, visit_batch=v,
                 share_gathers=share_gathers, frontier=frontier,
-                prefetch_depth=depth, fault=fault)
+                prefetch_depth=depth, fault=fault, dead=dead,
+                n_override=n_override)
         finally:
             if own_prefetcher is not None:
                 own_prefetcher.close()

@@ -229,6 +229,43 @@ FIXTURES = {
                     return None
             """)},
     },
+    "guarantee-kwargs": {
+        # entry-point call with a loose guarantee kwarg fires; the
+        # near-miss is the internal unpacked layer (search_impl) and
+        # the typed spelling on a real entry point — both clean
+        "positive": {"repro/fx/gkw_pos.py": _fix("""
+            from repro.core import search as S
+
+            def lookup(idx, q, store):
+                a = S.search(idx, q, 5, epsilon=1.0)
+                b = S.search_ooc(store, q, 5, delta=0.99,
+                                 epsilon=0.5, cache_leaves=6)
+                return a, b
+
+            def served(engine, q):
+                return engine.query(q, 5, nprobe=16)
+            """)},
+        "negative": {"repro/fx/gkw_neg.py": _fix("""
+            from repro.core import guarantees as G
+            from repro.core import search as S
+            from repro.core.search import search_impl
+
+            def lookup(idx, q, store):
+                a = S.search(idx, q, 5, G.epsilon(1.0))
+                b = S.search_ooc(store, q, 5,
+                                 G.delta_epsilon(0.99, 0.5),
+                                 cache_leaves=6)
+                return a, b
+
+            def internal(idx, q):
+                # the unpacked layer legitimately takes the scalars
+                return search_impl(idx, q, 5, delta=0.99,
+                                   epsilon=1.0, nprobe=0)
+
+            def served(engine, q):
+                return engine.query(q, 5, G.ng(16))
+            """)},
+    },
     "engine-stats": {
         "positive": {"repro/fx/engstat_pos.py": _fix("""
             def degraded(engine, res):

@@ -1,0 +1,341 @@
+"""Mutation edge cases for the LSM-style delta tier (docs/INGEST.md).
+
+Everything here is held to the tentpole's acceptance bar: frozen+delta
+serving must be BIT-exact — ids AND distances — against a from-scratch
+rebuild of an engine holding the same live rows, across codecs and the
+guarantee taxonomy, before and after compaction. The rebuild oracle is
+an actual second DistributedEngine (not brute force: association order
+differs there), with its array-order ids remapped to global ids; live
+ids are kept ascending so the rebuild's (distance, id) tie-breaks match
+the mutated engine's.
+
+Covered corners, per the PR-10 issue:
+  * delete-then-reinsert of the same id (the kill-seq rule needs no
+    special case: the reinsert's kill masks every older copy),
+  * delete of a row currently sitting in a lane's top-k,
+  * compaction racing concurrent query() — lock-order recorder wraps
+    the engine/delta locks and asserts the observed graph is acyclic,
+  * empty-delta and all-deleted-leaf corners.
+"""
+
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import IndexSpec, StoreSpec
+from repro.core import guarantees as G
+from repro.core.engine import DistributedEngine
+from repro.store.delta import DeltaTier
+
+pytestmark = pytest.mark.tier1
+
+N, L, K = 256, 64, 5
+
+# the taxonomy every parity check runs under: exact, epsilon-approx,
+# delta-epsilon, and the ng (nprobe) regime. ng's contract is "visit
+# nprobe leaves of THIS tree", and the rebuild's tree shape
+# legitimately differs — so the parity runs ng at a saturating nprobe
+# (every leaf visited: the ng path executes, the answer is
+# tree-shape-free)
+TAXONOMY = (G.exact(), G.epsilon(1.0), G.delta_epsilon(0.99, 0.5),
+            G.ng(64))
+
+
+def _znorm(x):
+    return ((x - x.mean(1, keepdims=True))
+            / (x.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+
+
+def _dataset(seed=7, n=N):
+    rng = np.random.default_rng(seed)
+    base = _znorm(np.cumsum(rng.normal(size=(n, L)), axis=1))
+    q = _znorm(base[rng.choice(n, 6, replace=False)]
+               + 0.05 * rng.normal(size=(6, L)))
+    fresh = _znorm(np.cumsum(rng.normal(size=(16, L)), axis=1))
+    return base, q, fresh
+
+
+def _build(rows, spill, *, codec="f32", shards=2, **store_kw):
+    return DistributedEngine(mesh=None, shards=shards).build(
+        rows, index=IndexSpec("dstree", leaf_cap=32),
+        store=StoreSpec(spill_dir=spill, codec=codec,
+                        keep_resident=False, **store_kw))
+
+
+def _assert_parity(eng, live_rows, live_ids, queries, spill, tag,
+                   *, codec="f32", shards=2, guarantees=TAXONOMY,
+                   ooc_opts=None, ulp=0):
+    """eng's answers == a from-scratch rebuild's, bit for bit.
+
+    ``ulp=0`` demands bitwise-identical distances (the f32 legs).
+    bf16/pq legs pass a small ulp budget: both sides run the one
+    shared ``ops.sq_l2`` over identical row bytes, but XLA's matmul
+    reduction tiling is pool-shape-dependent and the rebuild's leaf
+    pools legitimately differ in width — a few float32 ulps is the
+    reduction-order floor, orders of magnitude below any actual
+    delta-scoring bug."""
+    assert np.all(np.diff(live_ids) > 0), "oracle needs ascending ids"
+    oracle = _build(live_rows, spill, codec=codec, shards=shards)
+    try:
+        for g in guarantees:
+            r = eng.query(jnp.asarray(queries), K, g,
+                          ooc_opts=ooc_opts)
+            o = oracle.query(jnp.asarray(queries), K, g,
+                             ooc_opts=ooc_opts)
+            oi = live_ids[np.asarray(o.ids)]
+            assert np.array_equal(np.asarray(r.ids), oi), \
+                f"{tag} [{g.kind}]: ids diverge from rebuild"
+            rd = np.asarray(r.dists)
+            od = np.asarray(o.dists)
+            tol = ulp * np.spacing(np.maximum(np.abs(rd),
+                                              np.abs(od)))
+            assert np.all(np.abs(rd - od) <= tol), \
+                f"{tag} [{g.kind}]: dists diverge from rebuild " \
+                f"(max {np.abs(rd - od).max()}, tol {ulp} ulp)"
+    finally:
+        oracle.close()
+
+
+# --------------------------------------------------- codec x taxonomy
+@pytest.mark.parametrize("codec", ["f32", "bf16", "pq"])
+def test_mutation_parity_across_codecs_and_taxonomy(tmp_path, codec):
+    """Insert + delete, parity across the taxonomy, then compact and
+    re-check: the published segment must not move a single bit. pq
+    runs single-shard (its codebooks need >= 256 rows) with a rerank
+    wide enough that the exact re-rank covers every candidate — pq
+    pruning depends on the trained codebooks, which legitimately
+    differ between the engine and the rebuild."""
+    shards = 1 if codec == "pq" else 2
+    opts = {"rerank": 64} if codec == "pq" else None
+    ulp = 0 if codec == "f32" else 4
+    # pq cannot honor exact (ADC-scored stopping may prune the true
+    # neighbor's leaf — the engine warns and serves epsilon/ng), and
+    # its epsilon-early-stop answer depends on the trained codebooks,
+    # which legitimately differ between the engine and the rebuild —
+    # so the pq leg runs the codebook-free regimes: delta-epsilon
+    # (histogram-quantile stop) and saturating ng
+    gs = TAXONOMY if codec != "pq" else (
+        G.delta_epsilon(0.99, 0.5), G.ng(64))
+    base, q, fresh = _dataset()
+    eng = _build(base, str(tmp_path / "sp"), codec=codec,
+                 shards=shards)
+    try:
+        new_ids = np.asarray(eng.insert(fresh))
+        eng.delete([3, 77, int(new_ids[2])])
+        live_rows = np.concatenate(
+            [np.delete(base, [3, 77], axis=0),
+             np.delete(fresh, [2], axis=0)])
+        live_ids = np.concatenate(
+            [np.delete(np.arange(N), [3, 77]),
+             np.delete(new_ids, [2])]).astype(np.int64)
+        _assert_parity(eng, live_rows, live_ids, q,
+                       str(tmp_path / "o1"), "pre-compact",
+                       codec=codec, shards=shards, ooc_opts=opts,
+                       ulp=ulp, guarantees=gs)
+        assert eng.compact()
+        _assert_parity(eng, live_rows, live_ids, q,
+                       str(tmp_path / "o2"), "post-compact",
+                       codec=codec, shards=shards, ooc_opts=opts,
+                       ulp=ulp, guarantees=gs)
+    finally:
+        eng.close()
+
+
+# ----------------------------------------------- delete-then-reinsert
+def test_delete_then_reinsert_same_id(tmp_path):
+    """The reinsert's kill masks the frozen copy; the new active row
+    is newest by construction — no special case, and parity holds with
+    the row REPLACED in the oracle (ids unchanged, still ascending)."""
+    base, q, fresh = _dataset()
+    rid = 42
+    eng = _build(base, str(tmp_path / "sp"))
+    try:
+        eng.delete([rid])
+        gone = eng.query(jnp.asarray(base[rid:rid + 1]), K, G.exact())
+        assert rid not in np.asarray(gone.ids)
+
+        replacement = fresh[0]
+        got = np.asarray(eng.insert(replacement, ids=[rid]))
+        assert got.tolist() == [rid]
+        hit = eng.query(jnp.asarray(replacement[None]), 1, G.exact())
+        assert int(np.asarray(hit.ids)[0, 0]) == rid
+        assert float(np.asarray(hit.dists)[0, 0]) == 0.0
+
+        live_rows = base.copy()
+        live_rows[rid] = replacement
+        live_ids = np.arange(N, dtype=np.int64)
+        _assert_parity(eng, live_rows, live_ids, q,
+                       str(tmp_path / "o1"), "reinserted")
+        # and the OLD bytes must stay dead after the memtable freezes
+        assert eng.compact()
+        _assert_parity(eng, live_rows, live_ids, q,
+                       str(tmp_path / "o2"), "reinserted+compacted")
+    finally:
+        eng.close()
+
+
+# ------------------------------------------- delete out of a top-k
+def test_delete_of_row_in_running_topk(tmp_path):
+    """Tombstoning every lane's rank-1 id between queries: the next
+    query must not surface any of them, and the refilled top-k is
+    bit-exact vs a rebuild without those rows."""
+    base, q, _ = _dataset()
+    eng = _build(base, str(tmp_path / "sp"))
+    try:
+        first = eng.query(jnp.asarray(q), K, G.exact())
+        victims = sorted(set(np.asarray(first.ids)[:, 0].tolist()))
+        eng.delete(victims)
+        second = eng.query(jnp.asarray(q), K, G.exact())
+        assert not np.isin(np.asarray(second.ids), victims).any()
+        keep = ~np.isin(np.arange(N), victims)
+        _assert_parity(eng, base[keep],
+                       np.arange(N, dtype=np.int64)[keep], q,
+                       str(tmp_path / "o"), "topk-delete")
+    finally:
+        eng.close()
+
+
+# ------------------------------------- compaction vs concurrent query
+def test_compaction_racing_concurrent_query(tmp_path):
+    """Writer thread streams inserts past the auto-compact threshold
+    while reader threads keep query() in flight: every in-race answer
+    is well-formed, at least one background compaction lands, the
+    lock-order recorder's observed graph is acyclic, and the final
+    state is bit-exact vs a rebuild."""
+    base, q, _ = _dataset()
+    rng = np.random.default_rng(13)
+    stream = _znorm(np.cumsum(rng.normal(size=(96, L)), axis=1))
+    eng = _build(base, str(tmp_path / "sp"), delta_max_rows=16,
+                 auto_compact=True, compact_interval_s=0.005)
+    rec = obs.LockOrderRecorder()
+    eng._write_lock = rec.wrap(eng._write_lock, "engine._write_lock")
+    eng.enable_writes()
+    eng._delta._lock = rec.wrap(eng._delta._lock, "delta._lock")
+    errors = []
+    qj = jnp.asarray(q)
+
+    def reader():
+        try:
+            for _ in range(8):
+                res = eng.query(qj, K, G.exact())
+                ids = np.asarray(res.ids)
+                assert ids.shape == (len(q), K)
+                assert (ids >= 0).all(), "padding surfaced mid-race"
+        except BaseException as e:  # noqa: BLE001 re-raised on the main thread below: a bare thread swallows its exception and the test would pass vacuously
+            errors.append(e)
+
+    def writer():
+        try:
+            for i in range(0, len(stream), 8):
+                eng.insert(stream[i:i + 8])
+        except BaseException as e:  # noqa: BLE001 same re-raise trampoline as reader
+            errors.append(e)
+
+    threads = [threading.Thread(target=f)
+               for f in (writer, reader, reader)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    assert not errors, errors
+    # drain: one manual compact() mops up whatever the daemon's last
+    # tick left in the memtable, then the graph + parity checks
+    eng.compact()
+    rec.assert_acyclic()
+    assert len(eng._delta.segments()) >= 1
+    live_rows = np.concatenate([base, stream])
+    live_ids = np.arange(N + len(stream), dtype=np.int64)
+    # 96 streamed rows reshape the rebuild's tree substantially, so
+    # the epsilon-early-stop regimes legitimately answer differently
+    # (each satisfies its bound on its OWN tree) — the post-race
+    # parity runs the tree-shape-free regimes
+    _assert_parity(eng, live_rows, live_ids, q, str(tmp_path / "o"),
+                   "post-race", ulp=4,
+                   guarantees=(G.exact(), G.ng(64)))
+    eng.close()
+
+
+# --------------------------------------------------------- the corners
+def test_empty_delta_is_invisible(tmp_path):
+    """Arming the write path without writing must not perturb serving:
+    same answers bit for bit, compact() is a no-op."""
+    base, q, _ = _dataset()
+    eng = _build(base, str(tmp_path / "sp"))
+    try:
+        before = eng.query(jnp.asarray(q), K, G.exact())
+        eng.enable_writes()
+        assert eng.compact() is False
+        after = eng.query(jnp.asarray(q), K, G.exact())
+        assert np.array_equal(np.asarray(before.ids),
+                              np.asarray(after.ids))
+        assert np.array_equal(np.asarray(before.dists),
+                              np.asarray(after.dists))
+    finally:
+        eng.close()
+
+
+def test_insert_then_delete_all_never_freezes(tmp_path):
+    """A memtable whose every row is already killed has nothing to
+    compact (begin_freeze folds to None) and serves exactly the frozen
+    base."""
+    base, q, fresh = _dataset()
+    eng = _build(base, str(tmp_path / "sp"))
+    try:
+        ids = np.asarray(eng.insert(fresh))
+        eng.delete(ids)
+        assert eng.compact() is False
+        _assert_parity(eng, base, np.arange(N, dtype=np.int64), q,
+                       str(tmp_path / "o"), "all-deleted-delta")
+    finally:
+        eng.close()
+
+
+def test_all_deleted_leaf(tmp_path):
+    """Tombstone an entire leaf's worth of contiguous ids: the dead
+    leaf must contribute nothing (no padding ids, no dead ids) and the
+    rest of the answer is bit-exact vs a rebuild without those rows."""
+    base, q, _ = _dataset()
+    dead = np.arange(32)  # leaf_cap ids off the front of shard 0
+    eng = _build(base, str(tmp_path / "sp"))
+    try:
+        eng.delete(dead)
+        res = eng.query(jnp.asarray(q), K, G.exact())
+        ids = np.asarray(res.ids)
+        assert (ids >= 0).all()
+        assert not np.isin(ids, dead).any()
+        keep = ~np.isin(np.arange(N), dead)
+        _assert_parity(eng, base[keep],
+                       np.arange(N, dtype=np.int64)[keep], q,
+                       str(tmp_path / "o"), "dead-leaf", ulp=4)
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------- DeltaTier unit law
+def test_kill_seq_rule_on_the_tier_itself():
+    """The tier-level invariant the engine builds on: at most one live
+    copy of any id across active + immutable, and a unit's copy is
+    dead iff some kill outruns its birth."""
+    tier = DeltaTier(4, start_id=100)
+    ids = tier.insert(np.zeros((2, 4), np.float32))
+    assert ids.tolist() == [100, 101]
+    tier.delete([100])
+    snap = tier.snapshot()
+    assert snap.ids.tolist() == [101]
+    # frozen copy born at seq 0 is masked; one born AFTER the kill
+    # (e.g. a compacted segment) is not
+    mask_old = snap.dead_mask(np.asarray([100]), born_seq=0)
+    mask_new = snap.dead_mask(np.asarray([100]),
+                              born_seq=snap.kills[100])
+    assert mask_old.tolist() == [True]
+    assert mask_new.tolist() == [False]
+    # reinsert: the id is live again, the old frozen copy stays dead
+    tier.insert(np.ones((1, 4), np.float32), ids=[100])
+    snap = tier.snapshot()
+    assert sorted(snap.ids.tolist()) == [100, 101]
+    assert snap.dead_mask(np.asarray([100]),
+                          born_seq=0).tolist() == [True]

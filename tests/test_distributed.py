@@ -38,6 +38,7 @@ def test_engine_matches_brute_force_across_shards():
         from repro.core import search as S
         from repro.core.engine import DistributedEngine
         from repro.core.guarantees import Guarantee
+        from repro.core import IndexSpec, StoreSpec
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(0)
         data = np.cumsum(rng.normal(size=(2048, 64)), axis=1)
@@ -47,7 +48,7 @@ def test_engine_matches_brute_force_across_shards():
                         + 0.05 * rng.normal(size=(4, 64)).astype(np.float32))
         bf = S.brute_force(Q, jnp.asarray(data), 5)
         eng = DistributedEngine(mesh, axes=("data",), method="dstree")
-        eng.build(data, leaf_cap=32)
+        eng.build(data, index=IndexSpec("dstree", leaf_cap=32))
         res = eng.query(Q, 5, Guarantee())
         ids_ok = bool((jnp.sort(res.ids, 1) == jnp.sort(bf.ids, 1)).all())
         d_ok = bool(jnp.allclose(res.dists, bf.dists, rtol=1e-2, atol=1e-2))
@@ -66,6 +67,7 @@ def test_engine_spilled_shards_parity_multishard():
         import tempfile, numpy as np, jax, jax.numpy as jnp
         from repro.core.engine import DistributedEngine
         from repro.core.guarantees import Guarantee
+        from repro.core import IndexSpec, StoreSpec
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(0)
         data = np.cumsum(rng.normal(size=(2048, 64)), axis=1)
@@ -76,7 +78,8 @@ def test_engine_spilled_shards_parity_multishard():
         ok = True
         with tempfile.TemporaryDirectory() as tmp:
             eng = DistributedEngine(mesh, axes=("data",), method="dstree")
-            eng.build(data, leaf_cap=32, spill_dir=tmp, codec="f32")
+            eng.build(data, index=IndexSpec("dstree", leaf_cap=32),
+                      store=StoreSpec(spill_dir=tmp, codec="f32"))
             assert len(eng.shard_dirs) == 4
             for g in (Guarantee(), Guarantee(epsilon=1.0),
                       Guarantee(delta=0.99, epsilon=0.5),
@@ -85,7 +88,8 @@ def test_engine_spilled_shards_parity_multishard():
                 ooc = eng.query(Q, 5, g, ooc=True)
                 ok &= bool((res.ids == ooc.ids).all())
                 ok &= bool((res.dists == ooc.dists).all())
-            opened = DistributedEngine.open_spill(tmp)
+            opened = DistributedEngine.open_spill(
+                StoreSpec(spill_dir=tmp, keep_resident=False))
             o = opened.query(Q, 5, Guarantee(epsilon=1.0))
             r = eng.query(Q, 5, Guarantee(epsilon=1.0))
             ok &= bool((o.ids == r.ids).all())
@@ -101,6 +105,7 @@ def test_multipod_engine_axes():
         from repro.core import search as S
         from repro.core.engine import DistributedEngine
         from repro.core.guarantees import Guarantee
+        from repro.core import IndexSpec
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         rng = np.random.default_rng(0)
         data = rng.normal(size=(1024, 64)).astype(np.float32)
@@ -108,7 +113,7 @@ def test_multipod_engine_axes():
         bf = S.brute_force(Q, jnp.asarray(data), 4)
         eng = DistributedEngine(mesh, axes=("pod", "data"),
                                 method="isax2+")
-        eng.build(data, leaf_cap=32)
+        eng.build(data, index=IndexSpec("isax2+", leaf_cap=32))
         res = eng.query(Q, 4, Guarantee())
         print("RESULT",
               bool((jnp.sort(res.ids,1) == jnp.sort(bf.ids,1)).all()))

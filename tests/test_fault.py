@@ -31,6 +31,7 @@ import pytest
 
 from repro import obs
 from repro.core import search as S
+from repro.core import IndexSpec, StoreSpec
 from repro.core.engine import DistributedEngine
 from repro.core.guarantees import Guarantee, effective_delta_after_loss
 from repro.fault import FaultInjected, FaultInjector
@@ -63,15 +64,17 @@ def spill(tmp_path_factory, corpus):
     data, _ = corpus
     tmp = str(tmp_path_factory.mktemp("fault_spill"))
     eng = DistributedEngine(mesh=None, method="dstree", shards=SHARDS)
-    eng.build(data, leaf_cap=16, spill_dir=tmp, codec="f32",
-              keep_resident=False, replicas=2)
+    eng.build(data, index=IndexSpec("dstree", leaf_cap=16),
+              store=StoreSpec(spill_dir=tmp, codec="f32",
+                              keep_resident=False, replicas=2))
     eng.close()
     return tmp
 
 
 @pytest.fixture()
 def engine(spill):
-    eng = DistributedEngine.open_spill(spill)
+    eng = DistributedEngine.open_spill(
+        StoreSpec(spill_dir=spill, keep_resident=False))
     yield eng
     eng.close()
 
@@ -408,7 +411,8 @@ def test_close_idempotent_and_rebuild_bit_exact(corpus, spill, engine):
     engine.close()  # idempotent
     again = engine.query(jnp.asarray(queries), K, Guarantee())
     assert np.array_equal(np.asarray(first.ids), np.asarray(again.ids))
-    fresh = DistributedEngine.open_spill(spill)
+    fresh = DistributedEngine.open_spill(
+        StoreSpec(spill_dir=spill, keep_resident=False))
     try:
         re = fresh.query(jnp.asarray(queries), K, Guarantee())
         assert np.array_equal(np.asarray(first.ids),

@@ -3,6 +3,7 @@
 import jax.numpy as jnp
 import pytest
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import graph, imi, srs
 from repro.core.metrics import workload_metrics
@@ -20,8 +21,8 @@ def bf(walk_data, walk_queries):
 
 def test_imi_recall_improves_with_nprobe(walk_data, walk_queries, bf):
     idx = imi.build(walk_data, kc=8, m=16, kmeans_iters=10)
-    r1 = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=1)
-    r2 = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=32)
+    r1 = imi.query(idx, jnp.asarray(walk_queries), K, G.ng(1))
+    r2 = imi.query(idx, jnp.asarray(walk_queries), K, G.ng(32))
     m1 = workload_metrics(r1.ids, r1.dists, bf.ids, bf.dists)
     m2 = workload_metrics(r2.ids, r2.dists, bf.ids, bf.dists)
     assert m2["avg_recall"] >= m1["avg_recall"]
@@ -32,8 +33,8 @@ def test_imi_refine_closes_the_map_gap(walk_data, walk_queries, bf):
     """Paper finding C4: ADC-only IMI has MAP below its recall; raw
     re-ranking recovers it."""
     idx = imi.build(walk_data, kc=8, m=16, kmeans_iters=10)
-    plain = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=64)
-    ref = imi.query(idx, jnp.asarray(walk_queries), K, nprobe=64,
+    plain = imi.query(idx, jnp.asarray(walk_queries), K, G.ng(64))
+    ref = imi.query(idx, jnp.asarray(walk_queries), K, G.ng(64),
                     refine=True)
     mp = workload_metrics(plain.ids, plain.dists, bf.ids, bf.dists)
     mr = workload_metrics(ref.ids, ref.dists, bf.ids, bf.dists)
@@ -62,10 +63,10 @@ def test_graph_is_ng_only_interface(walk_data):
 
 def test_srs_delta_controls_scan_depth(walk_data, walk_queries, bf):
     idx = srs.build(walk_data, m=16)
-    loose = srs.query(idx, jnp.asarray(walk_queries), K, delta=0.5,
-                      epsilon=1.0)
-    tight = srs.query(idx, jnp.asarray(walk_queries), K, delta=0.99,
-                      epsilon=0.0)
+    loose = srs.query(idx, jnp.asarray(walk_queries), K,
+                      G.delta_epsilon(0.5, 1.0))
+    tight = srs.query(idx, jnp.asarray(walk_queries), K,
+                      G.delta_epsilon(0.99, 0.0))
     assert int(loose.rows_scanned.sum()) <= int(tight.rows_scanned.sum())
     m = workload_metrics(tight.ids, tight.dists, bf.ids, bf.dists)
     assert m["avg_recall"] > 0.8

@@ -16,6 +16,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro import obs
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.index import FrozenIndex
 from repro.core.indexes import dstree
@@ -228,7 +229,7 @@ def test_span_attrs_match_stats_on_real_query(walk_data, walk_queries,
     ix = dstree.build(walk_data, leaf_cap=32)
     store = FrozenIndex.load(ix.save(str(tmp_path / "idx")),
                              resident="summaries")
-    out = S.search_ooc(store, walk_queries, 5, epsilon=1.0,
+    out = S.search_ooc(store, walk_queries, 5, G.epsilon(1.0),
                        cache_leaves=6)
     st_ = out.stats
     prof = obs.last_profile("ooc.query")
@@ -254,11 +255,11 @@ def test_tracing_does_not_change_answers(walk_data, walk_queries,
     ix = dstree.build(walk_data, leaf_cap=32)
     store = FrozenIndex.load(ix.save(str(tmp_path / "idx")),
                              resident="summaries")
-    plain = S.search_ooc(store, walk_queries, 5, epsilon=1.0,
+    plain = S.search_ooc(store, walk_queries, 5, G.epsilon(1.0),
                          cache_leaves=6)
     obs.enable()
     try:
-        traced = S.search_ooc(store, walk_queries, 5, epsilon=1.0,
+        traced = S.search_ooc(store, walk_queries, 5, G.epsilon(1.0),
                               cache_leaves=6)
     finally:
         obs.disable()

@@ -24,6 +24,7 @@ import pytest
 
 from repro.core import refine
 from repro.core import search as S
+from repro.core import IndexSpec, StoreSpec
 from repro.core.engine import DistributedEngine
 from repro.core.guarantees import Guarantee
 from repro.core.index import FrozenIndex
@@ -369,8 +370,9 @@ def test_engine_spilled_shard_serving_parity(codec, walk_data,
     mesh = jax.make_mesh((1,), ("data",))
     eng = DistributedEngine(mesh, method="dstree")
     kw = {"data_dtype": jnp.bfloat16} if codec == "bf16" else {}
-    eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
-              codec=codec, **kw)
+    eng.build(walk_data,
+              index=IndexSpec("dstree", leaf_cap=32, **kw),
+              store=StoreSpec(spill_dir=str(tmp_path), codec=codec))
     k = 5
     guarantees = [Guarantee(epsilon=1.0),
                   Guarantee(delta=0.99, epsilon=0.5),
@@ -409,11 +411,15 @@ def test_engine_open_spill_serves_without_resident(walk_data,
     across queries."""
     mesh = jax.make_mesh((1,), ("data",))
     built_eng = DistributedEngine(mesh, method="dstree")
-    built_eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
-                    codec="bf16", data_dtype=jnp.bfloat16)
+    built_eng.build(
+        walk_data,
+        index=IndexSpec("dstree", leaf_cap=32,
+                        data_dtype=jnp.bfloat16),
+        store=StoreSpec(spill_dir=str(tmp_path), codec="bf16"))
     ref = built_eng.query(queries_mod, 5, Guarantee(epsilon=1.0))
 
-    eng = DistributedEngine.open_spill(str(tmp_path))
+    eng = DistributedEngine.open_spill(
+        StoreSpec(spill_dir=str(tmp_path), keep_resident=False))
     assert eng.mesh is None and eng.stacked is None
     opts = {"cache_leaves": 10_000}  # hold every leaf: pure warm reuse
     got = eng.query(queries_mod, 5, Guarantee(epsilon=1.0),
@@ -438,8 +444,9 @@ def test_engine_ooc_cache_grows_with_batch(walk_data, tmp_path):
     persists with the cache across queries."""
     mesh = jax.make_mesh((1,), ("data",))
     eng = DistributedEngine(mesh, method="dstree")
-    eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
-              keep_resident=False)
+    eng.build(walk_data, index=IndexSpec("dstree", leaf_cap=32),
+              store=StoreSpec(spill_dir=str(tmp_path),
+                              keep_resident=False))
     small = jnp.asarray(walk_data[:1])
     big = jnp.asarray(walk_data[:16] + 0.01)
     eng.query(small, 5, Guarantee(epsilon=1.0),
@@ -468,13 +475,15 @@ def test_engine_build_keep_resident_false(walk_data, queries_mod,
                                           tmp_path):
     mesh = jax.make_mesh((1,), ("data",))
     eng = DistributedEngine(mesh, method="dstree")
-    eng.build(walk_data, leaf_cap=32, spill_dir=str(tmp_path),
-              keep_resident=False)
+    eng.build(walk_data, index=IndexSpec("dstree", leaf_cap=32),
+              store=StoreSpec(spill_dir=str(tmp_path),
+                              keep_resident=False))
     assert eng.stacked is None and eng.shard_dirs
     bf = S.brute_force(queries_mod, jnp.asarray(walk_data), 5)
     res = eng.query(queries_mod, 5, Guarantee())  # auto-OOC
     np.testing.assert_array_equal(np.asarray(res.ids),
                                   np.asarray(bf.ids))
     with pytest.raises(ValueError):
-        DistributedEngine(mesh).build(walk_data, leaf_cap=32,
-                                      keep_resident=False)
+        DistributedEngine(mesh).build(
+            walk_data, index=IndexSpec("dstree", leaf_cap=32),
+            store=StoreSpec(keep_resident=False))

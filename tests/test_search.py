@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.guarantees import Guarantee, delta_epsilon, epsilon, exact, ng
 from repro.core.indexes import dstree, isax, vafile
@@ -46,7 +47,7 @@ def test_exact_matches_brute_force(built, walk_queries, bf):
 def test_epsilon_guarantee_holds(built, walk_queries, bf, eps):
     """Deterministic (1+eps) bound vs exact distances — Definition 5."""
     name, idx, vb = built
-    res = S.search(idx, jnp.asarray(walk_queries), K, epsilon=eps,
+    res = S.search(idx, jnp.asarray(walk_queries), K, G.epsilon(eps),
                    visit_batch=vb)
     assert bool((res.dists <= (1 + eps) * bf.dists * (1 + 1e-4)
                  + 1e-4).all())
@@ -55,7 +56,7 @@ def test_epsilon_guarantee_holds(built, walk_queries, bf, eps):
 def test_epsilon_prunes_more_than_exact(built, walk_queries):
     name, idx, vb = built
     ex = S.search(idx, jnp.asarray(walk_queries), K, visit_batch=vb)
-    ap = S.search(idx, jnp.asarray(walk_queries), K, epsilon=2.0,
+    ap = S.search(idx, jnp.asarray(walk_queries), K, G.epsilon(2.0),
                   visit_batch=vb)
     assert int(ap.leaves_visited.sum()) <= int(ex.leaves_visited.sum())
     assert int(ap.rows_scanned.sum()) <= int(ex.rows_scanned.sum())
@@ -64,30 +65,30 @@ def test_epsilon_prunes_more_than_exact(built, walk_queries):
 def test_delta_one_equals_epsilon_path(built, walk_queries):
     """delta=1 must reduce delta-epsilon to plain epsilon (taxonomy)."""
     name, idx, vb = built
-    a = S.search(idx, jnp.asarray(walk_queries), K, epsilon=0.5,
+    a = S.search(idx, jnp.asarray(walk_queries), K, G.epsilon(0.5),
                  visit_batch=vb)
-    b = S.search(idx, jnp.asarray(walk_queries), K, delta=1.0,
-                 epsilon=0.5, visit_batch=vb)
+    b = S.search(idx, jnp.asarray(walk_queries), K,
+                 G.delta_epsilon(1.0, 0.5), visit_batch=vb)
     np.testing.assert_array_equal(a.ids, b.ids)
     np.testing.assert_allclose(a.dists, b.dists, atol=0)
 
 
 def test_delta_epsilon_is_at_least_as_fast(built, walk_queries):
     name, idx, vb = built
-    e = S.search(idx, jnp.asarray(walk_queries), K, epsilon=0.5,
+    e = S.search(idx, jnp.asarray(walk_queries), K, G.epsilon(0.5),
                  visit_batch=vb)
-    de = S.search(idx, jnp.asarray(walk_queries), K, delta=0.9,
-                  epsilon=0.5, visit_batch=vb)
+    de = S.search(idx, jnp.asarray(walk_queries), K,
+                  G.delta_epsilon(0.9, 0.5), visit_batch=vb)
     assert int(de.leaves_visited.sum()) <= int(e.leaves_visited.sum())
 
 
 def test_ng_respects_nprobe(built, walk_queries):
     name, idx, vb = built
-    res = S.search(idx, jnp.asarray(walk_queries), K, nprobe=3,
+    res = S.search(idx, jnp.asarray(walk_queries), K, G.ng(3),
                    visit_batch=vb)
     # batched visits may overshoot by < visit_batch, never more
     assert int(res.leaves_visited.max()) <= 3
-    res2 = S.search(idx, jnp.asarray(walk_queries), K, nprobe=1,
+    res2 = S.search(idx, jnp.asarray(walk_queries), K, G.ng(1),
                     visit_batch=vb)
     assert int(res2.leaves_visited.max()) <= 1
     # first-leaf bsf is a valid answer; a 1-series leaf (VA+file) fills
@@ -106,7 +107,7 @@ def test_counters_monotone_in_accuracy(built, walk_queries):
     probes = [1, 4, 16]
     leaves = []
     for p in probes:
-        r = S.search(idx, jnp.asarray(walk_queries), K, nprobe=p,
+        r = S.search(idx, jnp.asarray(walk_queries), K, G.ng(p),
                      visit_batch=vb)
         leaves.append(int(r.leaves_visited.sum()))
     assert leaves == sorted(leaves)

@@ -29,6 +29,7 @@ import pytest
 
 from repro import obs
 from repro.core import search as S
+from repro.core import IndexSpec, StoreSpec
 from repro.core.engine import DistributedEngine, QueryResult
 from repro.core.guarantees import Guarantee
 from repro.serve.admission import AdmissionController, degrade_tier
@@ -331,8 +332,9 @@ def spilled_engine(tmp_path_factory, corpus):
     data, _ = corpus
     tmp = str(tmp_path_factory.mktemp("serve_loop_spill"))
     eng = DistributedEngine(mesh=None, method="dstree", shards=SHARDS)
-    eng.build(data, leaf_cap=16, spill_dir=tmp, codec="f32",
-              keep_resident=False)
+    eng.build(data, index=IndexSpec("dstree", leaf_cap=16),
+              store=StoreSpec(spill_dir=tmp, codec="f32",
+                              keep_resident=False))
     yield eng
     eng.close()
 
@@ -390,8 +392,9 @@ def test_front_stress_bit_exact_no_drops_lockorder(corpus,
     data, queries = corpus
     tmp = str(tmp_path_factory.mktemp("stress_spill"))
     eng = DistributedEngine(mesh=None, method="dstree", shards=SHARDS)
-    eng.build(data, leaf_cap=16, spill_dir=tmp, codec="f32",
-              keep_resident=False)
+    eng.build(data, index=IndexSpec("dstree", leaf_cap=16),
+              store=StoreSpec(spill_dir=tmp, codec="f32",
+                              keep_resident=False))
     rec = obs.LockOrderRecorder()
     try:
         # no-deadline requests only: every answer is the exact tier,

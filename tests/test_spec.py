@@ -1,0 +1,145 @@
+"""The typed build/query surface (core/spec.py): spec semantics, the
+one-release deprecation shims, and the mixing errors.
+
+The shims are load-bearing API: external callers on the old kwarg
+spellings must get the SAME behavior plus an APIDeprecationWarning
+(an error under scripts/verify.sh, so in-repo callers can't regress),
+and a caller mixing the two spellings must get a TypeError, not a
+silent precedence guess.
+"""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IndexSpec, StoreSpec
+from repro.core import guarantees as G
+from repro.core import search as S
+from repro.core.engine import DistributedEngine
+from repro.core.indexes import dstree
+from repro.core.spec import APIDeprecationWarning
+
+pytestmark = pytest.mark.tier1
+
+
+def _data(n=128, length=32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.normal(size=(n, length)), axis=1)
+    return ((x - x.mean(1, keepdims=True))
+            / (x.std(1, keepdims=True) + 1e-9)).astype(np.float32)
+
+
+# ----------------------------------------------------------- the specs
+def test_index_spec_is_frozen_hashable_and_merges_params():
+    a = IndexSpec("dstree", {"leaf_cap": 32}, paa_segments=8)
+    assert a.build_params == {"leaf_cap": 32, "paa_segments": 8}
+    # sorted-item-tuple storage: kwarg order can't change identity
+    b = IndexSpec("dstree", paa_segments=8, leaf_cap=32)
+    assert a == b and hash(a) == hash(b)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.method = "isax2+"
+
+
+@pytest.mark.parametrize("bad, msg", [
+    (dict(replicas=0), "replicas"),
+    (dict(replicas=2), "spill_dir"),          # replicas w/o spill
+    (dict(keep_resident=False), "spill_dir"),  # ooc w/o spill
+    (dict(spill_dir="/tmp/x", delta_max_rows=0), "delta_max_rows"),
+])
+def test_store_spec_validate_rejects(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        StoreSpec(**bad).validate()
+
+
+def test_store_spec_validate_accepts_defaults():
+    assert StoreSpec().validate() == StoreSpec()
+
+
+# ------------------------------------------------- build()/open_spill
+def test_legacy_build_kwargs_warn_and_match_spec_build(tmp_path):
+    data = _data()
+    with pytest.warns(APIDeprecationWarning, match="IndexSpec"):
+        old = DistributedEngine(mesh=None, shards=2).build(
+            data, leaf_cap=16, spill_dir=str(tmp_path / "a"),
+            codec="f32", keep_resident=False)
+    new = DistributedEngine(mesh=None, shards=2).build(
+        data, index=IndexSpec("dstree", leaf_cap=16),
+        store=StoreSpec(spill_dir=str(tmp_path / "b"), codec="f32",
+                        keep_resident=False))
+    q = jnp.asarray(data[:4])
+    ro, rn = old.query(q, 5, G.exact()), new.query(q, 5, G.exact())
+    assert np.array_equal(np.asarray(ro.ids), np.asarray(rn.ids))
+    assert np.array_equal(np.asarray(ro.dists), np.asarray(rn.dists))
+    old.close()
+    new.close()
+
+
+def test_build_mixing_spec_and_loose_is_a_type_error(tmp_path):
+    data = _data()
+    eng = DistributedEngine(mesh=None, shards=2)
+    with pytest.raises(TypeError, match="IndexSpec"):
+        eng.build(data, index=IndexSpec("dstree"), leaf_cap=16)
+    with pytest.raises(TypeError, match="StoreSpec"):
+        eng.build(data, store=StoreSpec(spill_dir=str(tmp_path)),
+                  spill_dir=str(tmp_path))
+
+
+def test_open_spill_bare_string_is_deprecated(tmp_path):
+    data = _data()
+    eng = DistributedEngine(mesh=None, shards=2).build(
+        data, index=IndexSpec("dstree", leaf_cap=16),
+        store=StoreSpec(spill_dir=str(tmp_path), codec="f32",
+                        keep_resident=False))
+    eng.close()
+    with pytest.warns(APIDeprecationWarning, match="StoreSpec"):
+        old = DistributedEngine.open_spill(str(tmp_path))
+    new = DistributedEngine.open_spill(
+        StoreSpec(spill_dir=str(tmp_path), keep_resident=False))
+    q = jnp.asarray(data[:4])
+    ro, rn = old.query(q, 5, G.exact()), new.query(q, 5, G.exact())
+    assert np.array_equal(np.asarray(ro.ids), np.asarray(rn.ids))
+    assert np.array_equal(np.asarray(ro.dists), np.asarray(rn.dists))
+    old.close()
+    new.close()
+
+
+def test_open_spill_spec_requires_spill_dir():
+    with pytest.raises(ValueError, match="spill_dir"):
+        DistributedEngine.open_spill(StoreSpec())
+
+
+# ------------------------------------------------ guarantee spelling
+def test_loose_guarantee_kwargs_warn_and_match_object_spelling():
+    data = _data()
+    idx = dstree.build(data, leaf_cap=16)
+    q = jnp.asarray(data[:4])
+    with pytest.warns(APIDeprecationWarning, match="Guarantee"):
+        old = S.search(idx, q, 5, delta=0.99, epsilon=1.0)
+    new = S.search(idx, q, 5, G.delta_epsilon(0.99, 1.0))
+    assert np.array_equal(np.asarray(old.ids), np.asarray(new.ids))
+    assert np.array_equal(np.asarray(old.dists),
+                          np.asarray(new.dists))
+
+
+def test_guarantee_object_plus_loose_kwargs_is_a_type_error():
+    data = _data()
+    idx = dstree.build(data, leaf_cap=16)
+    q = jnp.asarray(data[:4])
+    with pytest.raises(TypeError, match="Guarantee"):
+        S.search(idx, q, 5, G.exact(), epsilon=1.0)
+
+
+def test_no_guarantee_defaults_to_exact():
+    data = _data()
+    idx = dstree.build(data, leaf_cap=16)
+    q = jnp.asarray(data[:4])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", APIDeprecationWarning)
+        dflt = S.search(idx, q, 5)
+    ex = S.search(idx, q, 5, G.exact())
+    assert np.array_equal(np.asarray(dflt.ids), np.asarray(ex.ids))
+    assert np.array_equal(np.asarray(dflt.dists),
+                          np.asarray(ex.dists))

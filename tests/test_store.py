@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import IndexSpec, StoreSpec
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.engine import DistributedEngine
 from repro.core.index import FrozenIndex
@@ -96,10 +98,9 @@ def test_ooc_matches_in_memory_small_cache(built, queries_mod, tmp_path,
     """Cache (6 leaves) far smaller than the working set (16 leaves)."""
     store = FrozenIndex.load(built.save(str(tmp_path / "idx")),
                              resident="summaries")
-    ref = S.search(built, queries_mod, 5, delta=delta, epsilon=epsilon,
-                   nprobe=nprobe)
-    ooc = S.search_ooc(store, queries_mod, 5, delta=delta,
-                       epsilon=epsilon, nprobe=nprobe, cache_leaves=6)
+    g = G.Guarantee(delta=delta, epsilon=epsilon, nprobe=nprobe)
+    ref = S.search(built, queries_mod, 5, g)
+    ooc = S.search_ooc(store, queries_mod, 5, g, cache_leaves=6)
     assert_same(ref, ooc.result)
     assert ooc.stats["bytes_read"] > 0
     assert ooc.stats["misses"] > 0
@@ -111,8 +112,8 @@ def test_ooc_matches_for_vafile_visit_batch(walk_data_mod, queries_mod,
     va = vafile.build(walk_data_mod)
     store = FrozenIndex.load(va.save(str(tmp_path / "va")),
                              resident="summaries")
-    ref = S.search(va, queries_mod, 5, epsilon=1.0, visit_batch=64)
-    ooc = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+    ref = S.search(va, queries_mod, 5, G.epsilon(1.0), visit_batch=64)
+    ooc = S.search_ooc(store, queries_mod, 5, G.epsilon(1.0),
                        visit_batch=64, cache_leaves=400)
     assert_same(ref, ooc.result)
 
@@ -198,11 +199,10 @@ def test_ooc_codec_parity_bit_exact(built, queries_mod, tmp_path,
     if codec == "bf16":
         assert full.data.dtype == jnp.bfloat16
     store = FrozenIndex.load(d, resident="summaries")
-    ref = S.search(full, queries_mod, 5, delta=delta, epsilon=epsilon,
-                   share_gathers=share)
-    ooc = S.search_ooc(store, queries_mod, 5, delta=delta,
-                       epsilon=epsilon, share_gathers=share,
-                       cache_leaves=6)
+    g = G.Guarantee(delta=delta, epsilon=epsilon)
+    ref = S.search(full, queries_mod, 5, g, share_gathers=share)
+    ooc = S.search_ooc(store, queries_mod, 5, g,
+                       share_gathers=share, cache_leaves=6)
     assert_same(ref, ooc.result)
     assert ooc.stats["codec"] == codec
     assert ooc.stats["share_gathers"] is share
@@ -220,9 +220,9 @@ def test_ooc_pq_guarantee_with_exact_rerank(
     store = FrozenIndex.load(pq_store_dir, resident="summaries")
     assert store.codec == "pq" and store.codebook is not None
     bf = S.brute_force(queries_mod, jnp.asarray(walk_data_mod), 5)
-    ooc = S.search_ooc(store, queries_mod, 5, delta=delta,
-                       epsilon=epsilon, share_gathers=share,
-                       cache_leaves=6)
+    ooc = S.search_ooc(store, queries_mod, 5,
+                       G.Guarantee(delta=delta, epsilon=epsilon),
+                       share_gathers=share, cache_leaves=6)
     ok = (np.asarray(ooc.result.dists)
           <= (1 + epsilon) * np.asarray(bf.dists) * (1 + 1e-4) + 1e-4)
     if delta == 1.0:
@@ -242,9 +242,9 @@ def test_pq_exact_guarantee_request_warns(queries_mod, pq_store_dir):
     import warnings as W
     with W.catch_warnings():
         W.simplefilter("error", UserWarning)
-        S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+        S.search_ooc(store, queries_mod, 5, G.epsilon(1.0),
                      cache_leaves=6)
-        S.search_ooc(store, queries_mod, 5, nprobe=4, cache_leaves=6)
+        S.search_ooc(store, queries_mod, 5, G.ng(4), cache_leaves=6)
 
 
 def test_dataset_nbytes_is_codec_invariant(built, tmp_path,
@@ -282,7 +282,7 @@ def test_codec_payload_sizes_and_bytes_read(built, queries_mod,
             built.save(str(tmp_path / codec), codec=codec)
         payload[codec] = os.path.getsize(os.path.join(d, "data.bin"))
         store = FrozenIndex.load(d, resident="summaries")
-        ooc = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+        ooc = S.search_ooc(store, queries_mod, 5, G.epsilon(1.0),
                            cache_leaves=6)
         reads[codec] = ooc.stats["bytes_read"]
     assert payload["bf16"] * 2 == payload["f32"]
@@ -296,9 +296,9 @@ def test_share_gathers_never_reads_more(built, queries_mod, tmp_path):
     only stop earlier — bytes_read must not grow."""
     d = built.save(str(tmp_path / "coop"))
     store = FrozenIndex.load(d, resident="summaries")
-    solo = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+    solo = S.search_ooc(store, queries_mod, 5, G.epsilon(1.0),
                         cache_leaves=6, prefetch=False)
-    coop = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+    coop = S.search_ooc(store, queries_mod, 5, G.epsilon(1.0),
                         cache_leaves=6, prefetch=False,
                         share_gathers=True)
     assert coop.stats["bytes_read"] <= solo.stats["bytes_read"]
@@ -313,9 +313,9 @@ def test_share_gathers_returns_distinct_ids(built, queries_mod,
     k distinct neighbors."""
     d = built.save(str(tmp_path / "dedup"))
     store = FrozenIndex.load(d, resident="summaries")
-    ooc = S.search_ooc(store, queries_mod, 5, epsilon=1.0,
+    ooc = S.search_ooc(store, queries_mod, 5, G.epsilon(1.0),
                        cache_leaves=6, share_gathers=True)
-    ref = S.search(built, queries_mod, 5, epsilon=1.0,
+    ref = S.search(built, queries_mod, 5, G.epsilon(1.0),
                    share_gathers=True)
     for ids in (np.asarray(ooc.result.ids), np.asarray(ref.ids)):
         for row in ids:
@@ -367,7 +367,7 @@ def test_pq_rerank_distance_is_exact_at_zero(walk_data_mod, tmp_path):
     d = ix.save(str(tmp_path / "pq0"), codec="pq")
     store = FrozenIndex.load(d, resident="summaries")
     q = jnp.asarray(walk_data_mod[:4])         # exact stored rows
-    ooc = S.search_ooc(store, q, 5, epsilon=1.0)
+    ooc = S.search_ooc(store, q, 5, G.epsilon(1.0))
     ids = np.asarray(ooc.result.ids)
     dists = np.asarray(ooc.result.dists)
     for lane in range(4):
@@ -379,8 +379,8 @@ def test_pq_rerank_distance_is_exact_at_zero(walk_data_mod, tmp_path):
 def test_engine_spill_codec_threads_through(walk_data_mod, tmp_path):
     mesh = jax.make_mesh((1,), ("data",))
     eng = DistributedEngine(mesh, method="dstree")
-    eng.build(walk_data_mod, leaf_cap=32, spill_dir=str(tmp_path),
-              codec="bf16")
+    eng.build(walk_data_mod, index=IndexSpec("dstree", leaf_cap=32),
+              store=StoreSpec(spill_dir=str(tmp_path), codec="bf16"))
     store = FrozenIndex.load(eng.shard_dirs[0], resident="summaries")
     assert store.codec == "bf16"
     assert store.mmap.dtype == jnp.bfloat16
@@ -528,7 +528,8 @@ def test_read_leaf_out_reuse_zeroes_tail(built, tmp_path):
 def test_engine_spill_round_trip(walk_data_mod, queries_mod, tmp_path):
     mesh = jax.make_mesh((1,), ("data",))
     eng = DistributedEngine(mesh, method="dstree")
-    eng.build(walk_data_mod, leaf_cap=32, spill_dir=str(tmp_path))
+    eng.build(walk_data_mod, index=IndexSpec("dstree", leaf_cap=32),
+              store=StoreSpec(spill_dir=str(tmp_path)))
     assert eng.shard_dirs is not None and len(eng.shard_dirs) == 1
     store = FrozenIndex.load(eng.shard_dirs[0], resident="summaries")
     assert store.meta["n_total"] == walk_data_mod.shape[0]

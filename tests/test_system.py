@@ -6,6 +6,7 @@ findings at reduced scale."""
 import jax.numpy as jnp
 import pytest
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.histogram import build_histogram, f_of, r_delta
 from repro.core.indexes import dstree, isax
@@ -41,7 +42,7 @@ def test_paper_c2_epsilon_buys_throughput_keeps_accuracy(world):
     idx = dstree.build(data, leaf_cap=64)
     work, maps, mres = [], [], []
     for eps in (0.0, 0.5, 1.0, 2.0, 5.0):
-        r = S.search(idx, jnp.asarray(q), 10, epsilon=eps)
+        r = S.search(idx, jnp.asarray(q), 10, G.epsilon(eps))
         m = workload_metrics(r.ids, r.dists, bf.ids, bf.dists)
         work.append(int(r.rows_scanned.sum()))
         maps.append(m["map"])
@@ -60,7 +61,7 @@ def test_paper_c3_delta_stop_is_weak(world):
     data, q, bf = world
     idx = dstree.build(data, leaf_cap=64)
     ex = S.search(idx, jnp.asarray(q), 10)
-    de = S.search(idx, jnp.asarray(q), 10, delta=0.99)
+    de = S.search(idx, jnp.asarray(q), 10, G.Guarantee(delta=0.99))
     # delta=0.99 may prune a little but stays within 2x of exact work,
     # and accuracy stays high
     m = workload_metrics(de.ids, de.dists, bf.ids, bf.dists)
@@ -91,7 +92,7 @@ def test_ng_first_leaf_is_decent(world):
     is already a usable answer (it's why ng-approximate works)."""
     data, q, bf = world
     idx = dstree.build(data, leaf_cap=64)
-    r = S.search(idx, jnp.asarray(q), 10, nprobe=1)
+    r = S.search(idx, jnp.asarray(q), 10, G.ng(1))
     m = workload_metrics(r.ids, r.dists, bf.ids, bf.dists)
     assert m["avg_recall"] > 0.3
     assert m["mre"] < 0.5

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import guarantees as G
 from repro.core import search as S
 from repro.core.indexes import dstree, vafile
 from repro.kernels import ops, ref
@@ -406,8 +407,8 @@ def test_ooc_frontier_width_parity(walk_data, walk_queries, tmp_path):
     store_dir = idx.save(str(tmp_path / "idx"))
     from repro.core.index import FrozenIndex
     store = FrozenIndex.load(store_dir, resident="summaries")
-    ref_res = S.search(idx, q, 5, epsilon=0.5)
-    ooc = S.search_ooc(store, q, 5, epsilon=0.5, cache_leaves=6,
+    ref_res = S.search(idx, q, 5, G.epsilon(0.5))
+    ooc = S.search_ooc(store, q, 5, G.epsilon(0.5), cache_leaves=6,
                        frontier=3)
     np.testing.assert_array_equal(np.asarray(ref_res.ids),
                                   np.asarray(ooc.result.ids))
